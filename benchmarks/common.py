@@ -1,0 +1,102 @@
+"""Shared benchmark machinery.
+
+The paper scores CIFAR10 FID-50k; on this container every table is
+reproduced on analytically tractable data instead (DESIGN.md §1): a
+well-separated 2-D Gaussian mixture (the paper's own Fig. 4 toy) pushed
+through each SDE with the EXACT score, so sampler quality is isolated from
+score-model quality.  Metric: sliced Wasserstein-2 against fresh
+ground-truth draws (lower is better, same ordering semantics as FID).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.sde import VPSDE, CLD, BDM, GaussianMixture, ExactScore
+from repro.core import build_sampler_coeffs, time_grid
+
+
+def paper_mixture(d: int = 2, modes: int = 8, radius: float = 4.0,
+                  std: float = 0.05) -> GaussianMixture:
+    """Ring of well-separated modes (the paper's challenging 2-D example)."""
+    ang = np.linspace(0, 2 * np.pi, modes, endpoint=False)
+    means = np.zeros((modes, d))
+    means[:, 0] = radius * np.cos(ang)
+    means[:, 1] = radius * np.sin(ang)
+    return GaussianMixture(means, np.full(modes, std), np.ones(modes))
+
+
+def image_mixture(shape=(8, 8, 1), modes: int = 4, std: float = 0.05) -> GaussianMixture:
+    """Low-res 'image' mixture for the BDM benchmarks (DCT needs 2-D data)."""
+    rng = np.random.default_rng(0)
+    means = rng.uniform(-1, 1, size=(modes,) + shape)
+    return GaussianMixture(means, np.full(modes, std), np.ones(modes))
+
+
+def sliced_w2(x: np.ndarray, y: np.ndarray, n_proj: int = 128,
+              seed: int = 0) -> float:
+    """Sliced 2-Wasserstein distance between point clouds (flattened)."""
+    x = np.asarray(x, np.float64).reshape(len(x), -1)
+    y = np.asarray(y, np.float64).reshape(len(y), -1)
+    d = x.shape[1]
+    rng = np.random.default_rng(seed)
+    proj = rng.standard_normal((d, n_proj))
+    proj /= np.linalg.norm(proj, axis=0, keepdims=True)
+    xp = np.sort(x @ proj, axis=0)
+    yp = np.sort(y @ proj, axis=0)
+    n = min(len(xp), len(yp))
+    xq = xp[np.linspace(0, len(xp) - 1, n).astype(int)]
+    yq = yp[np.linspace(0, len(yp) - 1, n).astype(int)]
+    return float(np.sqrt(np.mean((xq - yq) ** 2)))
+
+
+def mode_recovery(x: np.ndarray, mix: GaussianMixture, tol_sigmas: float = 5.0
+                  ) -> float:
+    """Fraction of samples within tol*std of their nearest mode."""
+    x = np.asarray(x).reshape(len(x), -1)
+    mu = mix.means.reshape(len(mix.means), -1)
+    d = np.linalg.norm(x[:, None] - mu[None], axis=-1)
+    near = d.min(1)
+    std = mix.stds.mean() * np.sqrt(x.shape[1])
+    return float((near < tol_sigmas * std).mean())
+
+
+class Bench:
+    """One (sde, mixture) benchmark context with exact-score sampling."""
+
+    def __init__(self, sde, mix: GaussianMixture, n_samples: int = 2048,
+                 seed: int = 0):
+        self.sde = sde
+        self.mix = mix
+        self.oracle = ExactScore(sde, mix)
+        self.n = n_samples
+        self.key = jax.random.PRNGKey(seed)
+        self.truth = np.asarray(mix.sample(jax.random.PRNGKey(seed + 1), n_samples))
+
+    def coeffs(self, nfe: int, q: int = 2, lam: float = 0.0, kt: str = "R",
+               grid: str = "quadratic"):
+        ts = time_grid(self.sde, nfe, grid)
+        return ts, build_sampler_coeffs(self.sde, ts, q=q, lam=lam, kt=kt)
+
+    def eps_fn(self, ts, kt: str = "R"):
+        from repro.core.coeffs import _K_fn
+        return self.oracle.eps_fn_for_grid(ts, _K_fn(self.sde, kt))[0]
+
+    def prior(self):
+        return self.sde.prior_sample(self.key, self.n, self.mix.data_shape)
+
+    def score(self, u0) -> Dict[str, float]:
+        x = np.asarray(self.sde.project_data(u0))
+        return {"sw2": sliced_w2(x, self.truth),
+                "mode_rec": mode_recovery(x, self.mix)}
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.time() - t0) * 1e6

@@ -1,0 +1,113 @@
+"""Roofline report: aggregates the dry-run JSONL into the EXPERIMENTS.md
+tables (per arch x shape x mesh: three terms, bottleneck, MODEL/HLO ratio,
+roofline fraction)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+from repro.launch import hlo_analysis as ha
+
+
+def load(path: str) -> List[dict]:
+    out = []
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                try:
+                    out.append(json.loads(line))
+                except json.JSONDecodeError:
+                    pass
+    # keep the LAST record per (arch, shape, mesh, tag) — reruns supersede
+    dedup: Dict[tuple, dict] = {}
+    for r in out:
+        dedup[(r.get("arch"), r.get("shape"), r.get("mesh"), r.get("tag", ""))] = r
+    return list(dedup.values())
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(records: List[dict], mesh: str | None = None) -> str:
+    rows = []
+    hdr = ("| arch | shape | mesh | T_comp | T_mem | T_coll | bottleneck | "
+           "MODEL/HLO | roofline frac | HBM/dev |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for r in sorted(records, key=lambda r: (r.get("arch", ""), r.get("shape", ""))):
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skip | skip | skip | — ({r['reason'][:40]}…) | - | - | - |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} | "
+                        f"ERR | ERR | ERR | {str(r.get('error'))[:40]} | - | - | - |")
+            continue
+        ro = r["roofline"]
+        mem = r.get("memory") or {}
+        hbm = mem.get("total_bytes", mem.get("temp_bytes", 0))
+        ratio = r.get("useful_flop_ratio")
+        frac = r.get("roofline_fraction")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(ro['t_compute_s'])} | {fmt_s(ro['t_memory_s'])} | "
+            f"{fmt_s(ro['t_collective_s'])} | {ro['bottleneck']} | "
+            f"{ratio:.2f} | {frac:.3f} | {hbm/2**30:.1f}GiB |"
+            if ratio is not None and frac is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(ro['t_compute_s'])} | {fmt_s(ro['t_memory_s'])} | "
+            f"{fmt_s(ro['t_collective_s'])} | {ro['bottleneck']} | - | - | "
+            f"{hbm/2**30:.1f}GiB |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(records: List[dict]) -> dict:
+    """worst roofline fraction / most collective-bound / paper-representative."""
+    ok = [r for r in records if r.get("status") == "ok"
+          and r.get("roofline_fraction") is not None]
+    train = [r for r in ok if r["shape"] == "train_4k"]
+    out = {}
+    if train:
+        out["worst_fraction"] = min(train, key=lambda r: r["roofline_fraction"])
+    coll = [r for r in ok
+            if r["roofline"]["bottleneck"] == "collective"]
+    if coll:
+        out["most_collective"] = max(
+            coll, key=lambda r: r["roofline"]["t_collective_s"])
+    diff = [r for r in records if str(r.get("arch", "")).startswith("cifar10")]
+    if diff:
+        out["paper_representative"] = diff[0]
+    return out
+
+
+def main(argv=None) -> int:
+    paths = argv or sys.argv[1:] or ["results/dryrun_single.jsonl",
+                                     "results/dryrun_multi.jsonl"]
+    recs = []
+    for p in paths:
+        recs += load(p)
+    print(table(recs))
+    picks = pick_hillclimb(recs)
+    print()
+    for k, r in picks.items():
+        print(f"hillclimb[{k}]: {r['arch']} x {r['shape']} x {r['mesh']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

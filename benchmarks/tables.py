@@ -1,0 +1,183 @@
+"""One benchmark per paper table (Tab. 1, 2, 3, 5/6, 8) + Fig. 1/3 analog.
+
+Each function yields CSV rows:  table,config,nfe,us_per_call,sw2,mode_rec
+Sampler quality is scored by sliced-W2 / mode recovery against ground truth
+(see common.py for why this substitutes FID-50k on this container).
+"""
+from __future__ import annotations
+
+from typing import Iterator, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.sde import VPSDE, CLD, BDM
+from repro.core import (sample_gddim, sample_gddim_stochastic, sample_em,
+                        sample_heun, sample_ancestral_bdm, sample_rk45_np,
+                        time_grid)
+from .common import Bench, paper_mixture, image_mixture, timed
+
+
+def _row(table, config, nfe, us, metrics) -> str:
+    return (f"{table},{config},{nfe},{us:.0f},"
+            f"{metrics['sw2']:.4f},{metrics['mode_rec']:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 1 / 5: L_t vs R_t on CLD across NFE and multistep order q
+# ---------------------------------------------------------------------------
+def table1_Lt_vs_Rt(nfes=(10, 20, 30, 50), qs=(1, 2, 3)) -> Iterator[str]:
+    bench = Bench(CLD(), paper_mixture())
+    uT = bench.prior()
+    for q in qs:
+        for kt in ("L", "R"):
+            for nfe in nfes:
+                ts, co = bench.coeffs(nfe, q=q, kt=kt)
+                eps_fn = bench.eps_fn(ts, kt=kt)
+                fn = jax.jit(lambda u: sample_gddim(bench.sde, co, eps_fn, u, q=q))
+                u0, us = timed(fn, uT)
+                yield _row("tab1_tab5", f"Kt={kt}_q={q}", nfe, us,
+                           bench.score(u0))
+
+
+# ---------------------------------------------------------------------------
+# Table 2: lambda sweep, gDDIM vs EM (CLD, NFE=50)
+# ---------------------------------------------------------------------------
+def table2_lambda(nfe=50, lams=(0.0, 0.1, 0.3, 0.5, 1.0)) -> Iterator[str]:
+    bench = Bench(CLD(), paper_mixture())
+    uT = bench.prior()
+    key = jax.random.PRNGKey(7)
+    for lam in lams:
+        ts, co = bench.coeffs(nfe, q=1, lam=lam)
+        eps_fn = bench.eps_fn(ts)
+        if lam == 0.0:
+            fn = jax.jit(lambda u: sample_gddim(bench.sde, co, eps_fn, u, q=1))
+            u0, us = timed(fn, uT)
+        else:
+            fn = jax.jit(lambda u, k: sample_gddim_stochastic(
+                bench.sde, co, eps_fn, u, k))
+            u0, us = timed(fn, uT, key)
+        yield _row("tab2", f"gDDIM_lam={lam}", nfe, us, bench.score(u0))
+        fn = jax.jit(lambda u, k: sample_em(bench.sde, co, eps_fn, u, k,
+                                            lam=max(lam, 1e-6)))
+        u0, us = timed(fn, uT, key)
+        yield _row("tab2", f"EM_lam={lam}", nfe, us, bench.score(u0))
+
+
+# ---------------------------------------------------------------------------
+# Table 3: acceleration across DMs (DDPM / BDM / CLD) x samplers x NFE
+# ---------------------------------------------------------------------------
+def table3_accelerate(nfes=(10, 20, 50, 100)) -> Iterator[str]:
+    key = jax.random.PRNGKey(11)
+    cases = [("DDPM", VPSDE(), paper_mixture()),
+             ("BDM", BDM(data_shape=(8, 8, 1)), image_mixture((8, 8, 1))),
+             ("CLD", CLD(), paper_mixture())]
+    for dm_name, sde, mix in cases:
+        bench = Bench(sde, mix, n_samples=1024)
+        uT = bench.prior()
+        for nfe in nfes:
+            ts, co = bench.coeffs(nfe, q=2)
+            eps_fn = bench.eps_fn(ts)
+            # gDDIM (multistep q=2)
+            fn = jax.jit(lambda u: sample_gddim(bench.sde, co, eps_fn, u, q=2))
+            u0, us = timed(fn, uT)
+            yield _row("tab3", f"{dm_name}_gDDIM", nfe, us, bench.score(u0))
+            # EM baseline (lam=1)
+            ts1, co1 = bench.coeffs(nfe, q=1, lam=1.0)
+            eps1 = bench.eps_fn(ts1)
+            fn = jax.jit(lambda u, k: sample_em(bench.sde, co1, eps1, u, k, lam=1.0))
+            u0, us = timed(fn, uT, key)
+            yield _row("tab3", f"{dm_name}_EM", nfe, us, bench.score(u0))
+            # 2nd-order Heun (Karras-style, NFE ~ 2N-1 -> use N=nfe//2)
+            tsh, coh = bench.coeffs(max(nfe // 2, 2), q=1)
+            epsh = bench.eps_fn(tsh)
+            fn = jax.jit(lambda u: sample_heun(bench.sde, coh, epsh, u))
+            u0, us = timed(fn, uT)
+            yield _row("tab3", f"{dm_name}_Heun2", nfe, us, bench.score(u0))
+            # BDM ancestral (the original sampler the paper accelerates >20x)
+            if dm_name == "BDM":
+                fn = jax.jit(lambda u, k: sample_ancestral_bdm(
+                    bench.sde, eps_fn, u, np.asarray(ts), k))
+                u0, us = timed(fn, uT, key)
+                yield _row("tab3", f"{dm_name}_ancestral", nfe, us, bench.score(u0))
+        # RK45 probability flow (host, adaptive — NFE is whatever it takes)
+        u0_np, nfe_rk = sample_rk45_np(bench.sde, bench.oracle.score_np,
+                                       np.asarray(uT[:256]), rtol=1e-3, atol=1e-3)
+        yield _row("tab3", f"{dm_name}_RK45", nfe_rk, 0,
+                   bench.score(jnp.asarray(u0_np)))
+
+
+# ---------------------------------------------------------------------------
+# Table 8: predictor-only vs predictor-corrector
+# ---------------------------------------------------------------------------
+def table8_pc(nfes=(10, 20, 30), qs=(1, 2)) -> Iterator[str]:
+    bench = Bench(CLD(), paper_mixture())
+    uT = bench.prior()
+    for q in qs:
+        for nfe in nfes:
+            ts, co = bench.coeffs(nfe, q=q)
+            eps_fn = bench.eps_fn(ts)
+            fn = jax.jit(lambda u: sample_gddim(bench.sde, co, eps_fn, u, q=q))
+            u0, us = timed(fn, uT)
+            yield _row("tab8", f"P_q={q}", nfe, us, bench.score(u0))
+            fn = jax.jit(lambda u: sample_gddim(bench.sde, co, eps_fn, u, q=q,
+                                                corrector=True))
+            u0, us = timed(fn, uT)
+            yield _row("tab8", f"PC_q={q}", 2 * nfe - 1, us, bench.score(u0))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1/3 analog: eps_theta smoothness along prob-flow solutions (R vs L)
+# ---------------------------------------------------------------------------
+def fig1_eps_constancy() -> Iterator[str]:
+    """Total variation of eps(u(t), t) along exact prob-flow trajectories;
+    the paper's core claim is TV(R_t) << TV(L_t) on CLD (Prop 4)."""
+    bench = Bench(CLD(), paper_mixture(), n_samples=64)
+    nfe = 200
+    for kt in ("L", "R"):
+        ts, co = bench.coeffs(nfe, q=1, kt=kt, grid="uniform")
+        eps_fn = bench.eps_fn(ts, kt=kt)
+        u = bench.prior()
+        prev = None
+        tv = 0.0
+        N = co.psi.shape[0]
+        for k in range(N):
+            i = N - k
+            e = eps_fn(u, jnp.int32(i))
+            if prev is not None:
+                tv += float(jnp.abs(e - prev).mean())
+            prev = e
+            u = bench.sde.apply(co.psi[k], u) + bench.sde.apply(co.pC[k, 0], e)
+        yield f"fig1,eps_TV_Kt={kt},{nfe},0,{tv:.4f},0"
+
+
+# ---------------------------------------------------------------------------
+# Kernel microbenchmarks (CPU wall time is NOT the TPU story; these check
+# dispatch overhead and give the interpret-mode cost of each kernel)
+# ---------------------------------------------------------------------------
+def kernel_micro() -> Iterator[str]:
+    from repro.kernels.ei_update.ref import ei_update_ref
+    from repro.kernels.attention.ops import blocked_attention
+    from repro.kernels.attention.ref import attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    u = jax.random.normal(ks[0], (8, 2, 4096))
+    eh = jax.random.normal(ks[1], (2, 8, 2, 4096))
+    psi = jax.random.normal(ks[2], (2, 2))
+    C = jax.random.normal(ks[3], (2, 2, 2))
+    fn = jax.jit(lambda *a: ei_update_ref(*a))
+    _, us = timed(fn, u, eh, psi, C)
+    _, us = timed(fn, u, eh, psi, C)
+    yield f"kernels,ei_update_ref_jit,0,{us:.0f},0,0"
+    q = jax.random.normal(ks[0], (1, 512, 8, 64))
+    k = jax.random.normal(ks[1], (1, 512, 2, 64))
+    v = jax.random.normal(ks[2], (1, 512, 2, 64))
+    fn = jax.jit(lambda q, k, v: blocked_attention(q, k, v, causal=True,
+                                                   window=None, q_offset=0))
+    _, us = timed(fn, q, k, v)
+    _, us = timed(fn, q, k, v)
+    yield f"kernels,blocked_attention_512,0,{us:.0f},0,0"
+    fn = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    _, us = timed(fn, q, k, v)
+    _, us = timed(fn, q, k, v)
+    yield f"kernels,ref_attention_512,0,{us:.0f},0,0"

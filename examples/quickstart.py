@@ -1,0 +1,99 @@
+"""The paper in one script (CPU, ~2 min).
+
+Trains a small MLP score network on the paper's 2-D mixture under CLD with
+the gDDIM parameterization K_t = R_t (Eq. 77 HSM loss, both channels
+supervised — Eq. 80), then samples with:
+
+  * deterministic gDDIM (exponential multistep, q = 2)    [the paper]
+  * stochastic gDDIM (lambda = 0.5)                       [Eq. 22]
+  * Euler-Maruyama baseline                               [what it beats]
+
+and reports sliced-W2 to ground truth at NFE in {10, 50}.
+
+    PYTHONPATH=src:. python examples/quickstart.py
+"""
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from repro.sde import CLD, GaussianMixture
+from repro.core import build_sampler_coeffs, time_grid, sample_gddim, \
+    sample_gddim_stochastic, sample_em
+from repro.models.score_net import MLPScoreCfg, mlp_score_init, mlp_score_apply
+from repro.train import losses
+from repro.optim.adamw import AdamWCfg, adamw_init, adamw_update
+from benchmarks.common import sliced_w2, mode_recovery
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    sde = CLD()
+    ang = np.linspace(0, 2 * np.pi, 4, endpoint=False)
+    mix = GaussianMixture(np.stack([2.5 * np.cos(ang), 2.5 * np.sin(ang)], -1),
+                          np.full(4, 0.08), np.ones(4))
+
+    # ---- train (DSM/HSM with K_t = R_t; both eps channels supervised) -----
+    cfg = MLPScoreCfg(state_shape=(2, 2), hidden=192, n_blocks=3)
+    params = mlp_score_init(key, cfg)
+    opt_cfg = AdamWCfg(lr=2e-3, warmup_steps=50, total_steps=2500,
+                       weight_decay=0.0)
+    opt = adamw_init(params, opt_cfg)
+    tables = losses.build_perturb_tables(sde, kt="R")
+
+    @jax.jit
+    def step(params, opt, x0, k):
+        def loss_fn(p):
+            return losses.dsm_loss(sde, tables,
+                                   lambda u, t: mlp_score_apply(p, cfg, u, t),
+                                   x0, k)
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(g, opt, params, opt_cfg)
+        return params, opt, l
+
+    print("training MLP score net on CLD (K_t = R_t, HSM) ...")
+    for i in range(2500):
+        k1, k2, key = jax.random.split(key, 3)
+        x0 = mix.sample(k1, 256)
+        params, opt, l = step(params, opt, x0, k2)
+        if i % 500 == 0:
+            print(f"  step {i:4d}  dsm-loss {float(l):.4f}")
+
+    # ---- sample --------------------------------------------------------------
+    truth = np.asarray(mix.sample(jax.random.PRNGKey(42), 4000))
+    print(f"\n{'sampler':28s} {'NFE':>4s} {'sw2':>8s} {'modes':>6s}")
+    for nfe in (10, 50):
+        ts = time_grid(sde, nfe)
+        eps_fn = losses.make_eps_fn_from_model(
+            sde, lambda u, t: mlp_score_apply(params, cfg, u, t), ts)
+        uT = sde.prior_sample(jax.random.PRNGKey(7), 4000, (2,))
+
+        for q in (1, 2):
+            co = build_sampler_coeffs(sde, ts, q=q)
+            x = sde.project_data(sample_gddim(sde, co, eps_fn, uT, q=q))
+            print(f"{'gDDIM det (q=%d)' % q:28s} {nfe:4d} "
+                  f"{sliced_w2(np.asarray(x), truth):8.4f} "
+                  f"{mode_recovery(np.asarray(x), mix):6.2f}")
+
+        co_s = build_sampler_coeffs(sde, ts, q=1, lam=0.5)
+        x = sde.project_data(sample_gddim_stochastic(
+            sde, co_s, eps_fn, uT, jax.random.PRNGKey(9)))
+        print(f"{'gDDIM stoch (lam=0.5)':28s} {nfe:4d} "
+              f"{sliced_w2(np.asarray(x), truth):8.4f} "
+              f"{mode_recovery(np.asarray(x), mix):6.2f}")
+
+        co_em = build_sampler_coeffs(sde, ts, q=1, lam=1.0)
+        x = sde.project_data(sample_em(sde, co_em, eps_fn, uT,
+                                       jax.random.PRNGKey(9), lam=1.0))
+        print(f"{'Euler-Maruyama (lam=1)':28s} {nfe:4d} "
+              f"{sliced_w2(np.asarray(x), truth):8.4f} "
+              f"{mode_recovery(np.asarray(x), mix):6.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

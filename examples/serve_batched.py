@@ -1,0 +1,22 @@
+"""Batched serving walkthrough: continuous batching over the rwkv6 arch
+(O(1)/token state) and the gemma3 arch (sliding-window KV cache).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+
+def main():
+    for arch in ("rwkv6-7b", "gemma3-1b"):
+        print(f"== serving {arch} (reduced config)")
+        serve.main(["--arch", arch, "--reduced", "--batch", "4",
+                    "--requests", "6", "--prompt-len", "8", "--max-new", "8",
+                    "--max-len", "32"])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

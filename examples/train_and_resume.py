@@ -1,0 +1,26 @@
+"""End-to-end fault-tolerant LM training driver walkthrough:
+train gemma3-1b (reduced) -> checkpoint -> kill -> resume exactly.
+
+    PYTHONPATH=src python examples/train_and_resume.py
+"""
+import sys, tempfile
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_mod
+
+
+def main():
+    with tempfile.TemporaryDirectory() as ck:
+        print("== phase 1: 30 steps with async checkpoints every 10")
+        train_mod.main(["--arch", "gemma3-1b", "--reduced", "--steps", "30",
+                        "--batch", "8", "--seq-len", "64", "--lr", "1e-3",
+                        "--ckpt-dir", ck, "--ckpt-every", "10"])
+        print("== phase 2: 'restart after preemption' -> resumes at 30, runs to 60")
+        train_mod.main(["--arch", "gemma3-1b", "--reduced", "--steps", "60",
+                        "--batch", "8", "--seq-len", "64", "--lr", "1e-3",
+                        "--ckpt-dir", ck, "--resume"])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,29 @@
+"""internvl2-1b [vlm]: 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655
+— InternViT + InternLM2 backbone; the ViT frontend is a STUB: train/prefill
+shapes feed precomputed patch embeddings (B, S, d) [arXiv:2404.16821; hf].
+
+vocab 151655 is not divisible by 16 — embedding TP falls back to replication
+(FSDP only) per the divisibility rule; 14 heads likewise (FFN TP only, 4864
+divides 16).
+"""
+import jax.numpy as jnp
+
+from ..models.registry import ArchSpec
+from ..models.transformer import TransformerCfg
+
+
+def make(reduced: bool = False, dtype=jnp.bfloat16) -> ArchSpec:
+    if reduced:
+        cfg = TransformerCfg(name="internvl2-1b-smoke", n_layers=2, d_model=64,
+                             n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+                             vocab=256, input_mode="embeddings",
+                             dtype=jnp.float32, remat=False)
+    else:
+        cfg = TransformerCfg(name="internvl2-1b", n_layers=24, d_model=896,
+                             n_heads=14, n_kv_heads=2, d_head=64, d_ff=4864,
+                             vocab=151655, input_mode="embeddings", dtype=dtype)
+    return ArchSpec(name="internvl2-1b", family="transformer", cfg=cfg,
+                    input_mode="embeddings", subquadratic=False,
+                    gddim_applicable=False,
+                    notes="patch-embedding frontend stubbed; decode shapes "
+                          "drive the LM decoder on tokens")

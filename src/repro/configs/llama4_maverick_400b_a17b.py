@@ -1,0 +1,32 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8) expert
+d_ff=8192 vocab=202048, MoE 128e top-1 + shared expert, alternating
+dense/MoE layers, early fusion [hf:meta-llama/Llama-4-*; unverified]."""
+import jax.numpy as jnp
+
+from ..models.registry import ArchSpec
+from ..models.transformer import TransformerCfg, MoECfg
+
+
+def make(reduced: bool = False, dtype=jnp.bfloat16) -> ArchSpec:
+    if reduced:
+        cfg = TransformerCfg(name="llama4-maverick-smoke", n_layers=4,
+                             d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+                             d_ff=128, vocab=256,
+                             layer_windows=(None, None), layer_moe=(False, True),
+                             moe=MoECfg(n_experts=8, top_k=1, d_ff=32,
+                                        n_shared=1, d_ff_shared=32),
+                             dtype=jnp.float32, remat=False)
+    else:
+        cfg = TransformerCfg(name="llama4-maverick-400b-a17b", n_layers=48,
+                             d_model=5120, n_heads=40, n_kv_heads=8, d_head=128,
+                             d_ff=16384, vocab=202048,
+                             layer_windows=(None, None), layer_moe=(False, True),
+                             moe=MoECfg(n_experts=128, top_k=1, d_ff=8192,
+                                        n_shared=1, d_ff_shared=8192,
+                                        impl="sorted"),
+                             dtype=dtype)
+    return ArchSpec(name="llama4-maverick-400b-a17b", family="transformer",
+                    cfg=cfg, subquadratic=False,
+                    notes="alternating dense/MoE; top-1 routing + shared "
+                          "expert; early fusion = text+image share the "
+                          "backbone (image frontend stubbed per assignment)")

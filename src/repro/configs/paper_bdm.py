@@ -1,0 +1,21 @@
+"""Paper config: Blurring Diffusion Model on CIFAR10-shaped data
+(paper Eq. 11 / App. B.1/C.1; Tab. 3 BDM rows)."""
+import jax.numpy as jnp
+
+from ..sde import BDM
+from ..models.score_net import DiTCfg
+from ..train.diffusion import DiffusionSpec
+
+
+def make(reduced: bool = False, kt: str = "R") -> DiffusionSpec:
+    if reduced:
+        score = DiTCfg(img_size=8, channels=3, state_mult=1, patch=4,
+                       d_model=64, n_layers=2, n_heads=2, remat=False)
+        shape = (8, 8, 3)
+    else:
+        score = DiTCfg(img_size=32, channels=3, state_mult=1, patch=2,
+                       d_model=768, n_layers=24, n_heads=12, dtype=jnp.bfloat16)
+        shape = (32, 32, 3)
+    return DiffusionSpec(name="cifar10-bdm", sde=BDM(data_shape=shape),
+                         data_shape=shape, score_family="dit",
+                         score_cfg=score, kt=kt)

@@ -1,0 +1,22 @@
+"""Paper config: CLD on CIFAR10-shaped data with the gDDIM R_t
+parameterization (paper Sec. 5, Tab. 1/4).  The score net is a DiT (the
+TPU-native analogue of the paper's 108M UNet — DESIGN.md §3); `reduced`
+gives the CPU-trainable smoke size."""
+import jax.numpy as jnp
+
+from ..sde import CLD
+from ..models.score_net import DiTCfg
+from ..train.diffusion import DiffusionSpec
+
+
+def make(reduced: bool = False, kt: str = "R") -> DiffusionSpec:
+    if reduced:
+        score = DiTCfg(img_size=8, channels=3, state_mult=2, patch=4,
+                       d_model=64, n_layers=2, n_heads=2, remat=False)
+        shape = (8, 8, 3)
+    else:
+        score = DiTCfg(img_size=32, channels=3, state_mult=2, patch=2,
+                       d_model=768, n_layers=24, n_heads=12, dtype=jnp.bfloat16)
+        shape = (32, 32, 3)
+    return DiffusionSpec(name="cifar10-cld", sde=CLD(), data_shape=shape,
+                         score_family="dit", score_cfg=score, kt=kt)

@@ -1,0 +1,253 @@
+"""Sharding rules: parameter/activation PartitionSpecs with divisibility fallback.
+
+Mesh contract (launch/mesh.py):
+    single-pod : (data=16, model=16)            axes ("data", "model")
+    multi-pod  : (pod=2, data=16, model=16)     axes ("pod", "data", "model")
+
+Policy (DESIGN.md §4):
+  * batch / activations  -> sharded over BATCH_AXES = ("pod", "data")
+  * params               -> TP over "model" on a rule-chosen dim (Megatron
+                            column/row split, expert axis for MoE, vocab for
+                            embeddings), then FSDP (ZeRO-3) over "data" on the
+                            largest remaining dim.  Cross-pod stays pure DP
+                            (params replicated over "pod"; gradients
+                            all-reduce over it) so per-layer FSDP gathers
+                            never cross the DCI.
+  * every axis assignment is divisibility-checked; a dim that does not
+    divide the axis size falls back to replication on that axis (e.g.
+    gemma3-1b's 4-head wq cannot split 16 ways -> FFN-only TP).
+
+Rules are *name-pattern based* over the params pytree paths, so any model in
+the zoo (transformer / rwkv / mamba / enc-dec / DiT) shards without
+per-model code.  Leading scan-stack axes (layer groups) are never sharded —
+XLA then performs the FSDP all-gather on the per-iteration slice inside the
+scanned layer body, which is what overlaps gather with the previous layer's
+compute on real hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCfg:
+    tp_axis: str = "model"
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    batch_axes: Tuple[str, ...] = ("pod", "data")
+    # sequence-parallel axis for long-context activations / KV caches
+    seq_axis: str = "model"
+    fsdp_params: bool = True
+    tp_params: bool = True
+    # head-aligned attention TP: splitting the flat (H*Dh) projection dim
+    # when H % tp != 0 makes GSPMD partition the QK^T einsum on its
+    # CONTRACTING dim and all-reduce every score tile (measured 119 TB on
+    # deepseek prefill_32k — EXPERIMENTS.md §Perf iter A1).  Attention
+    # projections therefore only TP-shard when the head count divides.
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    # context parallelism: shard the sequence dim of train/prefill
+    # activations over the model axis (§Perf iter A2)
+    seq_shard_activations: bool = False
+
+    def present(self, mesh: Mesh, axes) -> Tuple[str, ...]:
+        if isinstance(axes, str):
+            axes = (axes,)
+        return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# TP dim selection rules: (regex over joined path) -> dim index from the END
+# of the shape (negative), or a callable(shape)->dim.  First match wins.
+# ---------------------------------------------------------------------------
+def _moe_expert_dim(shape):
+    # (..., E, D, F) expert-stacked weights: TP over the expert axis
+    return len(shape) - 3
+
+
+_TP_RULES = [
+    (re.compile(r"moe/(w_gate|w_up|w_down)$"), _moe_expert_dim),
+    (re.compile(r"moe/router$"), lambda s: len(s) - 1),        # (D, E): split experts
+    (re.compile(r"(^|/)embed$"), lambda s: len(s) - 2),        # (V, D): split vocab
+    (re.compile(r"(^|/)unembed$"), lambda s: len(s) - 1),      # (D, V): split vocab
+    # rwkv channel-mix: wk (D, F) col, wv (F, D) row — disambiguated by parent
+    # (must precede the generic wk/wv rule)
+    (re.compile(r"cmix/wk$"), lambda s: len(s) - 1),
+    (re.compile(r"cmix/wv$"), lambda s: len(s) - 2),
+    (re.compile(r"(wq|wk|wv|w_up|w_gate|in_proj|patch_in|wr|wg|ada_w)$"),
+     lambda s: len(s) - 1),                                    # column parallel
+    (re.compile(r"(wo|w_down|out_proj|patch_out)$"), lambda s: len(s) - 2),
+]
+
+_REPLICATE = re.compile(
+    r"(ln|norm|bias|mu$|decay_base|dt_bias|A_log|(^|/)D$|(^|/)u$|ada_b|b_in|b_out|b1$|b2$|pos|conv_b)")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _n_stack_axes(path_s: str) -> int:
+    """Leading scan-stack axes for stacked layer params (never sharded)."""
+    return 1 if re.search(r"(layer_stacks|layers|enc_layers|dec_layers|blocks)/", path_s) else 0
+
+
+def param_spec(path_s: str, shape: Tuple[int, ...], mesh: Mesh,
+               cfg: ShardCfg) -> P:
+    """PartitionSpec for one parameter tensor."""
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    if _REPLICATE.search(path_s) or ndim <= 1:
+        return P(*spec)
+    n_stack = _n_stack_axes(path_s)
+
+    tp_dim: Optional[int] = None
+    if cfg.tp_params and cfg.tp_axis in mesh.axis_names:
+        tp_size = mesh.shape[cfg.tp_axis]
+        for pat, dim_fn in _TP_RULES:
+            if pat.search(path_s):
+                d = dim_fn(shape)
+                ok = d is not None and n_stack <= d < ndim and shape[d] % tp_size == 0
+                # head-aligned gating for attention projections
+                if ok and re.search(r"attn/(wq|wo)$|xattn/(wq|wo)$", path_s) \
+                        and cfg.n_heads and cfg.n_heads % tp_size != 0:
+                    ok = False
+                if ok and re.search(r"attn/(wk|wv)$|xattn/(wk|wv)$", path_s) \
+                        and cfg.n_kv_heads and cfg.n_kv_heads % tp_size != 0:
+                    ok = False
+                if ok:
+                    spec[d] = cfg.tp_axis
+                    tp_dim = d
+                break
+
+    if cfg.fsdp_params:
+        fsdp = cfg.present(mesh, cfg.fsdp_axes)
+        if fsdp:
+            fs = axis_size(mesh, fsdp)
+            # largest remaining dim divisible by the fsdp size
+            cands = [(shape[d], d) for d in range(n_stack, ndim)
+                     if d != tp_dim and shape[d] % fs == 0]
+            if cands:
+                _, d = max(cands)
+                spec[d] = fsdp if len(fsdp) > 1 else fsdp[0]
+    return P(*spec)
+
+
+def param_shardings(params: Any, mesh: Mesh, cfg: ShardCfg = ShardCfg()) -> Any:
+    """Pytree of NamedShardings matching `params` (works on ShapeDtypeStructs)."""
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), tuple(leaf.shape), mesh, cfg)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, cfg: ShardCfg, ndim: int, batch_size: int,
+               extra: Optional[Dict[int, Any]] = None) -> P:
+    """Batch-leading activation spec; batch sharded over the batch axes that
+    divide it (pods first), remaining dims per `extra` {dim: axis}."""
+    axes = [a for a in cfg.batch_axes if a in mesh.axis_names]
+    # greedy: use the largest prefix of batch axes whose product divides B
+    use = []
+    prod = 1
+    for a in axes:
+        if batch_size % (prod * mesh.shape[a]) == 0:
+            use.append(a)
+            prod *= mesh.shape[a]
+    spec: list = [None] * ndim
+    spec[0] = tuple(use) if len(use) > 1 else (use[0] if use else None)
+    for d, ax in (extra or {}).items():
+        if ax in mesh.axis_names:
+            spec[d] = ax
+    return P(*spec)
+
+
+def kv_cache_spec(mesh: Mesh, cfg: ShardCfg, cache_shape: Tuple[int, ...],
+                  batch_size: int, n_kv_heads: int,
+                  seq_fallback: bool = False) -> P:
+    """KV cache (.., B, S, Hkv, Dh), possibly with a leading layer-stack axis.
+
+    Heads shard over `model` when divisible; otherwise the cache replicates
+    over `model` (batch sharding still applies).  Sequence-sharding the
+    cache (`seq_fallback=True`) is NOT the baseline: the per-token
+    dynamic-update-slice at a dynamic index forces GSPMD into involuntary
+    full rematerialization (measured: ~50x collective blow-up on the
+    decode_32k cells) — the production SP-cache path needs the shard_map
+    flash-decode with partial-softmax merge and is tracked as a §Perf
+    optimization, not a default.
+    """
+    ndim = len(cache_shape)
+    lead = ndim - 4
+    spec: list = [None] * ndim
+    axes = [a for a in cfg.batch_axes if a in mesh.axis_names]
+    use, prod = [], 1
+    for a in axes:
+        if batch_size % (prod * mesh.shape[a]) == 0:
+            use.append(a)
+            prod *= mesh.shape[a]
+    spec[lead] = tuple(use) if len(use) > 1 else (use[0] if use else None)
+    tp = cfg.tp_axis
+    if tp in mesh.axis_names:
+        if n_kv_heads % mesh.shape[tp] == 0:
+            spec[lead + 2] = tp
+        elif seq_fallback and cache_shape[lead + 1] % mesh.shape[tp] == 0:
+            spec[lead + 1] = cfg.seq_axis        # SP over cache length
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# in-model activation constraints (Megatron-style SP residual stream)
+# ---------------------------------------------------------------------------
+# GSPMD left to itself re-replicates the sequence dim inside transformer
+# blocks and contraction-partitions the FFN matmuls (measured: 20 GB/layer
+# f32 all-reduce on deepseek prefill — EXPERIMENTS.md §Perf iter A4).
+# Model code calls `constrain_acts` on the (B, S, D) residual stream at
+# block boundaries; the launcher installs a spec via `set_activation_spec`
+# (None = no-op, the default for tests/small runs).
+_ACT_SPEC: Optional[P] = None
+
+
+def set_activation_spec(spec: Optional[P]) -> None:
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def constrain_acts(x: Array) -> Array:
+    if _ACT_SPEC is None or x.ndim != len(_ACT_SPEC):
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+
+
+def logical_to_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots (each: kernel + ops + ref).
+
+  attention/        flash attention forward (train / prefill)
+  decode_attention/ flash-decoding analogue (one query vs long KV cache)
+  ei_update/        fused q-step gDDIM exponential-integrator state update
+  dct2/             BDM DCT-as-matmul + fully fused frequency-space EI update
+"""

@@ -1,0 +1,156 @@
+"""Pallas TPU flash attention (forward) with GQA, causal & sliding-window.
+
+TPU adaptation of FlashAttention (Dao et al.): instead of GPU SM/warp
+scheduling, we exploit the TPU Pallas guarantee that grid iterations execute
+*sequentially* with the last grid axis fastest.  The grid is
+
+    (batch, q_heads, num_q_blocks, num_k_blocks)
+
+and the online-softmax running statistics (m, l) plus the f32 accumulator
+live in VMEM scratch that persists across the k-block axis; the output tile
+is written once, on the final k block.  GQA is handled with a BlockSpec
+index_map that maps q-head h to kv-head h // (Hq // Hkv) — the repeated KV
+is never materialized in HBM.
+
+Block sizes default to (128, 128): the MXU is 128x128 and the VMEM working
+set is q(128xDh) + k/v(128xDh each) + acc(128xDh f32) + stats — ~0.3 MB at
+Dh=128, far under the ~16 MB/core budget, leaving room for double buffering.
+
+Causal + sliding-window masking is computed from absolute positions, so the
+same kernel serves prefill (q_offset=0) and chunked/decode attention
+(q_offset = cache length).  K-blocks that are entirely outside the causal /
+window band are skipped via pl.when (no MXU work, no VMEM traffic beyond the
+prefetch), which makes causal attention ~2x and sliding-window O(S*W).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_off_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, sm_scale: float,
+                  num_k_blocks: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    q_off = q_off_ref[0]
+    q_pos = q_off + qb * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level skip: is any (q, k) pair in this tile visible?
+    lo_q = q_off + qb * block_q            # first q position in tile
+    hi_q = lo_q + block_q - 1              # last q position
+    lo_k = kb * block_k
+    hi_k = lo_k + block_k - 1
+    visible = jnp.bool_(True)
+    if causal:
+        visible = visible & (lo_k <= hi_q)
+    if window is not None:
+        visible = visible & (hi_k > lo_q - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (bq, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, Dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                  # (bq, bk)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window is not None:
+            mask = mask & (k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (bq, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                   # (bq, 1)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, Dh)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kb == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)              # fully-masked rows -> 0
+        o_ref[0, 0] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *,
+                    q_offset: Array | int = 0,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = False) -> Array:
+    """q: (B, Sq, Hq, Dh); k/v: (B, Sk, Hkv, Dh) -> (B, Sq, Hq, Dh)."""
+    B, Sq, Hq, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+
+    # layouts: (B, H, S, Dh) so the head axis is a pure grid axis
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    q_off = jnp.asarray(q_offset, jnp.int32).reshape(1)
+
+    grid = (B, Hq, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, sm_scale=1.0 / (Dh ** 0.5), num_k_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # q_offset scalar
+            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_off, qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the attention kernels (GQA + causal + sliding window).
+
+This is the reference the Pallas kernels are allclose-tested against
+(tests/test_kernels.py sweeps shapes & dtypes with interpret=True).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  q_offset: Union[int, Array] = 0) -> Array:
+    """q: (B, Sq, Hq, Dh); k/v: (B, Sk, Hkv, Dh); Hq % Hkv == 0.
+
+    `q_offset` is the absolute position of q[0] relative to k[0] — for
+    decode with a pre-allocated cache, q_offset = number of valid cache
+    entries, so the causal mask also hides the unwritten tail of the cache.
+    `window`: attend only to the last `window` keys (Mistral/gemma-style
+    sliding window); None = unbounded.
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, rep, Dh)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(Dh))
+    q_pos = (jnp.asarray(q_offset) + jnp.arange(Sq))[:, None]   # (Sq, 1)
+    k_pos = jnp.arange(Sk)[None, :]                             # (1, Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (can happen with tiny windows) -> zeros, not NaN
+    w = jnp.where(jnp.isfinite(scores).any(-1, keepdims=True), w, 0.0)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)

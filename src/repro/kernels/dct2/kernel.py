@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: 2-D DCT as matmuls + fused BDM EI update.
+
+Hardware adaptation (paper App. B.1 / DESIGN.md §3): BDM's frequency
+transform is FFT-adjacent on GPU; the TPU has no FFT unit, but an HxW DCT is
+two small dense matmuls  Y = C_h X C_w^T  which the MXU executes natively.
+For CIFAR-scale images (32..64 per side) the whole image tile plus both DCT
+matrices fit comfortably in VMEM, so we fuse the complete gDDIM step
+
+    u_next = IDCT( psi ⊙ DCT(u) + Σ_j C_j ⊙ DCT(eps_j) )
+
+into one kernel: each grid step loads one (H, W) image-channel tile of u and
+its q eps-history tiles, performs 2(q+1)+2 small matmuls and the diagonal
+scale in VMEM, and writes u_next once.  HBM traffic is (q + 2)·|u| — the
+same roofline minimum as the isotropic ei_update kernel, versus 4(q+1)·|u|
+for the unfused DCT→scale→IDCT chain.
+
+Grid: (B, Ch).  Layout: channels-last images are transposed host-side to
+(B, Ch, H, W) so the tile is a contiguous (H, W) matrix (lanes = W).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...sde.base import dct_matrix
+
+Array = jax.Array
+
+
+def _bdm_kernel(u_ref, eps_ref, psi_ref, C_ref, ch_ref, cw_ref, o_ref, *, q: int):
+    ch = ch_ref[...]                                   # (H, H) DCT-II
+    cw = cw_ref[...]                                   # (W, W)
+    x = u_ref[0, 0].astype(jnp.float32)                # (H, W)
+
+    def dct2(m):
+        return jax.lax.dot(ch, jax.lax.dot(m, cw.T,
+                           preferred_element_type=jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+    y = dct2(x) * psi_ref[0]
+    for j in range(q):
+        e = eps_ref[j, 0, 0].astype(jnp.float32)
+        y = y + dct2(e) * C_ref[j, 0]
+    out = jax.lax.dot(ch.T, jax.lax.dot(y, cw, preferred_element_type=jnp.float32),
+                      preferred_element_type=jnp.float32)
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bdm_ei_update(u: Array, eps_hist: Array, psi: Array, C: Array,
+                  *, interpret: bool = False) -> Array:
+    """u: (B, H, W, Ch); eps_hist: (q, B, H, W, Ch); psi: (H, W, 1); C: (q, H, W, 1)."""
+    B, H, W, Ch = u.shape
+    q = eps_hist.shape[0]
+    ut = u.transpose(0, 3, 1, 2)                       # (B, Ch, H, W)
+    et = eps_hist.transpose(0, 1, 4, 2, 3)             # (q, B, Ch, H, W)
+    psi2 = psi[..., 0][None].astype(jnp.float32)       # (1, H, W)
+    C2 = C[..., 0][:, None].astype(jnp.float32)        # (q, 1, H, W)
+    ch = jnp.asarray(dct_matrix(H), jnp.float32)
+    cw = jnp.asarray(dct_matrix(W), jnp.float32)
+
+    kernel = functools.partial(_bdm_kernel, q=q)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Ch),
+        in_specs=[
+            pl.BlockSpec((1, 1, H, W), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((q, 1, 1, H, W), lambda b, c: (0, b, c, 0, 0)),
+            pl.BlockSpec((1, H, W), lambda b, c: (0, 0, 0)),
+            pl.BlockSpec((q, 1, H, W), lambda b, c: (0, 0, 0, 0)),
+            pl.BlockSpec((H, H), lambda b, c: (0, 0)),
+            pl.BlockSpec((W, W), lambda b, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, H, W), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Ch, H, W), u.dtype),
+        interpret=interpret,
+    )(ut, et, psi2, C2, ch, cw)
+    return out.transpose(0, 2, 3, 1)
+
+
+def _dct_kernel(x_ref, ch_ref, cw_ref, o_ref, *, inverse: bool):
+    ch = ch_ref[...]
+    cw = cw_ref[...]
+    x = x_ref[0, 0].astype(jnp.float32)
+    if inverse:
+        out = jax.lax.dot(ch.T, jax.lax.dot(x, cw, preferred_element_type=jnp.float32),
+                          preferred_element_type=jnp.float32)
+    else:
+        out = jax.lax.dot(ch, jax.lax.dot(x, cw.T, preferred_element_type=jnp.float32),
+                          preferred_element_type=jnp.float32)
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "interpret"))
+def dct2(x: Array, *, inverse: bool = False, interpret: bool = False) -> Array:
+    """Orthonormal 2-D DCT-II (or inverse) of (B, H, W, Ch) images."""
+    B, H, W, Ch = x.shape
+    xt = x.transpose(0, 3, 1, 2)
+    chm = jnp.asarray(dct_matrix(H), jnp.float32)
+    cwm = jnp.asarray(dct_matrix(W), jnp.float32)
+    kernel = functools.partial(_dct_kernel, inverse=inverse)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Ch),
+        in_specs=[
+            pl.BlockSpec((1, 1, H, W), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((H, H), lambda b, c: (0, 0)),
+            pl.BlockSpec((W, W), lambda b, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, H, W), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Ch, H, W), x.dtype),
+        interpret=interpret,
+    )(xt, chm, cwm)
+    return out.transpose(0, 2, 3, 1)

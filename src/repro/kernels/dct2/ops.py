@@ -1,0 +1,34 @@
+"""Dispatch wrappers for the dct2 / fused-BDM kernels."""
+from __future__ import annotations
+
+import jax
+
+from . import ref as _ref
+from . import kernel as _kernel
+
+Array = jax.Array
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def dct2(x: Array, inverse: bool = False, impl: str = "auto") -> Array:
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _kernel.dct2(x, inverse=inverse)
+    if impl == "pallas_interpret":
+        return _kernel.dct2(x, inverse=inverse, interpret=True)
+    return _ref.idct2_ref(x) if inverse else _ref.dct2_ref(x)
+
+
+def bdm_ei_update(u: Array, eps_hist: Array, psi: Array, C: Array,
+                  impl: str = "auto") -> Array:
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _kernel.bdm_ei_update(u, eps_hist, psi, C)
+    if impl == "pallas_interpret":
+        return _kernel.bdm_ei_update(u, eps_hist, psi, C, interpret=True)
+    return _ref.bdm_ei_update_ref(u, eps_hist, psi, C)

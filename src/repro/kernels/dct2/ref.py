@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the 2-D DCT kernels (BDM frequency basis).
+
+dct2_ref / idct2_ref: orthonormal DCT-II / its inverse along the two leading
+spatial axes of (B, H, W, C) images.
+
+bdm_ei_update_ref: the fused BDM gDDIM q-step update done entirely in
+frequency space with per-frequency diagonal coefficients:
+
+    u_next = IDCT( psi ⊙ DCT(u) + sum_j C_j ⊙ DCT(eps_j) )
+
+psi, C broadcast over (H, W, 1) against the channel axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...sde.base import dct_nd, idct_nd
+
+Array = jax.Array
+
+
+def dct2_ref(x: Array) -> Array:
+    return dct_nd(x, axes=(1, 2))
+
+
+def idct2_ref(x: Array) -> Array:
+    return idct_nd(x, axes=(1, 2))
+
+
+def bdm_ei_update_ref(u: Array, eps_hist: Array, psi: Array, C: Array) -> Array:
+    """u: (B, H, W, Ch); eps_hist: (q, B, H, W, Ch); psi: (H, W, 1); C: (q, H, W, 1)."""
+    y = dct2_ref(u.astype(jnp.float32)) * psi
+    for j in range(eps_hist.shape[0]):
+        y = y + dct2_ref(eps_hist[j].astype(jnp.float32)) * C[j]
+    return idct2_ref(y).astype(u.dtype)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: decode attention (one query against a long KV cache).
+
+TPU analogue of flash-decoding.  On GPU, flash-decoding splits the KV cache
+across SMs (split-K) and merges partial softmax statistics in a second pass.
+On TPU the grid is *sequential* per core, so the merge is free: we iterate
+KV blocks on the last grid axis, carrying the online-softmax running
+(m, l, acc) in VMEM scratch, exactly like the prefill flash kernel but with
+the q tile being the `rep` grouped-query rows of one KV head (rep = Hq/Hkv;
+the GQA repeat is never materialized).  The cache beyond `cache_len` is
+masked, and whole KV blocks past the valid length are skipped with pl.when
+— decode cost is O(cache_len), not O(S_max).
+
+Grid: (B, Hkv, num_k_blocks); q tile (rep, Dh), kv tiles (block_k, Dh).
+VMEM per step ~ (rep + 2*block_k + rep) * Dh * 4B — tiny; the pipeline
+double-buffers the sequential cache stream at full HBM bandwidth, which is
+the roofline bound for decode (bytes-dominated: the whole cache is read
+once per token).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   block_k: int, num_k_blocks: int, sm_scale: float):
+    kb = pl.program_id(2)
+    cache_len = len_ref[0]
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(kb * block_k < cache_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (rep, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, Dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                     # (rep, bk)
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < cache_len, s, NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, Dh)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(kb == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: Array, k: Array, v: Array, cache_len: Array,
+                     *, block_k: int = 512, interpret: bool = False) -> Array:
+    """q: (B, Hq, Dh); k/v: (B, S, Hkv, Dh); cache_len: () or (B,) int32."""
+    B, Hq, Dh = q.shape
+    _, S, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+
+    qt = q.reshape(B, Hkv, rep, Dh)
+    kt = k.transpose(0, 2, 1, 3)                             # (B, Hkv, S, Dh)
+    vt = v.transpose(0, 2, 1, 3)
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1), (1,))
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               num_k_blocks=nk, sm_scale=1.0 / (Dh ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # cache_len
+            pl.BlockSpec((1, 1, rep, Dh), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, Dh), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(clen, qt, kt, vt)
+    return out.reshape(B, Hq, Dh)

@@ -1,0 +1,22 @@
+"""Dispatch wrapper for decode attention (kernel / reference)."""
+from __future__ import annotations
+
+import jax
+
+from .ref import decode_attention_ref
+from .kernel import decode_attention as decode_attention_pallas
+
+Array = jax.Array
+
+
+def decode_attention(q: Array, k: Array, v: Array, cache_len,
+                     impl: str = "auto") -> Array:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return decode_attention_pallas(q, k, v, cache_len)
+    if impl == "pallas_interpret":
+        return decode_attention_pallas(q, k, v, cache_len, interpret=True)
+    if impl == "ref":
+        return decode_attention_ref(q, k, v, cache_len)
+    raise ValueError(impl)

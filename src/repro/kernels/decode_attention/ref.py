@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for decode attention (single query over a KV cache).
+
+q: (B, Hq, Dh) — one new token per sequence;
+k/v: (B, S, Hkv, Dh) — pre-allocated cache, `cache_len` valid entries.
+Only positions < cache_len (plus the just-written slot handled by the
+caller) participate; GQA broadcast Hq = rep * Hkv.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def decode_attention_ref(q: Array, k: Array, v: Array, cache_len: Array) -> Array:
+    B, Hq, Dh = q.shape
+    _, S, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    qg = q.reshape(B, Hkv, rep, Dh).astype(jnp.float32)
+    scores = jnp.einsum("bhrd,bshd->bhrs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(float(Dh))
+    mask = jnp.arange(S)[None] < jnp.asarray(cache_len).reshape(-1, 1)   # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(jnp.isfinite(scores).any(-1, keepdims=True), w, 0.0)
+    out = jnp.einsum("bhrs,bshd->bhrd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Dh).astype(q.dtype)

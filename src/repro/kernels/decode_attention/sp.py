@@ -1,0 +1,117 @@
+"""Sequence-parallel decode attention (shard_map): the long_500k serving path.
+
+Baseline decode replicates MQA/GQA caches over the model axis (the GSPMD
+seq-sharded cache forces involuntary full rematerialization — §Perf
+prologue).  This module does it properly: the KV cache is sharded over the
+`model` axis on the SEQUENCE dim, each shard runs flash-decode over its
+local block carrying (m, l, acc) online-softmax statistics, and the shards
+merge with three tiny collectives (pmax + 2 psum of (B, Hq)-sized stats) —
+the TPU analogue of flash-decoding's split-K second pass, with the split
+laid across chips instead of SMs.
+
+Per-token traffic: each chip reads only its S/tp cache slice (16× less HBM
+per chip than the replicated baseline at tp = 16), and the ICI cost is
+O(B·Hq·Dh) — independent of context length.  The cache update is also
+local: the writing shard is `cache_len // shard_len` (one dynamic-update in
+one shard; no resharding).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+Array = jax.Array
+
+
+def _local_stats(q, k, v, lo, cache_len):
+    """Partial online-softmax stats over the local KV block.
+    q: (B, Hq, Dh); k/v: (B, S_loc, Hkv, Dh); lo = absolute offset."""
+    B, Hq, Dh = q.shape
+    S_loc, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    qg = q.reshape(B, Hkv, rep, Dh).astype(jnp.float32)
+    s = jnp.einsum("bhrd,bshd->bhrs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(float(Dh))
+    pos = lo + jnp.arange(S_loc)
+    s = jnp.where((pos < cache_len)[None, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                                   # (B, Hkv, rep)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhrs,bshd->bhrd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def sp_decode_attention(q: Array, k: Array, v: Array, cache_len: Array,
+                        *, mesh: Mesh, seq_axis: str = "model") -> Array:
+    """q: (B, Hq, Dh) replicated over seq_axis; k/v: (B, S, Hkv, Dh) sharded
+    over seq_axis on dim 1; cache_len: () int32.  Returns (B, Hq, Dh)."""
+    B, Hq, Dh = q.shape
+    S = k.shape[1]
+    tp = mesh.shape[seq_axis]
+    assert S % tp == 0
+    S_loc = S // tp
+
+    def body(q, k, v, cache_len):
+        idx = jax.lax.axis_index(seq_axis)
+        lo = idx * S_loc
+        m, l, acc = _local_stats(q, k[0], v[0], lo, cache_len[0])
+        m = jnp.where(l > 0, m, -jnp.inf)
+        m_glob = jax.lax.pmax(jnp.where(jnp.isfinite(m), m, -3e38), seq_axis)
+        scale = jnp.exp(jnp.where(jnp.isfinite(m), m, -3e38) - m_glob)
+        l_glob = jax.lax.psum(l * scale, seq_axis)
+        acc_glob = jax.lax.psum(acc * scale[..., None], seq_axis)
+        safe = jnp.where(l_glob == 0.0, 1.0, l_glob)
+        out = (acc_glob / safe[..., None]).reshape(B, Hq, Dh)
+        return out.astype(q.dtype)
+
+    other = [a for a in mesh.axis_names if a != seq_axis]
+    rep_spec = P()
+    kv_spec = P(None, seq_axis)            # (B, S/tp, Hkv, Dh) — add lead axis below
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(rep_spec, P(None, None, seq_axis), P(None, None, seq_axis),
+                  P(None)),
+        out_specs=rep_spec, check_rep=False)
+    # shard_map wants the sharded dim explicit: add a dummy lead axis that
+    # carries the (1, B, S, Hkv, Dh) layout with S sharded
+    return fn(q, k[None], v[None], jnp.asarray(cache_len, jnp.int32).reshape(1))
+
+
+def sp_cache_update(k_cache: Array, v_cache: Array, k_new: Array, v_new: Array,
+                    cache_len: Array, *, mesh: Mesh, seq_axis: str = "model"
+                    ) -> Tuple[Array, Array]:
+    """Write one token's (k, v) into the seq-sharded cache without
+    resharding: only the owning shard performs the dynamic update."""
+    S = k_cache.shape[1]
+    tp = mesh.shape[seq_axis]
+    S_loc = S // tp
+
+    def body(kc, vc, kn, vn, cl):
+        idx = jax.lax.axis_index(seq_axis)
+        local = cl[0] - idx * S_loc
+        in_range = (local >= 0) & (local < S_loc)
+        pos = jnp.clip(local, 0, S_loc - 1)
+        kc0, vc0 = kc[0], vc[0]
+        kc_new = jax.lax.dynamic_update_slice_in_dim(
+            kc0, kn.astype(kc0.dtype)[:, None], pos, axis=1)
+        vc_new = jax.lax.dynamic_update_slice_in_dim(
+            vc0, vn.astype(vc0.dtype)[:, None], pos, axis=1)
+        kc_out = jnp.where(in_range, kc_new, kc0)
+        vc_out = jnp.where(in_range, vc_new, vc0)
+        return kc_out[None], vc_out[None]
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, seq_axis), P(None, None, seq_axis), P(), P(),
+                  P(None)),
+        out_specs=(P(None, None, seq_axis), P(None, None, seq_axis)),
+        check_rep=False)
+    return tuple(t[0] for t in fn(k_cache[None], v_cache[None], k_new, v_new,
+                                  jnp.asarray(cache_len, jnp.int32).reshape(1)))

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused q-step gDDIM exponential-integrator update.
+
+On GPU the gDDIM update is a chain of q+1 broadcast-multiply-adds, each a
+separate memory-bound pass over the full state.  The TPU adaptation fuses
+everything into ONE VMEM pass: each grid step loads a (k, block_d) tile of u
+and the q matching eps-history tiles, applies the tiny structured matrices
+(scalar k=1 / CLD channel-block k=2) entirely in VREGs, and stores the
+output tile once.  HBM traffic drops from (2 + 2q) |u| to (q + 2) |u| —
+the roofline minimum for this op (it must read u and all q eps terms).
+
+Layout: state flattened to (B, k, D); grid (B, D // block_d); coefficients
+live in SMEM (they are a handful of scalars).  block_d defaults to 2048
+lanes = 8 KiB/channel tile in f32 — small against ~16 MiB VMEM, so the
+pipeline can double-buffer the q+1 input streams.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ei_kernel(psi_ref, C_ref, u_ref, eps_ref, o_ref, *, q: int, k: int):
+    u = u_ref[0].astype(jnp.float32)                    # (k, bd)
+    acc = jnp.zeros_like(u)
+    for c in range(k):
+        row = jnp.zeros_like(u[0])
+        for c2 in range(k):
+            row = row + psi_ref[c, c2] * u[c2]
+        for j in range(q):
+            e = eps_ref[j, 0].astype(jnp.float32)       # (k, bd)
+            for c2 in range(k):
+                row = row + C_ref[j, c, c2] * e[c2]
+        acc = acc.at[c].set(row)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ei_update(u: Array, eps_hist: Array, psi: Array, C: Array,
+              *, block_d: int = 2048, interpret: bool = False) -> Array:
+    """u: (B, k, D); eps_hist: (q, B, k, D); psi: (k, k); C: (q, k, k)."""
+    B, k, D = u.shape
+    q = eps_hist.shape[0]
+    block_d = min(block_d, D)
+    if D % block_d:
+        pad = block_d - D % block_d
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad)))
+        eps_hist = jnp.pad(eps_hist, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    Dp = u.shape[-1]
+    grid = (B, Dp // block_d)
+
+    kernel = functools.partial(_ei_kernel, q=q, k=k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # psi (k,k)
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # C (q,k,k)
+            pl.BlockSpec((1, k, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((q, 1, k, block_d), lambda b, d: (0, b, 0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, k, block_d), lambda b, d: (b, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((B, k, Dp), u.dtype),
+        interpret=interpret,
+    )(psi.astype(jnp.float32), C.astype(jnp.float32), u, eps_hist)
+    return out[..., :D]

@@ -1,0 +1,46 @@
+"""Dispatch wrapper for the fused EI-update kernel.
+
+`ei_update(u, eps_hist, psi, C)` with state (B, k, D).  The SDE samplers
+flatten their state into this canonical layout via `pack_state`/`unpack_state`
+(VPSDE: k=1; CLD: k=2 channel axis).  BDM routes through the dct2 kernel
+instead (frequency-diagonal coefficients).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .ref import ei_update_ref
+from .kernel import ei_update as ei_update_pallas
+
+Array = jax.Array
+
+
+def pack_state(u: Array, k: int) -> Tuple[Array, Tuple[int, ...]]:
+    """(B, [k,] *data) -> (B, k, D) plus the original shape for unpack."""
+    shape = u.shape
+    B = shape[0]
+    if k == 1:
+        return u.reshape(B, 1, -1), shape
+    return u.reshape(B, k, -1), shape
+
+
+def unpack_state(u: Array, shape: Tuple[int, ...]) -> Array:
+    return u.reshape(shape)
+
+
+def ei_update(u: Array, eps_hist: Array, psi: Array, C: Array,
+              impl: str = "auto") -> Array:
+    """u: (B, k, D); eps_hist: (q, B, k, D); psi (k, k); C (q, k, k)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return ei_update_pallas(u, eps_hist, psi, C)
+    if impl == "pallas_interpret":
+        return ei_update_pallas(u, eps_hist, psi, C, interpret=True)
+    if impl == "ref":
+        return ei_update_ref(u, eps_hist, psi, C)
+    raise ValueError(impl)

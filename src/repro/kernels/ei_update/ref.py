@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused gDDIM exponential-integrator update.
+
+The q-step predictor update (paper Eq. 19a) for scalar/block families:
+
+    u_next[c] = sum_c' Psi[c,c'] u[c'] + sum_j sum_c' C[j,c,c'] eps_hist[j,c']
+
+State layout: (B, k, D) with k the structural channel count (VPSDE: k=1,
+CLD: k=2) and D the flattened data dims.  eps_hist: (q, B, k, D).
+Coefficients: psi (k, k); C (q, k, k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ei_update_ref(u: Array, eps_hist: Array, psi: Array, C: Array) -> Array:
+    out = jnp.einsum("ck,bkd->bcd", psi.astype(jnp.float32),
+                     u.astype(jnp.float32))
+    out = out + jnp.einsum("jck,jbkd->bcd", C.astype(jnp.float32),
+                           eps_hist.astype(jnp.float32))
+    return out.astype(u.dtype)

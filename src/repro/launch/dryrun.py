@@ -1,0 +1,377 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialization, and the production meshes need 512 placeholder host devices.
+(Only this entry point does that — tests/benchmarks see the real 1 device.)
+
+Per cell:
+    with mesh:
+        lowered  = jit(step, in_shardings=..., out_shardings=...).lower(**specs)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-byte parse  -> JSON line
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh single --out results.jsonl
+    python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_arch, get_diffusion, ARCH_IDS
+from ..models.registry import Arch, SHAPES
+from ..optim.adamw import AdamWCfg, adamw_init
+from ..distributed.sharding import ShardCfg
+from . import steps as steps_lib
+from . import hlo_analysis
+from .mesh import make_production_mesh
+
+SHAPE_IDS = list(SHAPES)
+
+
+def model_flops(arch: Arch, shape: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train shapes;
+    2*N*D per generated token for decode; 2*N*D*S_prompt for prefill."""
+    cell = SHAPES[shape]
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    n_params = arch.param_count()
+    cfg = arch.cfg
+    moe = getattr(cfg, "moe", None)
+    if moe is not None:
+        # active params: replace the expert stack with top_k experts (+shared)
+        per_expert = (3 if getattr(cfg, "gated_mlp", True) else 2) * cfg.d_model * moe.d_ff
+        n_moe_layers = sum(cfg.layer_moe[i % cfg.pattern] for i in range(cfg.n_layers))
+        n_params = n_params - n_moe_layers * (moe.n_experts - moe.top_k) * per_expert
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_params * tokens
+
+
+def make_shard_cfg(arch, opts: tuple = ()) -> ShardCfg:
+    """Baseline ShardCfg, or a §Perf variant via opt flags:
+    head_tp   — head-aligned attention TP gating (kills QK^T all-reduce)
+    seq_shard — context parallelism (sequence-sharded activations)
+    no_fsdp   — TP-only params (weight-stationary serving)
+    """
+    kw: Dict[str, Any] = {}
+    if "head_tp" in opts:
+        kw["n_heads"] = getattr(arch.cfg, "n_heads", 0)
+        kw["n_kv_heads"] = getattr(arch.cfg, "n_kv_heads",
+                                   getattr(arch.cfg, "n_heads", 0))
+    if "seq_shard" in opts:
+        kw["seq_shard_activations"] = True
+    if "no_fsdp" in opts:
+        kw["fsdp_params"] = False
+    return ShardCfg(**kw)
+
+
+def run_cell(arch_name: str, shape: str, multi_pod: bool,
+             shard_cfg: Optional[ShardCfg] = None,
+             dtype=jnp.bfloat16, extra_tag: str = "",
+             opts: tuple = ()) -> Dict[str, Any]:
+    t_start = time.time()
+    rec: Dict[str, Any] = {
+        "arch": arch_name, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tag": extra_tag or "+".join(opts),
+    }
+    spec = get_arch(arch_name, dtype=dtype)
+    arch = Arch(spec)
+    ok, why = spec.shape_applicable(shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rec["devices"] = n_dev
+    scfg = shard_cfg or make_shard_cfg(arch, opts)
+    cell = SHAPES[shape]
+
+    from ..kernels.attention import ops as attn_ops
+    attn_ops.FORCE_IMPL = "traffic_stub" if "flash_stub" in opts else None
+    from ..distributed import sharding as shd_mod
+    if "act_sp" in opts and cell.kind != "decode":
+        from jax.sharding import PartitionSpec as PS
+        batch_ax = tuple(a for a in scfg.batch_axes if a in mesh.axis_names)
+        batch_ax = batch_ax if len(batch_ax) > 1 else (batch_ax[0] if batch_ax else None)
+        shd_mod.set_activation_spec(PS(batch_ax, scfg.tp_axis, None))
+    else:
+        shd_mod.set_activation_spec(None)
+
+    sh = steps_lib.shardings_for(arch, mesh, shape, scfg)
+    specs = sh["input_specs"]
+
+    with mesh:
+        if cell.kind == "train":
+            opt_cfg = AdamWCfg()
+            gsh = sh["params"] if "grad_rs" in opts else None
+            step = steps_lib.make_train_step(arch, opt_cfg, grad_shardings=gsh)
+            fn = jax.jit(step, in_shardings=(sh["params"], sh["opt"], sh["inputs"]),
+                         out_shardings=(sh["params"], sh["opt"], None))
+            args = (sh["param_shapes"], sh["opt_shapes"], specs)
+        elif cell.kind == "prefill":
+            step = steps_lib.make_prefill_step(arch, cell.seq_len)
+            fn = jax.jit(step, in_shardings=(sh["params"], sh["inputs"]))
+            args = (sh["param_shapes"], specs)
+        else:  # decode
+            step = steps_lib.make_serve_step(arch)
+            in_sh = [sh["params"], sh["inputs"]["token"], sh["inputs"]["caches"],
+                     sh["inputs"]["cache_len"]]
+            args = [sh["param_shapes"], specs["token"], specs["caches"],
+                    specs["cache_len"]]
+            if "memory" in specs:
+                in_sh.append(sh["inputs"]["memory"])
+                args.append(specs["memory"])
+            fn = jax.jit(step, in_shardings=tuple(in_sh))
+            args = tuple(args)
+
+        t0 = time.time()
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    rec["lower_s"] = round(t1 - t0, 2)
+    rec["compile_s"] = round(t2 - t1, 2)
+
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        # per-device HBM estimate: args are already per-device shards on a
+        # real TPU; temp is the partitioned executable's scratch.
+        rec["memory"]["total_bytes"] = (
+            rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"])
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    # NOTE: XLA's cost_analysis counts while bodies ONCE (verified on this
+    # container) — kept for reference only; the roofline uses the trip-aware
+    # hlo_program_stats.
+    rec["xla_cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes": float(ca.get("bytes accessed", 0.0))}
+
+    hlo = compiled.as_text()
+    stats = hlo_analysis.hlo_program_stats(hlo)
+    flops = stats["flops"]
+    bytes_acc = stats["bytes"]
+    coll = stats["collectives"]
+    rec["cost"] = {"flops_per_dev": flops, "bytes_per_dev": bytes_acc}
+    rec["collectives"] = coll
+    rec["top_collectives"] = hlo_analysis.top_collectives(hlo, k=8)
+    rec["hlo_diag"] = {"n_while": stats["n_while"],
+                       "n_computations": stats["n_computations"]}
+    coll_total = float(sum(coll.values()))
+    rec["roofline"] = hlo_analysis.roofline_terms(flops, bytes_acc, coll_total)
+
+    mf = model_flops(arch, shape)
+    rec["model_flops_global"] = mf
+    rec["model_flops_per_dev"] = mf / n_dev
+    rec["useful_flop_ratio"] = (mf / n_dev) / flops if flops else None
+    # roofline fraction: ideal time on the dominant term if all flops were
+    # useful, over the achievable step time max(terms)
+    t_ideal = (mf / n_dev) / hlo_analysis.PEAK_FLOPS
+    t_bound = max(rec["roofline"]["t_compute_s"], rec["roofline"]["t_memory_s"],
+                  rec["roofline"]["t_collective_s"])
+    rec["roofline_fraction"] = t_ideal / t_bound if t_bound else None
+    rec["status"] = "ok"
+    rec["wall_s"] = round(time.time() - t_start, 2)
+    return rec
+
+
+def run_diffusion_cell(name: str, multi_pod: bool, global_batch: int = 256,
+                       opts: tuple = ()) -> Dict[str, Any]:
+    """Dry-run the paper's diffusion train step (DiT score net, full size)."""
+    from ..distributed.sharding import param_shardings, batch_spec
+    from ..distributed import sharding as shd_mod
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    rec: Dict[str, Any] = {"arch": name, "shape": f"diffusion_b{global_batch}",
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "tag": "+".join(opts)}
+    t_start = time.time()
+    spec = get_diffusion(name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rec["devices"] = n_dev
+    scfg = ShardCfg(
+        n_heads=spec.score_cfg.n_heads if "head_tp" in opts else 0,
+        n_kv_heads=spec.score_cfg.n_heads if "head_tp" in opts else 0,
+        fsdp_params="no_fsdp" not in opts)
+    from ..kernels.attention import ops as attn_ops
+    attn_ops.FORCE_IMPL = "traffic_stub" if "flash_stub" in opts else None
+    if "act_sp" in opts:
+        batch_ax = tuple(a for a in scfg.batch_axes if a in mesh.axis_names)
+        batch_ax = batch_ax if len(batch_ax) > 1 else (batch_ax[0] if batch_ax else None)
+        shd_mod.set_activation_spec(PS(batch_ax, scfg.tp_axis, None))
+    else:
+        shd_mod.set_activation_spec(None)
+    pshapes = spec.param_shapes()
+    psh = param_shardings(pshapes, mesh, scfg)
+    opt_cfg = AdamWCfg()
+    opt_shapes = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), pshapes)
+    from ..optim.adamw import AdamWState
+    osh = AdamWState(step=NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                     m=param_shardings(opt_shapes.m, mesh, scfg),
+                     v=param_shardings(opt_shapes.v, mesh, scfg),
+                     master=param_shardings(opt_shapes.master, mesh, scfg))
+    ispecs = spec.input_specs(global_batch)
+    ish = {k: NamedSharding(mesh, batch_spec(mesh, scfg, v.ndim, global_batch))
+           for k, v in ispecs.items()}
+    step = steps_lib.make_diffusion_train_step(spec, opt_cfg)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    with mesh:
+        fn = jax.jit(step, in_shardings=(psh, osh, ish,
+                                         NamedSharding(mesh, jax.sharding.PartitionSpec())))
+        lowered = fn.lower(pshapes, opt_shapes, ispecs, key_spec)
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    stats = hlo_analysis.hlo_program_stats(compiled.as_text())
+    flops, bytes_acc, coll = stats["flops"], stats["bytes"], stats["collectives"]
+    rec["memory"] = {"argument_bytes": int(ma.argument_size_in_bytes),
+                     "temp_bytes": int(ma.temp_size_in_bytes)} if ma else None
+    rec["cost"] = {"flops_per_dev": flops, "bytes_per_dev": bytes_acc}
+    rec["collectives"] = coll
+    rec["roofline"] = hlo_analysis.roofline_terms(flops, bytes_acc,
+                                                  float(sum(coll.values())))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshapes))
+    tokens = global_batch  # one image = one "token" unit for 6ND accounting
+    rec["model_flops_global"] = 6.0 * n_params * tokens
+    rec["status"] = "ok"
+    rec["wall_s"] = round(time.time() - t_start, 2)
+    return rec
+
+
+def run_diffusion_serve_cell(name: str, multi_pod: bool,
+                             global_batch: int = 512, nfe: int = 50,
+                             opts: tuple = ()) -> Dict[str, Any]:
+    """The paper's technique as a deployed service: one gDDIM predictor
+    step of the full-size DiT score net (executed NFE times per batch).
+    Inference profile: weight-stationary TP (no FSDP gathers)."""
+    from ..distributed.sharding import param_shardings, batch_spec
+    from ..distributed import sharding as shd_mod
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    from ..core import build_sampler_coeffs, time_grid
+    rec: Dict[str, Any] = {"arch": name, "shape": f"gddim_serve_b{global_batch}",
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "tag": "+".join(opts) or "serve"}
+    t_start = time.time()
+    spec = get_diffusion(name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rec["devices"] = n_dev
+    scfg = ShardCfg(fsdp_params=False,
+                    n_heads=spec.score_cfg.n_heads,
+                    n_kv_heads=spec.score_cfg.n_heads)
+    from ..kernels.attention import ops as attn_ops
+    attn_ops.FORCE_IMPL = "traffic_stub" if "flash_stub" in opts else None
+    if "act_sp" in opts:
+        batch_ax = tuple(a for a in scfg.batch_axes if a in mesh.axis_names)
+        batch_ax = batch_ax if len(batch_ax) > 1 else (batch_ax[0] if batch_ax else None)
+        shd_mod.set_activation_spec(PS(batch_ax, scfg.tp_axis, None))
+    else:
+        shd_mod.set_activation_spec(None)
+    ts = time_grid(spec.sde, nfe)
+    coeffs = build_sampler_coeffs(spec.sde, ts, q=1, kt=spec.kt)
+    pshapes = spec.param_shapes()
+    psh = param_shardings(pshapes, mesh, scfg)
+    u_spec = jax.ShapeDtypeStruct(
+        (global_batch,) + spec.sde.state_shape(tuple(spec.data_shape)),
+        jnp.float32)
+    u_sh = NamedSharding(mesh, batch_spec(mesh, scfg, u_spec.ndim, global_batch))
+    step = steps_lib.make_diffusion_serve_step(spec, coeffs)
+    with mesh:
+        fn = jax.jit(step, in_shardings=(psh, u_sh,
+                                         NamedSharding(mesh, PS())),
+                     out_shardings=u_sh)
+        compiled = fn.lower(pshapes, u_spec,
+                            jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    stats = hlo_analysis.hlo_program_stats(compiled.as_text())
+    rec["cost"] = {"flops_per_dev": stats["flops"], "bytes_per_dev": stats["bytes"]}
+    rec["collectives"] = stats["collectives"]
+    rec["roofline"] = hlo_analysis.roofline_terms(
+        stats["flops"], stats["bytes"], float(sum(stats["collectives"].values())))
+    ma = compiled.memory_analysis()
+    rec["memory"] = {"argument_bytes": int(ma.argument_size_in_bytes),
+                     "temp_bytes": int(ma.temp_size_in_bytes)} if ma else None
+    rec["nfe"] = nfe
+    rec["status"] = "ok"
+    rec["wall_s"] = round(time.time() - t_start, 2)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (or 'diffusion:NAME')")
+    ap.add_argument("--shape", default=None, choices=SHAPE_IDS)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every applicable cell")
+    ap.add_argument("--out", default=None, help="append JSON lines here")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--opt", default="", help="comma list: head_tp,seq_shard,no_fsdp")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for a in ARCH_IDS:
+            spec = get_arch(a, reduced=True)
+            cells = [s for s in SHAPE_IDS if spec.shape_applicable(s)[0]]
+            print(f"{a:28s} {', '.join(cells)}")
+        return 0
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPE_IDS:
+                cells.append((a, s))
+    else:
+        if not args.arch or (not args.shape
+                             and not args.arch.startswith(("diffusion:",
+                                                           "diffusion-serve:"))):
+            ap.error("--arch and --shape required unless --all/--list")
+        cells.append((args.arch, args.shape))
+
+    rc = 0
+    for (a, s) in cells:
+        for mp in meshes:
+            try:
+                opts = tuple(o for o in args.opt.split(",") if o)
+                if a.startswith("diffusion:"):
+                    rec = run_diffusion_cell(a.split(":", 1)[1], mp, opts=opts)
+                elif a.startswith("diffusion-serve:"):
+                    rec = run_diffusion_serve_cell(a.split(":", 1)[1], mp,
+                                                   opts=opts)
+                else:
+                    rec = run_cell(a, s, mp, opts=opts)
+            except Exception as e:  # a failed cell is a bug in the system
+                rec = {"arch": a, "shape": s,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": repr(e),
+                       "trace": traceback.format_exc()[-2000:]}
+                rc = 1
+            line = json.dumps(rec)
+            print(line if rec.get("status") != "error" else
+                  f"ERROR {a} {s}: {rec['error']}", flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(line + "\n")
+            jax.clear_caches()  # 80-cell sweeps in one process: drop the jit cache
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

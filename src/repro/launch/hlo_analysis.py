@@ -1,0 +1,480 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting for the roofline.
+
+`cost_analysis()` gives FLOPs / bytes but no collective breakdown, so we
+parse `compiled.as_text()` (the optimized, partitioned per-device module):
+
+  * every computation's direct collective ops are sized from their inline
+    result shapes (+ replica_groups for reduce-scatter operand sizing);
+  * `while` loops (scanned layer stacks!) are resolved recursively — the
+    trip count is read from the loop condition's compare-against-constant,
+    so a collective inside a 126-layer scan body counts 126 times;
+  * per-op-type byte conventions approximate ring-algorithm per-device
+    traffic (documented in EXPERIMENTS.md §Roofline):
+        all-gather          result_bytes           (~F moved per device)
+        reduce-scatter      result_bytes * group   (operand size)
+        all-reduce          2 * result_bytes       (RS + AG phases)
+        all-to-all          result_bytes
+        collective-permute  result_bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_CONST_CMP = re.compile(r"compare\([^)]*\)")
+_S32_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_HDR_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*[({]")
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    """Computations start at column 0 (`%name (args) -> type {` or
+    `ENTRY %name ...{`); body ops are indented.  Split on that."""
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        starts_comp = (line and not line[0].isspace()
+                       and (line.startswith("%") or line.startswith("ENTRY"))
+                       and line.rstrip().endswith("{"))
+        if starts_comp:
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            m = _HDR_NAME.match(line)
+            cur_name = m.group(1) if m else None
+            cur_lines = [line]
+        elif cur_name is not None:
+            cur_lines.append(line)
+            if line.startswith("}"):
+                comps[cur_name] = "\n".join(cur_lines)
+                cur_name = None
+                cur_lines = []
+    if cur_name is not None:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+def _direct_collectives(body: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    seen_started = set()
+    for line in body.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        nbytes = _shape_bytes(shape_txt)
+        if op == "all-reduce":
+            nbytes *= 2
+        elif op == "reduce-scatter":
+            g = 1
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                g = len(gm.group(1).split(","))
+            nbytes *= g
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+def _trip_count(cond_body: str) -> int:
+    """Read the compare-against-constant bound of a counted loop."""
+    consts = [int(x) for x in _S32_CONST.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo: str) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """Returns (per_op_type_bytes, diagnostics)."""
+    comps = split_computations(hlo)
+    memo: Dict[str, Dict[str, int]] = {}
+    n_while = 0
+
+    def total(name: str, stack=()) -> Dict[str, int]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return {}
+        body = comps[name]
+        acc = dict(_direct_collectives(body))
+        for wm in _WHILE_RE.finditer(body):
+            cond, wbody = wm.group(1), wm.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            sub = total(wbody, stack + (name,))
+            for k, v in sub.items():
+                acc[k] = acc.get(k, 0) + trips * v
+        # non-while called computations (fusions/conditionals) — count once
+        memo[name] = acc
+        return acc
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else ""
+    per_op = total(entry)
+    n_while = hlo.count(" while(")
+    diag = {"n_computations": len(comps), "n_while": n_while}
+    return per_op, diag
+
+
+# ---------------------------------------------------------------------------
+# trip-aware whole-program stats
+# ---------------------------------------------------------------------------
+# XLA's HloCostAnalysis counts a while-loop body ONCE (verified on this
+# container: a 10-step scanned matmul reports the flops of one step).  Every
+# assigned arch scans its layer stack, so cost_analysis under-counts flops
+# and bytes by ~n_layers.  hlo_program_stats re-derives both with loop
+# trip-count multiplication, mirroring the collective accounting above:
+#
+#   flops : every `dot` op contributes 2 * result_elems * contracted_elems
+#           (found via lhs_contracting_dims + the lhs operand's dims),
+#           wherever it appears (top level or inside fusion bodies);
+#   bytes : at the top level of the entry / while bodies, each op moves
+#           (sum of operand sizes + result size) of HBM traffic — in
+#           optimized HLO the top-level ops are fusions/dots/copies whose
+#           operands and results are real buffers.  Plumbing ops
+#           (parameter/constant/tuple/gte/bitcast/while) are free.
+
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"((?:\((?:[^()]|\([^()]*\))*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_DIMS = re.compile(r"\[([0-9,]*)\]")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "iota", "while", "conditional", "custom-call"}
+
+
+def _dims_of(shape_txt: str):
+    m = _DIMS.search(shape_txt)
+    if not m:
+        return []
+    return [int(d) for d in m.group(1).split(",") if d]
+
+
+def _op_operands(args_txt: str):
+    return _OPERAND.findall(args_txt)
+
+
+def hlo_program_stats(hlo: str):
+    """Returns dict(flops=..., bytes=..., collectives={type: bytes}, n_while=...).
+    All trip-count aware; per-device (the module is the partitioned program)."""
+    comps = split_computations(hlo)
+
+    # per-computation parse: symbol sizes, op records
+    parsed = {}
+    for name, body in comps.items():
+        sizes = {}
+        dims = {}
+        ops = []
+        for line in body.splitlines():
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            oname, shape_txt, kind, args, attrs = m.groups()
+            sizes[oname] = _shape_bytes(shape_txt)
+            dims[oname] = _dims_of(shape_txt)
+            ops.append((oname, shape_txt, kind, args, attrs, line))
+        parsed[name] = (sizes, dims, ops)
+
+    def dot_flops(comp_name: str, args: str, attrs: str, result_dims) -> float:
+        sizes, dims, _ = parsed[comp_name]
+        opnds = _op_operands(args)
+        if not opnds:
+            return 0.0
+        lhs = opnds[0]
+        lc = _LHS_C.search(attrs)
+        contract = 1
+        if lc and lhs in dims:
+            for d in lc.group(1).split(","):
+                if d:
+                    contract *= dims[lhs][int(d)]
+        n_out = 1
+        for d in result_dims:
+            n_out *= d
+        return 2.0 * n_out * contract
+
+    memo_flops = {}
+
+    def comp_flops(name: str, stack=()) -> float:
+        """dot flops of a computation incl. fusion bodies (once per call)."""
+        if name in memo_flops:
+            return memo_flops[name]
+        if name not in parsed or name in stack:
+            return 0.0
+        sizes, dims, ops = parsed[name]
+        total = 0.0
+        for oname, shape_txt, kind, args, attrs, line in ops:
+            if kind == "dot":
+                total += dot_flops(name, args, attrs, _dims_of(shape_txt))
+            elif kind in ("fusion", "call", "map", "reduce", "sort", "scatter",
+                          "reduce-window", "select-and-scatter"):
+                cm = _CALLS.search(attrs)
+                if cm:
+                    total += comp_flops(cm.group(1), stack + (name,))
+            elif kind == "conditional":
+                bm = _BRANCHES.search(attrs)
+                if bm:
+                    for b in _OPERAND.findall(bm.group(1)):
+                        total += comp_flops(b, stack + (name,))
+        memo_flops[name] = total
+        return total
+
+    # ---- fusion operand traffic: a fusion parameter consumed only by
+    # dynamic-slice reads only the slice; a ROOT dynamic-update-slice writes
+    # only the update (in-place aliasing).  This matters enormously for
+    # scanned layer stacks, where every step slices one layer out of an
+    # (L, ...) stacked weight: the real read is |layer|, not L*|layer|.
+    _param_re = re.compile(r"parameter\((\d+)\)")
+
+    def fusion_operand_bytes(called: str, operand_names, caller: str) -> float:
+        if called not in parsed:
+            return sum(parsed[caller][0].get(o, 0) for o in operand_names)
+        sizes_c, dims_c, ops_c = parsed[called]
+        sizes_caller = parsed[caller][0]
+        # param index -> param name (parameter ops carry the index as args)
+        pidx = {}
+        for oname, shape_txt, kind, args, attrs, line in ops_c:
+            if kind == "parameter":
+                try:
+                    pidx[int(args.strip())] = oname
+                except ValueError:
+                    pass
+        # uses of each param
+        total = 0.0
+        root_dus_update = None
+        for oname, shape_txt, kind, args, attrs, line in ops_c:
+            if kind == "dynamic-update-slice" and "ROOT" in line:
+                opnds = _op_operands(args)
+                if len(opnds) > 1:
+                    root_dus_update = opnds[0]  # destination param
+        for i, op in enumerate(operand_names):
+            pname = pidx.get(i)
+            full = sizes_caller.get(op, 0)
+            if pname is None:
+                total += full
+                continue
+            uses = [(k, _op_operands(a)) for (_, _, k, a, _, _) in ops_c
+                    if pname in _op_operands(a)]
+            if uses and all(k == "dynamic-slice" and o and o[0] == pname
+                            for k, o in uses):
+                # read only the slices
+                total += sum(sizes_c.get(n, 0)
+                             for (n, _, k, a, _, _) in ops_c
+                             if k == "dynamic-slice" and _op_operands(a)
+                             and _op_operands(a)[0] == pname)
+            elif pname == root_dus_update:
+                total += 0.0   # aliased destination; update counted via result
+            else:
+                total += full
+        return total
+
+    def fusion_result_bytes(called: str, oname: str, caller: str) -> float:
+        full = parsed[caller][0].get(oname, 0)
+        if called not in parsed:
+            return full
+        sizes_c, _, ops_c = parsed[called]
+        for n, shape_txt, kind, args, attrs, line in ops_c:
+            if kind == "dynamic-update-slice" and "ROOT" in line:
+                opnds = _op_operands(args)
+                if len(opnds) > 1:
+                    return 2.0 * sizes_c.get(opnds[1], 0)
+        return full
+
+    memo_stats = {}
+
+    def comp_stats(name: str, stack=()):
+        if name in memo_stats:
+            return memo_stats[name]
+        if name not in parsed or name in stack:
+            return (0.0, 0.0, {})
+        sizes, dims, ops = parsed[name]
+        flops = 0.0
+        nbytes = 0.0
+        coll = {}
+        body = comps[name]
+        for oname, shape_txt, kind, args, attrs, line in ops:
+            base_kind = kind.replace("-start", "").replace("-done", "")
+            if base_kind in ("all-gather", "all-reduce", "reduce-scatter",
+                             "all-to-all", "collective-permute"):
+                if kind.endswith("-done"):
+                    continue
+                cb = _shape_bytes(shape_txt)
+                if base_kind == "all-reduce":
+                    cb *= 2
+                elif base_kind == "reduce-scatter":
+                    gm = _GROUPS_RE.search(line)
+                    cb *= len(gm.group(1).split(",")) if gm else 1
+                coll[base_kind] = coll.get(base_kind, 0) + cb
+                nbytes += _shape_bytes(shape_txt) * 2
+                continue
+            if kind == "while":
+                cm = re.search(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", attrs)
+                if cm:
+                    trips = _trip_count(comps.get(cm.group(1), ""))
+                    f, b, c = comp_stats(cm.group(2), stack + (name,))
+                    flops += trips * f
+                    nbytes += trips * b
+                    for k, v in c.items():
+                        coll[k] = coll.get(k, 0) + trips * v
+                continue
+            if kind == "conditional":
+                bm = _BRANCHES.search(attrs)
+                if bm:
+                    branches = _OPERAND.findall(bm.group(1))
+                    sub = [comp_stats(b, stack + (name,)) for b in branches]
+                    if sub:  # worst-case branch
+                        f, b, c = max(sub, key=lambda t: t[0] + t[1])
+                        flops += f
+                        nbytes += b
+                        for k, v in c.items():
+                            coll[k] = coll.get(k, 0) + v
+                # fall through: operands+result counted below
+            called = None
+            if kind == "dot":
+                flops += dot_flops(name, args, attrs, _dims_of(shape_txt))
+            elif kind in ("fusion", "call", "map", "reduce", "sort", "scatter",
+                          "reduce-window", "select-and-scatter"):
+                cm = _CALLS.search(attrs)
+                if cm:
+                    called = cm.group(1)
+                    flops += comp_flops(called, stack + (name,))
+            if kind in _FREE_OPS and kind != "conditional" and kind != "custom-call":
+                continue
+            # HBM traffic: operands (reads) + result (write).  Slicing ops
+            # touch only the slice, not the buffer they index into.
+            if kind == "dynamic-slice":
+                nbytes += 2 * sizes.get(oname, 0)
+                continue
+            if kind == "dynamic-update-slice":
+                opnds = _op_operands(args)
+                upd = sizes.get(opnds[1], 0) if len(opnds) > 1 else 0
+                nbytes += 2 * upd
+                continue
+            if kind == "fusion" and called is not None:
+                nbytes += fusion_result_bytes(called, oname, name)
+                nbytes += fusion_operand_bytes(called, _op_operands(args), name)
+                continue
+            nbytes += sizes.get(oname, 0)
+            for op in _op_operands(args):
+                nbytes += sizes.get(op, 0)
+        memo_stats[name] = (flops, nbytes, coll)
+        return memo_stats[name]
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None and comps:
+        entry = max(comps, key=lambda k: len(comps[k]))
+    flops, nbytes, coll = comp_stats(entry) if entry else (0.0, 0.0, {})
+    return {"flops": flops, "bytes": nbytes, "collectives": coll,
+            "n_while": hlo.count(" while("), "n_computations": len(comps)}
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def top_collectives(hlo: str, k: int = 12):
+    """The k largest individual collective ops, trip-count multiplied, with
+    their jax op_name metadata — the hillclimb's 'where is it coming from'."""
+    comps = split_computations(hlo)
+    # trip multiplier per computation (product over the while-nest path)
+    mult = {name: 0 for name in comps}
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            entry = m.group(1) if m else None
+            break
+    if entry is None:
+        return []
+
+    def walk(name, m, seen):
+        if name not in comps or name in seen:
+            return
+        mult[name] = max(mult[name], m)
+        for wm in _WHILE_RE.finditer(comps[name]):
+            cond, body = wm.group(1), wm.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            walk(body, m * trips, seen | {name})
+
+    walk(entry, 1, set())
+    out = []
+    for name, body in comps.items():
+        m = mult.get(name, 0)
+        if m <= 0:
+            continue
+        for line in body.splitlines():
+            cm = _COLL_RE.search(line)
+            if not cm or (cm.group(3) == "-done"):
+                continue
+            nbytes = _shape_bytes(cm.group(1))
+            op = cm.group(2)
+            if op == "all-reduce":
+                nbytes *= 2
+            elif op == "reduce-scatter":
+                gm = _GROUPS_RE.search(line)
+                nbytes *= len(gm.group(1).split(",")) if gm else 1
+            meta = _META_RE.search(line)
+            out.append({"op": op, "bytes": nbytes * m, "trips": m,
+                        "where": (meta.group(1)[:120] if meta else "?")})
+    out.sort(key=lambda r: -r["bytes"])
+    return out[:k]
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e constants per the assignment)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    t_comp = flops_per_dev / PEAK_FLOPS
+    t_mem = bytes_per_dev / HBM_BW
+    t_coll = coll_bytes_per_dev / ICI_BW
+    dom = max(("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+              key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+            "bottleneck": dom}

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state; both helpers are
+functions so the dry-run can set XLA_FLAGS before any jax initialization
+(see dryrun.py, which must set --xla_force_host_platform_device_count=512
+in its very first lines).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the actually-present devices (tests / smoke runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))

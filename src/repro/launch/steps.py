@@ -1,0 +1,180 @@
+"""Step factories: the jitted programs the launcher/dry-run lower.
+
+  make_train_step(arch, opt_cfg)   full train step: loss -> grad -> clip ->
+                                   AdamW (mixed precision; bf16 grads =
+                                   compressed collectives) -> new params
+  make_prefill_step(arch, S)       forward + KV-cache fill (inference prefill)
+  make_serve_step(arch)            one-token decode against a fixed cache
+  make_diffusion_train_step(spec)  DSM/HSM step for the paper's DMs
+  make_diffusion_serve_step(spec)  one gDDIM predictor step (the sampler's
+                                   inner loop body — what a sampling service
+                                   executes NFE times)
+
+`shardings_for(...)` produces (params, opt, inputs) NamedShardings for any
+(arch x shape x mesh) cell from the rules in distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.registry import Arch, ArchSpec, SHAPES
+from ..optim.adamw import AdamWCfg, AdamWState, adamw_init, adamw_update
+from ..distributed import sharding as shd
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def make_train_step(arch: Arch, opt_cfg: AdamWCfg, grad_shardings=None):
+    """grad_shardings: optional pytree of NamedShardings (== param
+    shardings).  Constraining the gradients to the FSDP layout at the
+    autodiff boundary lets GSPMD emit reduce-scatters into the shard
+    instead of full all-reduces (ZeRO-2; §Perf iter B2 — measured 2x on
+    the dominant backward collective of llama3-405b train_4k)."""
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(arch.loss)(params, batch)
+        if grad_shardings is not None:
+            grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 grads, grad_shardings)
+        new_params, new_state, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(arch: Arch, max_len: int):
+    def prefill_step(params, batch):
+        return arch.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def make_serve_step(arch: Arch):
+    def serve_step(params, token, caches, cache_len, memory=None):
+        logits, caches = arch.decode(params, token, caches, cache_len,
+                                     memory=memory)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, caches
+
+    return serve_step
+
+
+def make_diffusion_train_step(spec, opt_cfg: AdamWCfg):
+    tables = spec.tables
+
+    def train_step(params, opt_state: AdamWState, batch, key):
+        def loss_fn(p):
+            from ..train import losses
+            return losses.dsm_loss(spec.sde, tables,
+                                   lambda u, t: spec.eps_model(p, u, t),
+                                   batch["x0"], key)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_state, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_diffusion_serve_step(spec, coeffs):
+    """One deterministic gDDIM predictor step — the inner loop of a
+    sampling service (executed NFE times per request batch).  `k` is the
+    step index 0..N-1 (advancing t_{N-k} -> t_{N-k-1})."""
+    N = coeffs.psi.shape[0]
+
+    def serve_step(params, u, k):
+        i = N - k
+        t = jnp.full((u.shape[0],), 1.0, jnp.float32) * coeffs.ts[i]
+        eps = spec.eps_model(params, u, t)
+        u_next = spec.sde.apply(coeffs.psi[k], u) + \
+            spec.sde.apply(coeffs.pC[k, 0], eps)
+        return u_next
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shardings per (arch x shape x mesh)
+# ---------------------------------------------------------------------------
+def shardings_for(arch: Arch, mesh: Mesh, shape: str,
+                  cfg: shd.ShardCfg = shd.ShardCfg()):
+    """Returns dict with 'params', 'opt', and per-input shardings for the
+    step kind this shape lowers."""
+    cell = SHAPES[shape]
+    pshapes = arch.param_shapes()
+    psh = shd.param_shardings(pshapes, mesh, cfg)
+    out: Dict[str, Any] = {"params": psh, "param_shapes": pshapes}
+    B = cell.global_batch
+
+    if cell.kind == "train":
+        opt_shapes = jax.eval_shape(lambda p: adamw_init(p, AdamWCfg()), pshapes)
+        # opt state inherits the param spec leaf-for-leaf (m, v, master);
+        # scalars replicated
+        def opt_leaf_sharding(path, leaf):
+            return NamedSharding(
+                mesh, shd.param_spec(shd._path_str(path[1:]), tuple(leaf.shape),
+                                     mesh, cfg)) if leaf.ndim else \
+                NamedSharding(mesh, P())
+        osh = AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=shd.param_shardings(opt_shapes.m, mesh, cfg),
+            v=shd.param_shardings(opt_shapes.v, mesh, cfg),
+            master=shd.param_shardings(opt_shapes.master, mesh, cfg),
+        )
+        out["opt"] = osh
+        out["opt_shapes"] = opt_shapes
+
+    specs = arch.input_specs(shape)
+    in_sh: Dict[str, Any] = {}
+    for name, s in specs.items():
+        if name == "caches":
+            n_kv = getattr(arch.cfg, "n_kv_heads", 0)
+            def cache_sh(leaf):
+                if leaf.ndim >= 4 and n_kv and leaf.shape[-2] == n_kv \
+                        and leaf.shape[-1] == getattr(arch.cfg, "d_head", -1):
+                    spec_ = shd.kv_cache_spec(mesh, cfg, leaf.shape, B, n_kv)
+                else:
+                    # ssm/conv/aux states: shard batch dim only
+                    bdim = _find_batch_dim(leaf.shape, B)
+                    spec_l = [None] * leaf.ndim
+                    if bdim is not None:
+                        axes = [a for a in cfg.batch_axes if a in mesh.axis_names]
+                        use, prod = [], 1
+                        for a in axes:
+                            if B % (prod * mesh.shape[a]) == 0:
+                                use.append(a)
+                                prod *= mesh.shape[a]
+                        spec_l[bdim] = tuple(use) if len(use) > 1 else \
+                            (use[0] if use else None)
+                    spec_ = P(*spec_l)
+                return NamedSharding(mesh, spec_)
+            in_sh[name] = jax.tree.map(cache_sh, s)
+        elif name == "cache_len" or (hasattr(s, "ndim") and s.ndim == 0):
+            in_sh[name] = NamedSharding(mesh, P())
+        else:
+            extra = None
+            if cfg.seq_shard_activations and s.ndim >= 2 \
+                    and cell.kind != "decode" \
+                    and s.shape[1] % mesh.shape[cfg.tp_axis] == 0:
+                extra = {1: cfg.tp_axis}   # context parallelism (§Perf A2)
+            in_sh[name] = NamedSharding(
+                mesh, shd.batch_spec(mesh, cfg, s.ndim, B, extra=extra))
+    out["inputs"] = in_sh
+    out["input_specs"] = specs
+    return out
+
+
+def _find_batch_dim(shape, B) -> Optional[int]:
+    for d, n in enumerate(shape):
+        if n == B:
+            return d
+    return None

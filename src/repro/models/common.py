@@ -1,0 +1,358 @@
+"""Shared neural components (pure-functional, raw JAX — no flax).
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; layer stacks carry a leading L axis
+  and are consumed by `jax.lax.scan` so the lowered HLO stays O(1) in depth
+  (essential for the 512-device dry-run compiles on one CPU core).
+* activations default to bf16-friendly math: norms/softmax accumulate in f32.
+* attention dispatches through repro.kernels.attention.ops so the same model
+  code runs the Pallas TPU kernel (interpret=True on CPU for tests) or the
+  jnp reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (B, S, H, Dh); positions: (B, S) or (S,)."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta), jnp.float32)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def activation(name: str, x: Array) -> Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":  # squared ReLU (Primer / nemotron-4)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# attention dispatch (kernel or reference)
+# ---------------------------------------------------------------------------
+def attention(q: Array, k: Array, v: Array, *, causal: bool,
+              window: Optional[int] = None, q_offset: int | Array = 0,
+              use_kernel: str = "auto") -> Array:
+    """Multi-head attention with GQA broadcast.
+
+    q: (B, Sq, Hq, Dh); k/v: (B, Sk, Hkv, Dh); Hq % Hkv == 0.
+    `window`: sliding-window size (None = full);  `q_offset`: absolute
+    position of q[0] relative to k[0] (decode: Sk - Sq).
+    """
+    from ..kernels.attention import ops as attn_ops
+    return attn_ops.attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, impl=use_kernel)
+
+
+def repeat_kv(k: Array, n_rep: int) -> Array:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (params + apply, stackable)
+# ---------------------------------------------------------------------------
+def attn_params(key, d_model: int, n_heads: int, n_kv: int, d_head: int, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * d_head, dtype),
+        "wk": dense_init(k2, d_model, n_kv * d_head, dtype),
+        "wv": dense_init(k3, d_model, n_kv * d_head, dtype),
+        "wo": dense_init(k4, n_heads * d_head, d_model, dtype,
+                         scale=1.0 / math.sqrt(n_heads * d_head)),
+    }
+
+
+def attn_apply(p: Params, x: Array, *, n_heads: int, n_kv: int, d_head: int,
+               causal: bool = True, window: Optional[int] = None,
+               rope_theta: float = 10000.0, positions: Optional[Array] = None,
+               kv_cache: Optional[Tuple[Array, Array]] = None,
+               cache_len: Optional[Array] = None,
+               x_kv: Optional[Array] = None) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
+    """Returns (out, new_kv) where new_kv is (k, v) if a cache was provided
+    or requested.  Decode mode: x is (B, 1, D), kv_cache is (B, Skv, Hkv, Dh)
+    pre-allocated; cache_len gives the number of valid entries."""
+    B, Sq, D = x.shape
+    src = x if x_kv is None else x_kv
+    q = (x @ p["wq"]).reshape(B, Sq, n_heads, d_head)
+    k = (src @ p["wk"]).reshape(B, src.shape[1], n_kv, d_head)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], n_kv, d_head)
+
+    if positions is None:
+        positions = jnp.arange(Sq)
+    if rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions if x_kv is None else jnp.arange(src.shape[1]),
+                       rope_theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        # decode: write the new kv at cache_len, attend over the full cache
+        idx = cache_len if cache_len is not None else ck.shape[1] - Sq
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), idx, axis=1)
+        k_full, v_full = ck, cv
+        q_off = idx
+        new_cache = (ck, cv)
+    else:
+        k_full, v_full = k, v
+        q_off = 0
+        new_cache = None
+
+    n_rep = n_heads // n_kv
+    out = attention(q, repeat_kv(k_full, n_rep), repeat_kv(v_full, n_rep),
+                    causal=causal, window=window, q_offset=q_off)
+    out = out.reshape(B, Sq, n_heads * d_head) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+def mlp_params(key, d_model: int, d_ff: int, dtype, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, d_model, d_ff, dtype),
+         "w_down": dense_init(k2, d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: Array, act: str = "silu") -> Array:
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        up = activation(act, x @ p["w_gate"]) * up
+    else:
+        up = activation(act, up)
+    return up @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, one-hot dispatch => all-to-all under sharding)
+# ---------------------------------------------------------------------------
+def moe_params(key, d_model: int, d_ff: int, n_experts: int, dtype,
+               n_shared: int = 0, d_ff_shared: int | None = None):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(k1, d_model, n_experts, jnp.float32),
+        "w_gate": (jax.random.normal(k2, (n_experts, d_model, d_ff), jnp.float32)
+                   / math.sqrt(d_model)).astype(dtype),
+        "w_up": (jax.random.normal(k3, (n_experts, d_model, d_ff), jnp.float32)
+                 / math.sqrt(d_model)).astype(dtype),
+        "w_down": (jax.random.normal(k4, (n_experts, d_ff, d_model), jnp.float32)
+                   / math.sqrt(d_ff)).astype(dtype),
+    }
+    if n_shared:
+        p["shared"] = mlp_params(k5, d_model, d_ff_shared or d_ff * n_shared, dtype)
+    return p
+
+
+def moe_apply(p: Params, x: Array, *, top_k: int, act: str = "silu",
+              capacity_factor: float = 1.25) -> Array:
+    """Token-choice top-k routing with dense one-hot dispatch.
+
+    (B, S, D) -> (B, S, D).  The einsum dispatch/combine pattern lowers to
+    all-to-all when experts are sharded over the model axis (EP).
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+    logits = (x.astype(jnp.float32) @ p["router"])          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (B,S,k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # combine weights: (B,S,E) sparse-as-dense
+    combine = jnp.zeros((B, S, E), jnp.float32)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (B,S,k,E)
+    combine = (onehot * gate_vals[..., None]).sum(2)         # (B,S,E)
+    mask = (combine > 0).astype(x.dtype)
+    # dispatch every token to its experts (capacity-free dense form: fine for
+    # dry-run/smoke; production capacity variant lives in moe_capacity_apply)
+    xe = jnp.einsum("bse,bsd->ebsd", mask, x)                # (E,B,S,D)
+    h = jnp.einsum("ebsd,edf->ebsf", xe, p["w_gate"])
+    h = activation(act, h) * jnp.einsum("ebsd,edf->ebsf", xe, p["w_up"])
+    y = jnp.einsum("ebsf,efd->ebsd", h, p["w_down"])
+    out = jnp.einsum("ebsd,bse->bsd", y, combine.astype(x.dtype))
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, act)
+    return out
+
+
+def moe_capacity_apply(p: Params, x: Array, *, top_k: int, act: str = "silu",
+                       capacity_factor: float = 1.25) -> Array:
+    """GShard-style capacity-bounded dispatch (production path).
+
+    Tokens beyond an expert's capacity are dropped (residual passes through).
+    Dispatch/combine are (tokens x experts x capacity) one-hot einsums —
+    the standard TPU MoE formulation that lowers to all-to-alls.
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+    N = B * S
+    cap = max(1, int(capacity_factor * N * top_k / E))
+    xt = x.reshape(N, D)
+    logits = xt.astype(jnp.float32) @ p["router"]            # (N,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (N,k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    dispatch = jnp.zeros((N, E, cap), jnp.bool_)
+    combine = jnp.zeros((N, E, cap), jnp.float32)
+    for kk in range(top_k):
+        e = gate_idx[:, kk]                                   # (N,)
+        oh = jax.nn.one_hot(e, E, dtype=jnp.int32)            # (N,E)
+        pos = jnp.cumsum(oh, axis=0) * oh - 1                 # slot per token
+        slot = jnp.take_along_axis(pos, e[:, None], axis=1)[:, 0]
+        ok = slot < cap
+        slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32) * ok[:, None]
+        d_k = oh.astype(jnp.float32)[:, :, None] * slot_oh[:, None, :]
+        dispatch = dispatch | (d_k > 0)
+        combine = combine + d_k * gate_vals[:, kk][:, None, None]
+
+    xe = jnp.einsum("nec,nd->ecd", dispatch.astype(x.dtype), xt)  # (E,cap,D)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    h = activation(act, h) * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out = jnp.einsum("nec,ecd->nd", combine.astype(x.dtype), y).reshape(B, S, D)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, act)
+    return out
+
+
+def moe_sorted_apply(p: Params, x: Array, *, top_k: int, act: str = "silu",
+                     capacity_factor: float = 1.25) -> Array:
+    """Sort-based dispatch (production path for the large MoE configs).
+
+    One-hot dispatch einsums cost O(N * E * cap * D) MXU flops — for the
+    128-expert assigned configs that dwarfs the expert compute itself and
+    would poison the roofline's MODEL_FLOPS/HLO_FLOPs ratio.  Sorting
+    replaces them with O(Nk log Nk) integer work + gathers/scatters:
+
+      1. flatten (token, k) assignments; stable-sort by expert id
+      2. position-in-expert via a run-length prefix (drop beyond capacity)
+      3. scatter tokens into the (E, cap, D) expert buffer
+      4. batched per-expert matmuls  (E, cap, D) x (E, D, F)  — the only
+         MXU work, equal to the active-parameter flops
+      5. gather back + gate-weighted combine.
+
+    Under EP the buffer is sharded over experts on the model axis; the
+    scatter/gather lower to all-to-alls (same traffic as GShard dispatch).
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+    N = B * S
+    NK = N * top_k
+    cap = max(1, int(capacity_factor * N * top_k / E))
+    xt = x.reshape(N, D)
+    logits = xt.astype(jnp.float32) @ p["router"]            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (N, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    eid = gate_idx.reshape(NK)                               # flat expert ids
+    tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), top_k)  # owning token
+    gv = gate_vals.reshape(NK)
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tok_s, gv_s = eid[order], tok[order], gv[order]
+    # position within expert run: i - start_of_run(expert)
+    counts = jnp.bincount(eid_s, length=E)
+    starts = jnp.cumsum(counts) - counts                     # (E,)
+    pos = jnp.arange(NK, dtype=jnp.int32) - starts[eid_s].astype(jnp.int32)
+    valid = pos < cap
+    slot = jnp.where(valid, eid_s * cap + pos, E * cap)      # overflow -> dropped
+
+    buf = jnp.zeros((E * cap + 1, D), x.dtype)
+    buf = buf.at[slot].set(xt[tok_s], mode="drop")
+    xe = buf[:-1].reshape(E, cap, D)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    h = activation(act, h) * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * cap, D)
+
+    contrib = jnp.where(valid, gv_s, 0.0).astype(x.dtype)[:, None] * \
+        y[jnp.minimum(slot, E * cap - 1)]
+    out = jnp.zeros((N, D), x.dtype).at[tok_s].add(contrib, mode="drop")
+    out = out.reshape(B, S, D)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, act)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def causal_lm_loss(logits: Array, labels: Array, ignore: int = -1) -> Array:
+    """Mean xent over valid positions; logits (B,S,V), labels (B,S)."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    tgt = jnp.take_along_axis(logits32, jnp.maximum(labels, 0)[..., None],
+                              axis=-1)[..., 0]
+    nll = lse - tgt
+    valid = (labels != ignore).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

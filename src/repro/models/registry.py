@@ -1,0 +1,215 @@
+"""Uniform architecture interface over every model family in the zoo.
+
+An `Arch` wraps a family config (transformer / rwkv / zamba / encdec) behind
+one API the launcher, dry-run, trainer and server all consume:
+
+    init(key)                  -> params           (never called at full size
+                                                    on the dry-run host)
+    param_shapes()             -> ShapeDtypeStruct pytree  (eval_shape)
+    loss(params, batch)        -> scalar           (causal-LM xent)
+    prefill(params, batch)     -> (logits_last, caches)
+    decode(params, batch)      -> (logits, caches) one-token serve step
+    cache_shapes(B, S)         -> ShapeDtypeStruct pytree
+    input_specs(shape)         -> {name: ShapeDtypeStruct} for lowering
+
+`input_mode` follows the assignment: "tokens" for LM archs, "embeddings" for
+the audio/VLM entries whose modality frontend is a stub (`input_specs`
+supplies precomputed frame/patch embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import transformer, zoo
+from .transformer import TransformerCfg
+from .zoo import RWKV6LMCfg, Zamba2Cfg, EncDecCfg
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                   # transformer | rwkv | zamba | encdec
+    cfg: Any
+    input_mode: str = "tokens"    # tokens | embeddings (stub frontend)
+    subquadratic: bool = False    # eligible for long_500k
+    supports_decode: bool = True
+    frontend_ctx: int = 0         # encoder frames (encdec) / patch tokens (vlm)
+    gddim_applicable: bool = True # can act as eps-regressor for diffusion-LM
+    notes: str = ""
+
+    def shape_applicable(self, shape: str) -> Tuple[bool, str]:
+        cell = SHAPES[shape]
+        if cell.kind == "decode" and not self.supports_decode:
+            return False, "encoder-only arch has no decode step"
+        if shape == "long_500k" and not self.subquadratic:
+            return False, "pure full-attention arch; 500k ctx needs sub-quadratic layers (DESIGN.md §5)"
+        return True, ""
+
+
+class Arch:
+    def __init__(self, spec: ArchSpec):
+        self.spec = spec
+        self.cfg = spec.cfg
+
+    # ---- params ----------------------------------------------------------------
+    def init(self, key) -> Any:
+        f = {
+            "transformer": lambda: transformer.init_params(key, self.cfg),
+            "rwkv": lambda: zoo.rwkv_init(key, self.cfg),
+            "zamba": lambda: zoo.zamba_init(key, self.cfg),
+            "encdec": lambda: zoo.encdec_init(key, self.cfg),
+        }[self.spec.family]
+        return f()
+
+    def param_shapes(self) -> Any:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_count(self) -> int:
+        shapes = self.param_shapes()
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+    # ---- training --------------------------------------------------------------
+    def loss(self, params: Any, batch: Dict[str, Array]) -> Array:
+        fam = self.spec.family
+        labels = batch["labels"]
+        if fam == "transformer":
+            logits, _ = transformer.forward(
+                params, self.cfg, batch.get("tokens"),
+                embeddings=batch.get("embeddings"))
+        elif fam == "rwkv":
+            logits, _ = zoo.rwkv_forward(params, self.cfg, batch.get("tokens"),
+                                         embeddings=batch.get("embeddings"))
+        elif fam == "zamba":
+            logits, _ = zoo.zamba_forward(params, self.cfg, batch.get("tokens"),
+                                          embeddings=batch.get("embeddings"))
+        elif fam == "encdec":
+            memory = zoo.encode(params, self.cfg, batch["frames"])
+            logits, _ = zoo.decode_forward(params, self.cfg, batch["tokens"], memory)
+        else:
+            raise ValueError(fam)
+        from .common import causal_lm_loss
+        return causal_lm_loss(logits, labels)
+
+    # ---- serving ----------------------------------------------------------------
+    def cache_shapes(self, batch: int, max_len: int) -> Any:
+        fam = self.spec.family
+        if fam == "transformer":
+            return jax.eval_shape(lambda: transformer.init_cache(self.cfg, batch, max_len))
+        if fam == "rwkv":
+            return jax.eval_shape(lambda: zoo.rwkv_init_cache(self.cfg, batch))
+        if fam == "zamba":
+            return jax.eval_shape(lambda: zoo.zamba_init_cache(self.cfg, batch, max_len))
+        if fam == "encdec":
+            return jax.eval_shape(lambda: zoo.encdec_init_cache(self.cfg, batch, max_len))
+        raise ValueError(fam)
+
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shapes(batch, max_len))
+
+    def decode(self, params: Any, token: Array, caches: Any, cache_len: Array,
+               memory: Optional[Array] = None) -> Tuple[Array, Any]:
+        """One-token serve step.  token: (B, 1) int32."""
+        fam = self.spec.family
+        if fam == "transformer":
+            logits, caches = transformer.forward(params, self.cfg, token,
+                                                 caches=caches, cache_len=cache_len)
+        elif fam == "rwkv":
+            logits, caches = zoo.rwkv_forward(params, self.cfg, token, caches=caches)
+        elif fam == "zamba":
+            logits, caches = zoo.zamba_forward(params, self.cfg, token,
+                                               caches=caches, cache_len=cache_len)
+        elif fam == "encdec":
+            logits, caches = zoo.decode_forward(params, self.cfg, token, memory,
+                                                caches=caches, cache_len=cache_len)
+        else:
+            raise ValueError(fam)
+        return logits[:, -1], caches
+
+    def prefill(self, params: Any, batch: Dict[str, Array], max_len: int
+                ) -> Tuple[Array, Any]:
+        fam = self.spec.family
+        tokens = batch.get("tokens")
+        B = (tokens if tokens is not None else batch["embeddings"]).shape[0]
+        caches = self.init_cache(B, max_len)
+        if fam == "transformer":
+            logits, caches = transformer.forward(
+                params, self.cfg, tokens, embeddings=batch.get("embeddings"),
+                caches=caches, cache_len=jnp.int32(0))
+        elif fam == "rwkv":
+            logits, caches = zoo.rwkv_forward(params, self.cfg, tokens,
+                                              embeddings=batch.get("embeddings"),
+                                              caches=caches)
+        elif fam == "zamba":
+            logits, caches = zoo.zamba_forward(params, self.cfg, tokens,
+                                               embeddings=batch.get("embeddings"),
+                                               caches=caches, cache_len=jnp.int32(0))
+        elif fam == "encdec":
+            memory = zoo.encode(params, self.cfg, batch["frames"])
+            logits, caches = zoo.decode_forward(params, self.cfg, tokens, memory,
+                                                caches=caches, cache_len=jnp.int32(0))
+        else:
+            raise ValueError(fam)
+        return logits[:, -1], caches
+
+    # ---- lowering inputs ----------------------------------------------------------
+    def input_specs(self, shape: str) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every input of the step this shape
+        lowers (weak-type-correct, shardable, no device allocation)."""
+        cell = SHAPES[shape]
+        B, S = cell.global_batch, cell.seq_len
+        d = getattr(self.cfg, "d_model")
+        specs: Dict[str, Any] = {}
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cell.kind == "train":
+            if self.spec.input_mode == "embeddings":
+                specs["embeddings"] = jax.ShapeDtypeStruct((B, S, d), jnp.float32)
+            else:
+                specs["tokens"] = tok
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            if self.spec.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, self.spec.frontend_ctx, d), jnp.float32)
+                specs["tokens"] = tok
+                specs.pop("embeddings", None)
+        elif cell.kind == "prefill":
+            if self.spec.input_mode == "embeddings" and self.spec.family != "encdec":
+                specs["embeddings"] = jax.ShapeDtypeStruct((B, S, d), jnp.float32)
+            else:
+                specs["tokens"] = tok
+            if self.spec.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, self.spec.frontend_ctx, d), jnp.float32)
+        else:  # decode: one token against a seq_len cache
+            specs["token"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            specs["caches"] = self.cache_shapes(B, S)
+            specs["cache_len"] = jax.ShapeDtypeStruct((), jnp.int32)
+            if self.spec.family == "encdec":
+                specs["memory"] = jax.ShapeDtypeStruct(
+                    (B, self.spec.frontend_ctx, d), jnp.float32)
+        return specs

@@ -1,0 +1,252 @@
+"""RWKV6 "Finch" token mixing (Peng et al. 2024, arXiv:2404.05892).
+
+Attention-free linear recurrence with *data-dependent* per-channel decay:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (per head, S: (d_k, d_v))
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with w_t = exp(-exp(d_t)) produced by a token-shifted LoRA, and the "bonus"
+u giving the current token a decay-free path.  O(1)/token decode state makes
+rwkv6-7b a `long_500k` architecture in the assignment.
+
+Chunked execution (the training path) mirrors the SSD trick in ssm.py but
+with per-*channel* decay: within chunks of length Q the pairwise decay
+tensor D[t, s, d] = B_t[d] - A_s[d] (A = inclusive, B = exclusive cumsum of
+log w) is materialized and masked *before* exponentiation, so every exponent
+is <= 0 — numerically exact with no decay clamping; chunk boundary states
+propagate through a `lax.scan`.  `rwkv6_sequential` is the per-token oracle
+(tests + decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import Params
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Cfg:
+    d_model: int
+    n_heads: int                 # head size = d_model // n_heads
+    d_ff: int
+    lora_decay: int = 64         # decay LoRA rank
+    lora_mix: int = 32           # token-shift mix LoRA rank
+    chunk: int = 16              # intra-chunk tile (exponent-safe, see module doc)
+    dtype: Any = jnp.float32
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# core recurrence
+# ---------------------------------------------------------------------------
+def rwkv6_chunked(r: Array, k: Array, v: Array, w_log: Array, u: Array,
+                  chunk: int, state0: Optional[Array] = None
+                  ) -> Tuple[Array, Array]:
+    """r/k: (B, S, H, Dk); v: (B, S, H, Dv); w_log = log w_t (<= 0) same shape
+    as k; u: (H, Dk).  Returns (y (B,S,H,Dv), final_state (B,H,Dk,Dv))."""
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+
+    rc = r.reshape(b, nc, chunk, h, dk).astype(f32)
+    kc = k.reshape(b, nc, chunk, h, dk).astype(f32)
+    vc = v.reshape(b, nc, chunk, h, dv).astype(f32)
+    wc = w_log.reshape(b, nc, chunk, h, dk).astype(f32)
+
+    A = jnp.cumsum(wc, axis=2)                     # inclusive: A_t = sum_{j<=t} log w_j
+    Bx = A - wc                                    # exclusive: B_t = A_{t-1}
+    A_last = A[:, :, -1]                           # (b, nc, h, dk)
+
+    # ---- intra-chunk: y_t = sum_{s<t} (r_t . exp(B_t - A_s) . k_s) v_s
+    #      + (r_t . u . k_t) v_t   — pairwise decay masked BEFORE exp.
+    D = Bx[:, :, :, None] - A[:, :, None, :]       # (b, nc, t, s, h, dk)
+    t_idx = jnp.arange(chunk)
+    strict = (t_idx[:, None] > t_idx[None, :])     # s < t
+    D = jnp.where(strict[None, None, :, :, None, None], D, -jnp.inf)
+    scores = jnp.einsum("bcthd,bctshd,bcshd->bcths", rc, jnp.exp(D), kc)
+    diag = jnp.einsum("bcthd,hd,bcthd->bcth", rc, u.astype(f32), kc)
+    scores = scores + diag[..., None] * jnp.eye(chunk, dtype=f32)[:, None, :]
+    y = jnp.einsum("bcths,bcshd->bcthd", scores, vc)
+
+    # ---- chunk summary: S_out = diag(exp(A_Q)) S_in + sum_s exp(A_Q - A_s) k_s v_s
+    decay_out = jnp.exp(A_last[:, :, None] - A)    # (b, nc, t, h, dk), exponent <= 0
+    chunk_states = jnp.einsum("bcshd,bcshd,bcshe->bchde", decay_out, kc, vc)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), f32)
+
+    def scan_fn(S, xs):
+        st, dlast = xs                             # (b,h,dk,dv), (b,h,dk)
+        S_new = jnp.exp(dlast)[..., None] * S + st
+        return S_new, S                            # emit state *entering* chunk
+
+    final, S_prev = jax.lax.scan(
+        scan_fn, state0.astype(f32),
+        (chunk_states.transpose(1, 0, 2, 3, 4), A_last.transpose(1, 0, 2, 3)))
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)       # (b, nc, h, dk, dv)
+
+    # ---- entering state's contribution: y_t += (r_t . exp(B_t)) @ S_in
+    y = y + jnp.einsum("bcthd,bcthd,bchde->bcthe", rc, jnp.exp(Bx), S_prev)
+    return y.reshape(b, s, h, dv).astype(r.dtype), final
+
+
+def rwkv6_sequential(r, k, v, w_log, u, state0=None):
+    """Per-token oracle for rwkv6_chunked (tests + decode)."""
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    S0 = jnp.zeros((b, h, dk, dv), f32) if state0 is None else state0.astype(f32)
+
+    def step(S, t):
+        rt = r[:, t].astype(f32)
+        kt = k[:, t].astype(f32)
+        vt = v[:, t].astype(f32)
+        wt = jnp.exp(w_log[:, t].astype(f32))
+        y = jnp.einsum("bhd,bhde->bhe", rt, S) + \
+            jnp.einsum("bhd,hd,bhd,bhe->bhe", rt, u.astype(f32), kt, vt)
+        S = wt[..., None] * S + jnp.einsum("bhd,bhe->bhde", kt, vt)
+        return S, y
+
+    S, ys = jax.lax.scan(step, S0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), S
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _lora(key, d: int, rank: int, d_out: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"a": common.dense_init(k1, d, rank, dtype),
+            "b": (jax.random.normal(k2, (rank, d_out), jnp.float32) * 0.01).astype(dtype)}
+
+
+def _lora_apply(p, x):
+    return jnp.tanh(x @ p["a"]) @ p["b"]
+
+
+def time_mix_params(key, cfg: RWKV6Cfg) -> Params:
+    ks = jax.random.split(key, 10)
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(cfg.dtype),
+        "mix_lora": _lora(ks[1], d, cfg.lora_mix, 5 * d, cfg.dtype),
+        "wr": common.dense_init(ks[2], d, d, cfg.dtype),
+        "wk": common.dense_init(ks[3], d, d, cfg.dtype),
+        "wv": common.dense_init(ks[4], d, d, cfg.dtype),
+        "wg": common.dense_init(ks[5], d, d, cfg.dtype),
+        "wo": common.dense_init(ks[6], d, d, cfg.dtype),
+        "decay_base": jnp.full((d,), -4.0, jnp.float32),
+        "decay_lora": _lora(ks[7], d, cfg.lora_decay, d, cfg.dtype),
+        "u": (jax.random.normal(ks[8], (h, cfg.d_head), jnp.float32) * 0.5),
+        "ln_out": jnp.ones((d,), jnp.float32),
+    }
+
+
+def time_mix_apply(p: Params, cfg: RWKV6Cfg, x: Array,
+                   cache: Optional[Tuple[Array, Array]] = None
+                   ) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
+    """x: (B, S, D).  cache = (x_prev (B, 1, D), state (B, H, Dk, Dv))."""
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+    x_prev = cache[0] if cache is not None else jnp.zeros_like(x[:, :1])
+    xs = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)  # token shift
+    dx = xs - x
+    # data-dependent five-way mix (r, k, v, g, w) — Finch's dynamic lerp
+    mix = p["mu"][:, None, None] + _lora_apply(p["mix_lora"], x).reshape(B, S, 5, D).transpose(2, 0, 1, 3)
+    xr, xk, xv, xg, xw = [x + mix[i] * dx for i in range(5)]
+
+    r = (xr @ p["wr"]).reshape(B, S, H, Dh)
+    k = (xk @ p["wk"]).reshape(B, S, H, Dh)
+    v = (xv @ p["wv"]).reshape(B, S, H, Dh)
+    g = jax.nn.silu(xg @ p["wg"])
+    d_t = p["decay_base"][None, None] + _lora_apply(p["decay_lora"], xw).astype(jnp.float32)
+    w_log = -jnp.exp(d_t).reshape(B, S, H, Dh)     # log w_t = -exp(d_t) <= 0
+
+    if cache is not None:
+        y, state = rwkv6_sequential(r, k, v, w_log, p["u"], state0=cache[1])
+        new_cache = (x[:, -1:], state)
+    else:
+        pad = (-S) % cfg.chunk
+        if pad:
+            r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+            w_log = jnp.pad(w_log, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, _ = rwkv6_chunked(r, k, v, w_log, p["u"], cfg.chunk)
+        y = y[:, :S]
+        new_cache = None
+
+    # per-head group norm then output gate
+    y = y.reshape(B, S, H, Dh)
+    y32 = y.astype(jnp.float32)
+    mu = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    y = ((y32 - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, D)
+    y = (y * p["ln_out"]).astype(x.dtype) * g
+    return y @ p["wo"], new_cache
+
+
+def channel_mix_params(key, cfg: RWKV6Cfg) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "mu": jax.random.uniform(k1, (2, d), jnp.float32).astype(cfg.dtype),
+        "wk": common.dense_init(k2, d, cfg.d_ff, cfg.dtype),
+        "wv": common.dense_init(k3, cfg.d_ff, d, cfg.dtype),
+        "wr": common.dense_init(k4, d, d, cfg.dtype),
+    }
+
+
+def channel_mix_apply(p: Params, x: Array,
+                      x_prev: Optional[Array] = None
+                      ) -> Tuple[Array, Optional[Array]]:
+    B, S, D = x.shape
+    xp = x_prev if x_prev is not None else jnp.zeros_like(x[:, :1])
+    xs = jnp.concatenate([xp.astype(x.dtype), x[:, :-1]], axis=1)
+    dx = xs - x
+    xk = x + p["mu"][0] * dx
+    xr = x + p["mu"][1] * dx
+    kk = jax.nn.relu(xk @ p["wk"])
+    out = (kk * kk) @ p["wv"]
+    return jax.nn.sigmoid(xr @ p["wr"]) * out, (x[:, -1:] if x_prev is not None else None)
+
+
+def layer_params(key, cfg: RWKV6Cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "tmix": time_mix_params(k1, cfg),
+        "cmix": channel_mix_params(k2, cfg),
+    }
+
+
+def layer_apply(p: Params, cfg: RWKV6Cfg, x: Array, cache=None):
+    """cache = (x_prev_t, state, x_prev_c) for decode."""
+    from ..distributed.sharding import constrain_acts
+    tc = None if cache is None else (cache[0], cache[1])
+    h, new_t = time_mix_apply(p["tmix"], cfg, common.rms_norm(x, p["ln1"]), cache=tc)
+    x = constrain_acts(x + h)
+    cp = None if cache is None else cache[2]
+    h, new_c = channel_mix_apply(p["cmix"], common.rms_norm(x, p["ln2"]), x_prev=cp)
+    x = constrain_acts(x + h)
+    new_cache = None if cache is None else (new_t[0], new_t[1], new_c)
+    return x, new_cache
+
+
+def init_layer_cache(cfg: RWKV6Cfg, batch: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    return (jnp.zeros((batch, 1, cfg.d_model), dtype),
+            jnp.zeros((batch, cfg.n_heads, cfg.d_head, cfg.d_head), jnp.float32),
+            jnp.zeros((batch, 1, cfg.d_model), dtype))

@@ -1,0 +1,208 @@
+"""Score networks for the diffusion side of the framework.
+
+The paper trains UNets on CIFAR10; on this CPU container we train (and
+dry-run) two TPU-idiomatic score families instead:
+
+  * `mlp`  — small residual MLP for low-dimensional toy data (the paper's
+             Fig. 4 mixture experiments; trained end-to-end in examples/).
+  * `dit`  — DiT-style patchified transformer with adaLN-zero time
+             conditioning (Peebles & Xie 2023) — the MXU-native analogue of
+             the paper's UNet for image-shaped states, and the score model
+             the multi-pod diffusion dry-run lowers.
+
+Both consume the *state* u (CLD: (B, 2, *data); VPSDE/BDM: (B, *data)) and a
+continuous time t (B,), and emit an eps prediction of the same shape as u —
+i.e. both channels for CLD, the paper's Eq. 80 parameterization (the crucial
+difference from Dockhorn et al.'s v-channel-only net).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import Params
+
+Array = jax.Array
+
+
+def timestep_embedding(t: Array, dim: int, max_period: float = 1e4) -> Array:
+    """Sinusoidal features of continuous t in [0, 1]; (B,) -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None] * 1000.0
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Residual MLP (toy data)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLPScoreCfg:
+    state_shape: Tuple[int, ...]       # full per-example state shape (e.g. (2,) or (2, 2))
+    hidden: int = 256
+    n_blocks: int = 4
+    t_dim: int = 64
+    dtype: Any = jnp.float32
+
+    @property
+    def state_dim(self) -> int:
+        return int(np.prod(self.state_shape))
+
+
+def mlp_score_init(key, cfg: MLPScoreCfg) -> Params:
+    ks = jax.random.split(key, 2 * cfg.n_blocks + 3)
+    p = {
+        "w_in": common.dense_init(ks[0], cfg.state_dim + cfg.t_dim, cfg.hidden, cfg.dtype),
+        "b_in": jnp.zeros((cfg.hidden,), cfg.dtype),
+        "w_out": (jax.random.normal(ks[1], (cfg.hidden, cfg.state_dim), jnp.float32)
+                  * 1e-3).astype(cfg.dtype),
+        "b_out": jnp.zeros((cfg.state_dim,), cfg.dtype),
+        "blocks": [],
+    }
+    blocks = []
+    for i in range(cfg.n_blocks):
+        blocks.append({
+            "w1": common.dense_init(ks[2 + 2 * i], cfg.hidden + cfg.t_dim, cfg.hidden, cfg.dtype),
+            "b1": jnp.zeros((cfg.hidden,), cfg.dtype),
+            "w2": common.dense_init(ks[3 + 2 * i], cfg.hidden, cfg.hidden, cfg.dtype),
+            "b2": jnp.zeros((cfg.hidden,), cfg.dtype),
+        })
+    p["blocks"] = blocks
+    return p
+
+
+def mlp_score_apply(p: Params, cfg: MLPScoreCfg, u: Array, t: Array) -> Array:
+    B = u.shape[0]
+    te = timestep_embedding(t, cfg.t_dim).astype(u.dtype)
+    h = jnp.concatenate([u.reshape(B, -1), te], axis=-1)
+    h = jax.nn.silu(h @ p["w_in"] + p["b_in"])
+    for blk in p["blocks"]:
+        z = jnp.concatenate([h, te], axis=-1)
+        z = jax.nn.silu(z @ blk["w1"] + blk["b1"])
+        h = h + z @ blk["w2"] + blk["b2"]
+    out = h @ p["w_out"] + p["b_out"]
+    return out.reshape(u.shape)
+
+
+# ---------------------------------------------------------------------------
+# DiT (image-shaped states)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DiTCfg:
+    img_size: int = 32
+    channels: int = 3                  # data channels (CLD doubles this via state_mult)
+    state_mult: int = 1                # 2 for CLD (x, v stacked on channel axis)
+    patch: int = 4
+    d_model: int = 384
+    n_layers: int = 12
+    n_heads: int = 6
+    dtype: Any = jnp.float32
+    remat: bool = True
+
+    @property
+    def n_tokens(self) -> int:
+        return (self.img_size // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels * self.state_mult
+
+    def param_count(self) -> int:
+        d = self.d_model
+        per = 4 * d * d + 8 * d * d + 6 * d * d  # attn + mlp(4x) + adaLN
+        return self.n_layers * per + 2 * self.patch_dim * d + self.n_tokens * d
+
+
+def dit_init(key, cfg: DiTCfg) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+
+    def layer(k):
+        ka, k1, k2, k3 = jax.random.split(k, 4)
+        return {
+            "attn": common.attn_params(ka, d, cfg.n_heads, cfg.n_heads,
+                                       d // cfg.n_heads, cfg.dtype),
+            "mlp": common.mlp_params(k1, d, 4 * d, cfg.dtype, gated=False),
+            # adaLN-zero: 6 modulation vectors from the time embedding
+            "ada_w": (jax.random.normal(k2, (d, 6 * d), jnp.float32) * 1e-3).astype(cfg.dtype),
+            "ada_b": jnp.zeros((6 * d,), cfg.dtype),
+        }
+
+    return {
+        "patch_in": common.dense_init(ks[0], cfg.patch_dim, d, cfg.dtype),
+        "pos": (jax.random.normal(ks[1], (cfg.n_tokens, d), jnp.float32) * 0.02
+                ).astype(cfg.dtype),
+        "t_mlp1": common.dense_init(ks[2], 256, d, cfg.dtype),
+        "t_mlp2": common.dense_init(ks[3], d, d, cfg.dtype),
+        "layers": jax.vmap(layer)(jax.random.split(ks[4], cfg.n_layers)),
+        "final_ada_w": (jax.random.normal(ks[5], (d, 2 * d), jnp.float32) * 1e-3
+                        ).astype(cfg.dtype),
+        "final_ada_b": jnp.zeros((2 * d,), cfg.dtype),
+        "patch_out": jnp.zeros((d, cfg.patch_dim), cfg.dtype),  # zero-init output
+    }
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None]) + shift[:, None]
+
+
+def dit_apply(p: Params, cfg: DiTCfg, u: Array, t: Array) -> Array:
+    """u: (B, [state_mult,] H, W, C) -> eps of the same shape."""
+    in_shape = u.shape
+    B = u.shape[0]
+    P, n_side = cfg.patch, cfg.img_size // cfg.patch
+    cm = cfg.channels * cfg.state_mult
+    if len(in_shape) == 5:        # CLD state (B, state_mult, H, W, C)
+        x = u.transpose(0, 1, 4, 2, 3).reshape(B, cm, cfg.img_size, cfg.img_size)
+    else:                         # (B, H, W, C)
+        x = u.transpose(0, 3, 1, 2)
+    # patchify: (B, cm, H, W) -> (B, T, patch_dim)
+    x = x.reshape(B, cm, n_side, P, n_side, P).transpose(0, 2, 4, 1, 3, 5)
+    x = x.reshape(B, n_side * n_side, cm * P * P).astype(cfg.dtype)
+
+    h = x @ p["patch_in"] + p["pos"][None]
+    te = timestep_embedding(t, 256).astype(cfg.dtype)
+    te = jax.nn.silu(te @ p["t_mlp1"])
+    te = jax.nn.silu(te @ p["t_mlp2"])                         # (B, d)
+
+    ones = jnp.ones((h.shape[-1],), cfg.dtype)
+    zeros = jnp.zeros((h.shape[-1],), cfg.dtype)
+
+    def body(h, lp):
+        mod = jax.nn.silu(te) @ lp["ada_w"] + lp["ada_b"]
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        z = common.layer_norm(h, ones, zeros)
+        z = _modulate(z, sh1, sc1)
+        a, _ = common.attn_apply(lp["attn"], z, n_heads=cfg.n_heads,
+                                 n_kv=cfg.n_heads, d_head=cfg.d_model // cfg.n_heads,
+                                 causal=False, rope_theta=0.0,
+                                 positions=jnp.arange(h.shape[1]))
+        from ..distributed.sharding import constrain_acts
+        h = constrain_acts(h + g1[:, None] * a)
+        z = common.layer_norm(h, ones, zeros)
+        z = _modulate(z, sh2, sc2)
+        h = constrain_acts(h + g2[:, None] * common.mlp_apply(lp["mlp"], z, act="gelu"))
+        return h, None
+
+    fn = body
+    if cfg.remat:
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(fn, h, p["layers"])
+
+    mod = jax.nn.silu(te) @ p["final_ada_w"] + p["final_ada_b"]
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    h = _modulate(common.layer_norm(h, ones, zeros), sh, sc)
+    out = h @ p["patch_out"]                                   # (B, T, patch_dim)
+    # unpatchify
+    out = out.reshape(B, n_side, n_side, cm, P, P).transpose(0, 3, 1, 4, 2, 5)
+    out = out.reshape(B, cm, cfg.img_size, cfg.img_size)
+    if len(in_shape) == 5:
+        out = out.reshape(B, cfg.state_mult, cfg.channels, cfg.img_size, cfg.img_size)
+        return out.transpose(0, 1, 3, 4, 2).astype(u.dtype)
+    return out.transpose(0, 2, 3, 1).astype(u.dtype)

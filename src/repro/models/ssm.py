@@ -1,0 +1,225 @@
+"""Mamba2 (SSD) mixer — the state-space block used by zamba2-2.7b.
+
+Implements the SSD (state-space dual) chunked algorithm of Mamba-2
+(Dao & Gu 2024, arXiv:2405.21060): within chunks of length Q the recurrence
+is computed in its quadratic "attention-like" form (MXU-friendly einsums with
+a causal decay mask), and chunk boundary states are propagated by a
+`lax.scan` — O(S Q) work, O(S/Q) sequential steps.  `ssd_sequential` is the
+per-token oracle used in tests.
+
+Decode carries (conv_state, ssm_state) and costs O(1)/token — this is what
+makes zamba2/rwkv the `long_500k` architectures in the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import Params
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Cfg:
+    d_model: int
+    d_state: int = 64
+    d_head: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 128
+    dtype: Any = jnp.float32
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.d_head
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def segsum(x: Array) -> Array:
+    """x: (..., Q) -> (..., Q, Q) with out[i, j] = sum_{k=j+1..i} x[k] (i>=j),
+    -inf above the diagonal."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int, state0: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """SSD recurrence  h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t;  y_t = C_t h_t.
+
+    x: (b, s, h, p);  dt: (b, s, h);  A: (h,) (negative);
+    B, C: (b, s, h, n)  (already head-expanded).
+    Returns (y (b,s,h,p), final_state (b,h,n,p)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    f32 = jnp.float32
+    xb = (x * dt[..., None]).astype(f32)                     # dt-weighted input
+    dA = (dt.astype(f32) * A.astype(f32))                    # (b, s, h)
+
+    def to_chunks(t, tail):
+        return t.reshape((b, nc, chunk) + tail)
+
+    xc = to_chunks(xb, (h, p))
+    Bc = to_chunks(B.astype(f32), (h, n))
+    Cc = to_chunks(C.astype(f32), (h, n))
+    dAc = to_chunks(dA, (h,)).transpose(0, 1, 3, 2)          # (b, nc, h, Q)
+    dA_cum = jnp.cumsum(dAc, axis=-1)                        # inclusive
+    dA_sum = dA_cum[..., -1]                                 # (b, nc, h)
+
+    # ---- intra-chunk (quadratic attention-like form)
+    L = jnp.exp(segsum(dAc))                                 # (b, nc, h, Q, Q)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Cc, Bc) * L
+    Y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, xc)
+
+    # ---- chunk summary states: sum_j exp(dA_sum - dA_cum[j]) B_j xb_j
+    decay_states = jnp.exp(dA_sum[..., None] - dA_cum)       # (b, nc, h, Q)
+    states = jnp.einsum("bchj,bcjhn,bcjhp->bchnp", decay_states, Bc, xc)
+
+    # ---- inter-chunk recurrence over nc chunks
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, p), f32)
+
+    def scan_fn(S, xs):
+        st, dsum = xs                                        # (b,h,n,p), (b,h)
+        S_new = jnp.exp(dsum)[..., None, None] * S + st
+        return S_new, S                                      # emit state *entering* chunk
+
+    final, S_prev = jax.lax.scan(
+        scan_fn, state0.astype(f32),
+        (states.transpose(1, 0, 2, 3, 4), dA_sum.transpose(1, 0, 2)))
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)                 # (b, nc, h, n, p)
+
+    # ---- contribution of the entering state to each position
+    state_decay = jnp.exp(dA_cum)                            # (b, nc, h, Q)
+    Y_off = jnp.einsum("bcihn,bchi,bchnp->bcihp", Cc, state_decay, S_prev)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_sequential(x, dt, A, B, C, state0=None):
+    """Per-token oracle for ssd_chunked (tests + decode reference)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    S = jnp.zeros((b, h, n, p), jnp.float32) if state0 is None else state0.astype(jnp.float32)
+
+    def step(S, t):
+        dA = jnp.exp(dt[:, t].astype(jnp.float32) * A)       # (b, h)
+        S = S * dA[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", B[:, t].astype(jnp.float32),
+            (x[:, t] * dt[:, t][..., None]).astype(jnp.float32))
+        y = jnp.einsum("bhn,bhnp->bhp", C[:, t].astype(jnp.float32), S)
+        return S, y
+
+    S, ys = jax.lax.scan(step, S, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), S
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def mamba2_params(key, cfg: Mamba2Cfg) -> Params:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.d_state + cfg.n_heads
+    dt_bias = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(k3, (cfg.n_heads,), jnp.float32,
+                                   math.log(1e-3), math.log(1e-1)))))
+    return {
+        "in_proj": common.dense_init(k1, cfg.d_model, d_in_proj, cfg.dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.d_conv, cfg.conv_dim), jnp.float32)
+                   / math.sqrt(cfg.d_conv)).astype(cfg.dtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), cfg.dtype),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads)),
+        "D": jnp.ones((cfg.n_heads,), jnp.float32),
+        "norm": jnp.zeros((cfg.d_inner,), cfg.dtype),
+        "out_proj": common.dense_init(k4, cfg.d_inner, cfg.d_model, cfg.dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 conv_state: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).  Returns (y, new_state)
+    where new_state is the last K-1 inputs (for decode)."""
+    K = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return y, new_state
+
+
+def mamba2_apply(p: Params, cfg: Mamba2Cfg, x: Array,
+                 cache: Optional[Tuple[Array, Array]] = None
+                 ) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
+    """x: (B, S, D).  cache = (conv_state (B, K-1, conv_dim),
+    ssm_state (B, H, N, P)) for decode (S == 1)."""
+    B_, S, D = x.shape
+    H, P, N = cfg.n_heads, cfg.d_head, cfg.d_state
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = jnp.split(
+        zxbcdt, [cfg.d_inner, cfg.d_inner + cfg.conv_dim], axis=-1)
+    conv_state = cache[0] if cache is not None else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bmat, Cmat = jnp.split(xBC, [cfg.d_inner, cfg.d_inner + N], axis=-1)
+    xs = xs.reshape(B_, S, H, P)
+    Bh = jnp.broadcast_to(Bmat[:, :, None, :], (B_, S, H, N))
+    Ch = jnp.broadcast_to(Cmat[:, :, None, :], (B_, S, H, N))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is not None:                                   # decode: one token
+        ssm_state = cache[1]
+        y, new_state = ssd_sequential(xs, dt, A, Bh, Ch, state0=ssm_state)
+        new_cache = (new_conv, new_state)
+    else:
+        pad = (-S) % cfg.chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, final = ssd_chunked(xs, dt, A, Bh, Ch, cfg.chunk)
+        y = y[:, :S]
+        xs = xs[:, :S]
+        new_cache = None
+
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, cfg.d_inner)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: Mamba2Cfg, batch: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    conv = jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype)
+    state = jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.d_head), jnp.float32)
+    return (conv, state)

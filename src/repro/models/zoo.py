@@ -1,0 +1,354 @@
+"""Full-model definitions for the non-decoder-only-transformer families.
+
+  * RWKV6LM      — rwkv6-7b (attention-free, O(1)/token decode state)
+  * Zamba2       — zamba2-2.7b (Mamba2 backbone + *shared* attention block
+                   applied every `share_every` layers, zamba-style)
+  * WhisperEncDec— whisper-base backbone (bidirectional encoder + causal
+                   decoder with cross-attention; conv frontend is a stub —
+                   `input_specs()` supplies precomputed frame embeddings)
+
+All follow the transformer.py conventions: params are nested dicts, layer
+stacks carry a leading L axis consumed by `lax.scan` (O(1)-in-depth HLO),
+decode uses functional caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common, rwkv6, ssm
+from .common import Params
+from .rwkv6 import RWKV6Cfg
+from .ssm import Mamba2Cfg
+
+Array = jax.Array
+
+
+# ===========================================================================
+# RWKV6 LM
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class RWKV6LMCfg:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    chunk: int = 16
+    dtype: Any = jnp.float32
+    remat: bool = True
+
+    @property
+    def block(self) -> RWKV6Cfg:
+        return RWKV6Cfg(d_model=self.d_model, n_heads=self.n_heads,
+                        d_ff=self.d_ff, chunk=self.chunk, dtype=self.dtype)
+
+    def param_count(self) -> int:
+        d = self.d_model
+        per_layer = 5 * d * d + d * (64 + 32) + (64 + 32) * 5 * d + 2 * d * self.d_ff + d * d
+        return self.vocab * d + self.n_layers * per_layer
+
+
+def rwkv_init(key, cfg: RWKV6LMCfg) -> Params:
+    ke, kl = jax.random.split(key)
+    keys = jax.random.split(kl, cfg.n_layers)
+    stack = jax.vmap(lambda k: rwkv6.layer_params(k, cfg.block))(keys)
+    return {
+        "embed": common.embed_init(ke, cfg.vocab, cfg.d_model, cfg.dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "layers": stack,
+    }
+
+
+def rwkv_forward(params: Params, cfg: RWKV6LMCfg, tokens: Array,
+                 embeddings: Optional[Array] = None,
+                 caches=None) -> Tuple[Array, Optional[Any]]:
+    x = params["embed"][tokens] if embeddings is None else embeddings.astype(cfg.dtype)
+
+    def body(x, xs):
+        layer_p, cache = xs if caches is not None else (xs[0], None)
+        x, new_cache = rwkv6.layer_apply(layer_p, cfg.block, x, cache=cache)
+        return x, new_cache
+
+    if caches is not None:
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    else:
+        fn = body
+        if cfg.remat:
+            fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, new_caches = jax.lax.scan(lambda c, xs: fn(c, (xs,)), x, params["layers"])
+    x = common.rms_norm(x, params["ln_f"])
+    return x @ params["embed"].T, new_caches
+
+
+def rwkv_init_cache(cfg: RWKV6LMCfg, batch: int):
+    one = rwkv6.init_layer_cache(cfg.block, batch, cfg.dtype)
+    return jax.tree.map(lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), one)
+
+
+# ===========================================================================
+# Zamba2-style hybrid: Mamba2 backbone + shared attention block
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class Zamba2Cfg:
+    name: str
+    n_layers: int                 # number of mamba2 layers
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int                     # shared-block FFN width
+    vocab: int
+    ssm_state: int = 64
+    share_every: int = 6          # shared attn block applied after every k mamba layers
+    chunk: int = 128
+    dtype: Any = jnp.float32
+    remat: bool = True
+
+    @property
+    def mamba(self) -> Mamba2Cfg:
+        return Mamba2Cfg(d_model=self.d_model, d_state=self.ssm_state,
+                         chunk=self.chunk, dtype=self.dtype)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // self.share_every
+
+    def param_count(self) -> int:
+        m = self.mamba
+        d_in_proj = 2 * m.d_inner + 2 * m.d_state + m.n_heads
+        per_mamba = self.d_model * d_in_proj + m.d_conv * m.conv_dim + m.d_inner * self.d_model
+        shared = self.d_model * self.d_head * (self.n_heads * 2 + self.n_kv_heads * 2) \
+            + 3 * self.d_model * self.d_ff
+        return self.vocab * self.d_model + self.n_layers * per_mamba + shared
+
+
+def zamba_init(key, cfg: Zamba2Cfg) -> Params:
+    ke, km, ks, kmm = jax.random.split(key, 4)
+    keys = jax.random.split(km, cfg.n_layers)
+
+    def one_layer(k):
+        return {"ln": jnp.zeros((cfg.d_model,), cfg.dtype),
+                "mamba": ssm.mamba2_params(k, cfg.mamba)}
+
+    stack = jax.vmap(one_layer)(keys)
+    shared = {
+        "ln_attn": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "ln_mlp": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "attn": common.attn_params(ks, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.d_head, cfg.dtype),
+        "mlp": common.mlp_params(kmm, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+    return {
+        "embed": common.embed_init(ke, cfg.vocab, cfg.d_model, cfg.dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "layers": stack,
+        "shared": shared,
+    }
+
+
+def _zamba_shared_block(shared: Params, cfg: Zamba2Cfg, x: Array, positions,
+                        kv_cache=None, cache_len=None):
+    h = common.rms_norm(x, shared["ln_attn"])
+    attn_out, new_kv = common.attn_apply(
+        shared["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        d_head=cfg.d_head, causal=True, rope_theta=10000.0,
+        positions=positions, kv_cache=kv_cache, cache_len=cache_len)
+    from ..distributed.sharding import constrain_acts
+    x = constrain_acts(x + attn_out)
+    h = common.rms_norm(x, shared["ln_mlp"])
+    return constrain_acts(x + common.mlp_apply(shared["mlp"], h)), new_kv
+
+
+def zamba_forward(params: Params, cfg: Zamba2Cfg, tokens: Array,
+                  embeddings: Optional[Array] = None,
+                  caches=None, cache_len=None):
+    """caches = (mamba_caches stacked (L, ...), kv_caches stacked (n_groups, ...))."""
+    x = params["embed"][tokens] if embeddings is None else embeddings.astype(cfg.dtype)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S) + (cache_len if cache_len is not None else 0)
+    k = cfg.share_every
+    G = cfg.n_groups
+    # reshape layer stack into (G, k, ...) groups
+    grouped = jax.tree.map(lambda t: t.reshape((G, k) + t.shape[1:]), params["layers"])
+    m_caches, kv_caches = (None, None) if caches is None else caches
+    if m_caches is not None:
+        m_caches = jax.tree.map(lambda t: t.reshape((G, k) + t.shape[1:]), m_caches)
+
+    def group_body(x, xs):
+        layers_g, mcache_g, kv_g = xs
+
+        def inner(x, ys):
+            lp, mc = ys
+            h, new_mc = ssm.mamba2_apply(lp["mamba"], cfg.mamba,
+                                         common.rms_norm(x, lp["ln"]), cache=mc)
+            from ..distributed.sharding import constrain_acts
+            return constrain_acts(x + h), new_mc
+
+        if mcache_g is None:
+            x, _ = jax.lax.scan(lambda c, ys: inner(c, (ys, None)), x, layers_g)
+            new_mc = None
+        else:
+            x, new_mc = jax.lax.scan(inner, x, (layers_g, mcache_g))
+        kv = None if kv_g is None else tuple(kv_g)
+        x, new_kv = _zamba_shared_block(params["shared"], cfg, x, positions,
+                                        kv_cache=kv, cache_len=cache_len)
+        return x, (new_mc, new_kv)
+
+    body = group_body
+    if cfg.remat and caches is None:
+        body = jax.checkpoint(group_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if caches is None:
+        x, _ = jax.lax.scan(lambda c, xs: body(c, (xs, None, None)), x, grouped)
+        new_caches = None
+    else:
+        def scan_fn(c, xs):
+            x, out = body(c, xs)
+            return x, out
+        x, (new_m, new_kv) = jax.lax.scan(scan_fn, x, (grouped, m_caches, kv_caches))
+        new_m = jax.tree.map(lambda t: t.reshape((G * k,) + t.shape[2:]), new_m)
+        new_caches = (new_m, new_kv)
+
+    x = common.rms_norm(x, params["ln_f"])
+    return x @ params["embed"].T, new_caches
+
+
+def zamba_init_cache(cfg: Zamba2Cfg, batch: int, max_len: int):
+    one_m = ssm.init_mamba_cache(cfg.mamba, batch, cfg.dtype)
+    m = jax.tree.map(lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), one_m)
+    kv_shape = (cfg.n_groups, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    kv = (jnp.zeros(kv_shape, cfg.dtype), jnp.zeros(kv_shape, cfg.dtype))
+    return (m, kv)
+
+
+# ===========================================================================
+# Whisper-style encoder-decoder backbone
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class EncDecCfg:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    n_audio_ctx: int = 1500       # encoder frames after the (stubbed) conv frontend
+    dtype: Any = jnp.float32
+    remat: bool = True
+
+    def param_count(self) -> int:
+        d, dh = self.d_model, self.d_head
+        attn = d * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        mlp = 2 * d * self.d_ff
+        enc = self.n_enc_layers * (attn + mlp)
+        dec = self.n_dec_layers * (2 * attn + mlp)
+        return self.vocab * d + enc + dec + self.n_audio_ctx * d
+
+
+def encdec_init(key, cfg: EncDecCfg) -> Params:
+    ke, kenc, kdec, kp = jax.random.split(key, 4)
+
+    def enc_layer(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln_attn": jnp.zeros((cfg.d_model,), cfg.dtype),
+            "ln_mlp": jnp.zeros((cfg.d_model,), cfg.dtype),
+            "attn": common.attn_params(ka, cfg.d_model, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.d_head, cfg.dtype),
+            "mlp": common.mlp_params(km, cfg.d_model, cfg.d_ff, cfg.dtype,
+                                     gated=False),
+        }
+
+    def dec_layer(k):
+        ka, kx, km = jax.random.split(k, 3)
+        p = enc_layer(jax.random.fold_in(k, 0))
+        p["ln_xattn"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+        p["xattn"] = common.attn_params(kx, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.d_head, cfg.dtype)
+        return p
+
+    return {
+        "embed": common.embed_init(ke, cfg.vocab, cfg.d_model, cfg.dtype),
+        "pos_audio": (jax.random.normal(kp, (cfg.n_audio_ctx, cfg.d_model),
+                                        jnp.float32) * 0.01).astype(cfg.dtype),
+        "ln_enc": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "ln_dec": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(kenc, cfg.n_enc_layers)),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(kdec, cfg.n_dec_layers)),
+    }
+
+
+def encode(params: Params, cfg: EncDecCfg, frames: Array) -> Array:
+    """frames: (B, S_audio, D) stub frontend embeddings -> encoder memory."""
+    S = frames.shape[1]
+    x = frames.astype(cfg.dtype) + params["pos_audio"][:S][None]
+
+    def body(x, lp):
+        h = common.rms_norm(x, lp["ln_attn"])
+        a, _ = common.attn_apply(lp["attn"], h, n_heads=cfg.n_heads,
+                                 n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                                 causal=False, rope_theta=0.0,
+                                 positions=jnp.arange(S))
+        from ..distributed.sharding import constrain_acts
+        x = constrain_acts(x + a)
+        h = common.rms_norm(x, lp["ln_mlp"])
+        return constrain_acts(x + common.mlp_apply(lp["mlp"], h, act="gelu")), None
+
+    fn = body
+    if cfg.remat:
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return common.rms_norm(x, params["ln_enc"])
+
+
+def decode_forward(params: Params, cfg: EncDecCfg, tokens: Array, memory: Array,
+                   caches=None, cache_len=None):
+    """Decoder over `tokens` with cross-attention into `memory`.
+    caches: stacked self-attn KV (L, B, S_max, Hkv, Dh) pairs."""
+    x = params["embed"][tokens]
+    S = x.shape[1]
+    positions = jnp.arange(S) + (cache_len if cache_len is not None else 0)
+
+    def body(x, xs):
+        lp, kv = xs if caches is not None else (xs[0], None)
+        h = common.rms_norm(x, lp["ln_attn"])
+        a, new_kv = common.attn_apply(lp["attn"], h, n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                                      causal=True, rope_theta=10000.0,
+                                      positions=positions,
+                                      kv_cache=kv, cache_len=cache_len)
+        x = x + a
+        h = common.rms_norm(x, lp["ln_xattn"])
+        a, _ = common.attn_apply(lp["xattn"], h, n_heads=cfg.n_heads,
+                                 n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                                 causal=False, rope_theta=0.0,
+                                 positions=positions, x_kv=memory)
+        from ..distributed.sharding import constrain_acts
+        x = constrain_acts(x + a)
+        h = common.rms_norm(x, lp["ln_mlp"])
+        return constrain_acts(x + common.mlp_apply(lp["mlp"], h, act="gelu")), new_kv
+
+    if caches is not None:
+        x, new_caches = jax.lax.scan(lambda c, xs: body(c, xs), x,
+                                     (params["dec_layers"], caches))
+    else:
+        fn = body
+        if cfg.remat:
+            fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, new_caches = jax.lax.scan(lambda c, xs: fn(c, (xs,)), x,
+                                     params["dec_layers"])
+    x = common.rms_norm(x, params["ln_dec"])
+    return x @ params["embed"].T, new_caches
+
+
+def encdec_init_cache(cfg: EncDecCfg, batch: int, max_len: int):
+    shape = (cfg.n_dec_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return (jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))

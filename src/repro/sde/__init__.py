@@ -1,0 +1,14 @@
+"""Linear-SDE substrate: the diffusion processes gDDIM generalizes over."""
+from .base import LinearSDE, ScalarOps, BlockOps, FreqDiagOps, dct_nd, idct_nd, dct_matrix
+from .vpsde import VPSDE
+from .cld import CLD
+from .bdm import BDM
+from .mixture import GaussianMixture, ExactScore
+from .general import GeneralSDE
+from . import solve
+
+__all__ = [
+    "LinearSDE", "ScalarOps", "BlockOps", "FreqDiagOps",
+    "dct_nd", "idct_nd", "dct_matrix",
+    "VPSDE", "CLD", "BDM", "GeneralSDE", "GaussianMixture", "ExactScore", "solve",
+]

@@ -1,0 +1,320 @@
+"""Linear-SDE substrate for gDDIM (Zhang, Tao & Chen, ICLR 2023).
+
+Every diffusion model in the paper is a linear SDE
+
+    du = F_t u dt + G_t dw,   t in [0, T]                      (paper Eq. 1)
+
+whose coefficient matrices F_t, G_t are *structured*:
+
+  * VPSDE / DDPM : scalar multiples of the identity             (paper Eq. 8)
+  * CLD          : 2x2 block matrix (x, v channels) ⊗ I_d       (paper Eq. 10)
+  * BDM          : diagonal in the DCT frequency basis          (paper Eq. 11)
+
+All of the quantities gDDIM needs — the transition matrix Psi(t, s), the
+marginal covariance Sigma_t, the gDDIM parameterization matrix R_t (Eq. 17),
+the Cholesky factor L_t, the lambda-family transition Psi_hat and the injected
+covariance P_st (Eq. 23), and the exponential-integrator quadrature
+coefficients (Eqs. 19b/41/46) — close over the same structure.  We therefore
+represent every coefficient as a numpy array of family-specific shape
+("coeff") and give each SDE family
+
+  * host-side float64 algebra (compose/add/invert/transpose/sqrt) used by the
+    offline Stage-I pipeline (paper App. C.3), and
+  * a device-side `apply(coeff, u)` used by the jitted Stage-II samplers.
+
+Coeff shapes per family:
+
+  scalar   : ()                      applied as  c * u
+  block    : (k, k)                  applied as  einsum('ij,bj...->bi...')
+             (k=2 for CLD; state u has a channel axis right after batch)
+  freqdiag : data_shape-broadcastable array D, applied as V (D * (V^T u)) V
+             where V^T is an orthonormal DCT along the leading spatial axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Host-side coefficient algebra (numpy, float64).
+# ---------------------------------------------------------------------------
+class CoeffOps:
+    """Family-specific algebra over structured coefficients.
+
+    All methods are static-ish and operate on numpy float64 arrays whose
+    shape is the family's coeff shape, possibly with leading batch axes
+    (e.g. a stack over time-grid points).
+    """
+
+    family: str = "abstract"
+
+    def mul(self, a, b):            # matrix product a @ b
+        raise NotImplementedError
+
+    def add(self, a, b):
+        return a + b
+
+    def scale(self, s, a):
+        return s * a
+
+    def inv(self, a):
+        raise NotImplementedError
+
+    def transpose(self, a):
+        raise NotImplementedError
+
+    def sqrt_psd(self, a):
+        """Symmetric PSD square root (principal)."""
+        raise NotImplementedError
+
+    def chol(self, a):
+        """Lower-triangular Cholesky factor (paper's L_t for CLD, Eq. 78)."""
+        raise NotImplementedError
+
+    def eye(self):
+        raise NotImplementedError
+
+    def zeros(self):
+        raise NotImplementedError
+
+    def quad_form_inv(self, sigma, delta, sum_axes):
+        """delta^T Sigma^{-1} delta summed over state dims (for Gaussian logpdf)."""
+        raise NotImplementedError
+
+    def logdet(self, a, dim_mult):
+        """log|det A ⊗ I| given the per-structure coeff and data multiplicity."""
+        raise NotImplementedError
+
+
+class ScalarOps(CoeffOps):
+    family = "scalar"
+
+    def mul(self, a, b):
+        return a * b
+
+    def inv(self, a):
+        return 1.0 / a
+
+    def transpose(self, a):
+        return a
+
+    def sqrt_psd(self, a):
+        return np.sqrt(a)
+
+    chol = sqrt_psd
+
+    def eye(self):
+        return np.float64(1.0)
+
+    def zeros(self):
+        return np.float64(0.0)
+
+
+class BlockOps(CoeffOps):
+    """k x k channel-block coefficients (CLD: k=2, channels (x, v))."""
+
+    family = "block"
+
+    def __init__(self, k: int = 2):
+        self.k = k
+
+    def mul(self, a, b):
+        return a @ b
+
+    def inv(self, a):
+        return np.linalg.inv(a)
+
+    def transpose(self, a):
+        return np.swapaxes(a, -1, -2)
+
+    def sqrt_psd(self, a):
+        w, v = np.linalg.eigh(a)
+        w = np.clip(w, 0.0, None)
+        return (v * np.sqrt(w)[..., None, :]) @ np.swapaxes(v, -1, -2)
+
+    def chol(self, a):
+        # Guard tiny negative eigenvalues from round-off.
+        jitter = 1e-30 * np.eye(self.k)
+        return np.linalg.cholesky(a + jitter)
+
+    def eye(self):
+        return np.eye(self.k)
+
+    def zeros(self):
+        return np.zeros((self.k, self.k))
+
+
+class FreqDiagOps(CoeffOps):
+    """Diagonal-in-DCT-basis coefficients (BDM).
+
+    Coeffs are arrays broadcastable against the frequency grid of shape
+    `freq_shape` (the leading spatial dims of the data).
+    """
+
+    family = "freqdiag"
+
+    def __init__(self, freq_shape: Tuple[int, ...]):
+        self.freq_shape = tuple(freq_shape)
+
+    def mul(self, a, b):
+        return a * b
+
+    def inv(self, a):
+        return 1.0 / a
+
+    def transpose(self, a):
+        return a
+
+    def sqrt_psd(self, a):
+        return np.sqrt(a)
+
+    chol = sqrt_psd
+
+    def eye(self):
+        return np.ones(self.freq_shape)
+
+    def zeros(self):
+        return np.zeros(self.freq_shape)
+
+
+# ---------------------------------------------------------------------------
+# Orthonormal DCT-II helpers (BDM basis).  V^T = DCT, V = IDCT, V^T V = I.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def dct_matrix(n: int) -> np.ndarray:
+    """Orthonormal DCT-II matrix of size (n, n): y = C @ x."""
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    c = np.cos(np.pi * (2 * i + 1) * k / (2 * n))
+    c = c * np.sqrt(2.0 / n)
+    c[0] *= np.sqrt(0.5)
+    return c.astype(np.float64)
+
+
+def dct_nd(x: Array, axes: Sequence[int]) -> Array:
+    """Orthonormal DCT-II along `axes` (jnp, matmul-based — MXU friendly)."""
+    for ax in axes:
+        n = x.shape[ax]
+        c = jnp.asarray(dct_matrix(n), dtype=x.dtype)
+        x = jnp.moveaxis(jnp.tensordot(c, jnp.moveaxis(x, ax, 0), axes=1), 0, ax)
+    return x
+
+
+def idct_nd(x: Array, axes: Sequence[int]) -> Array:
+    for ax in axes:
+        n = x.shape[ax]
+        c = jnp.asarray(dct_matrix(n).T, dtype=x.dtype)
+        x = jnp.moveaxis(jnp.tensordot(c, jnp.moveaxis(x, ax, 0), axes=1), 0, ax)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# The abstract linear SDE.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LinearSDE:
+    """A linear SDE du = F_t u dt + G_t dw with structured coefficients.
+
+    Subclasses provide host-side float64 closed forms (or ODE-grid solvers,
+    see `solve.GridCoeffs`) for F, G G^T, Psi, Sigma, R, and the device-side
+    `apply` for their coefficient family.
+    """
+
+    T: float = 1.0
+    t_min: float = 1e-3  # training/sampling stop time (Karras-style, per paper Sec. 5)
+
+    # ---- family plumbing ---------------------------------------------------
+    @property
+    def ops(self) -> CoeffOps:
+        raise NotImplementedError
+
+    @property
+    def state_ndim_prefix(self) -> int:
+        """Number of structural channel axes between batch and data dims (CLD: 1)."""
+        return 0
+
+    def state_shape(self, data_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+        return data_shape
+
+    # ---- host-side coefficient functions (numpy float64) -------------------
+    def F_np(self, t: float):
+        raise NotImplementedError
+
+    def G2_np(self, t: float):
+        """G_t G_t^T as a family coeff."""
+        raise NotImplementedError
+
+    def Psi_np(self, t: float, s: float):
+        """Transition matrix of F: dPsi/dt = F_t Psi, Psi(s,s)=I (paper Eq. 36)."""
+        raise NotImplementedError
+
+    def Sigma_np(self, t: float):
+        """Marginal covariance of p_{0t}(u_t | u_0) as a family coeff."""
+        raise NotImplementedError
+
+    def R_np(self, t: float):
+        """gDDIM parameterization matrix solving Eq. 17."""
+        raise NotImplementedError
+
+    def L_np(self, t: float):
+        """Cholesky factor of Sigma_t (Dockhorn et al.'s K_t choice)."""
+        return self.ops.chol(self.Sigma_np(t))
+
+    def Sigma0_np(self):
+        """Initial per-data-point covariance (Dirac => zeros; CLD => diag(0, gamma M))."""
+        return self.ops.zeros()
+
+    # ---- device-side application -------------------------------------------
+    def apply(self, coeff: Array, u: Array) -> Array:
+        """Apply a (possibly stacked) coefficient to a batched state u."""
+        raise NotImplementedError
+
+    def apply_batched(self, coeff: Array, u: Array) -> Array:
+        """Apply a *per-example* coefficient (leading batch axis) to u.
+
+        Used by the DSM/HSM losses where each example draws its own t.
+        coeff: (B, *coeff_shape);  u: (B, *state_shape).
+        """
+        raise NotImplementedError
+
+    def noise_like(self, key: Array, u_shape: Tuple[int, ...], dtype=jnp.float32) -> Array:
+        return jax.random.normal(key, u_shape, dtype)
+
+    # ---- conveniences -------------------------------------------------------
+    def prior_sample(self, key: Array, batch: int, data_shape: Tuple[int, ...],
+                     dtype=jnp.float32) -> Array:
+        """Sample u(T) ~ N(0, Sigma_T)."""
+        shape = (batch,) + self.state_shape(data_shape)
+        eps = self.noise_like(key, shape, dtype)
+        chol_T = jnp.asarray(self.ops.chol(self.Sigma_np(self.T)), dtype)
+        return self.apply(chol_T, eps)
+
+    def augment_data(self, x: Array, key: Array | None = None) -> Array:
+        """Lift data into SDE state space (identity except CLD)."""
+        return x
+
+    def project_data(self, u: Array) -> Array:
+        """Project SDE state back to data space (identity except CLD)."""
+        return u
+
+    def perturb(self, key: Array, u0: Array, t: Array, K_np_fn: Callable[[float], np.ndarray]):
+        """Forward-perturb data: u_t = Psi(t,0) u0 + K_t eps; returns (u_t, eps).
+
+        Used by the DSM/HSM losses (paper Eq. 5 / 77).  `t` must be a python
+        float or 0-d array for the host-side coefficient lookup — training
+        loops batch this via stacked coefficient tables instead (see
+        repro.train.losses).
+        """
+        t = float(t)
+        psi = jnp.asarray(self.Psi_np(t, 0.0), u0.dtype)
+        K = jnp.asarray(K_np_fn(t), u0.dtype)
+        eps = self.noise_like(key, u0.shape, u0.dtype)
+        return self.apply(psi, u0) + self.apply(K, eps), eps

@@ -1,0 +1,149 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.sde import VPSDE, CLD, BDM
+from repro.models import rwkv6, common
+from repro.kernels.ei_update.ref import ei_update_ref
+from repro.kernels.ei_update.kernel import ei_update
+
+SLOW = dict(deadline=None, max_examples=12,
+            suppress_health_check=[HealthCheck.too_slow])
+
+ts_strategy = st.floats(min_value=1e-3, max_value=0.999)
+
+
+class TestSDEInvariants:
+    @given(t=ts_strategy)
+    @settings(**SLOW)
+    def test_cld_R_factorizes_sigma(self, t):
+        sde = CLD()
+        R = sde.R_np(t)
+        S = sde.Sigma_np(t)
+        np.testing.assert_allclose(R @ R.T, S, rtol=1e-4, atol=1e-8)
+
+    @given(t=ts_strategy, s=ts_strategy, r=ts_strategy)
+    @settings(**SLOW)
+    def test_cld_psi_group_property(self, t, s, r):
+        sde = CLD()
+        lhs = sde.Psi_np(t, s) @ sde.Psi_np(s, r)
+        rhs = sde.Psi_np(t, r)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-6, atol=1e-10)
+
+    @given(t=ts_strategy, s=ts_strategy)
+    @settings(**SLOW)
+    def test_bdm_psi_group_property(self, t, s):
+        sde = BDM(data_shape=(8, 8, 1))
+        lhs = sde.Psi_np(t, s) * sde.Psi_np(s, 0.5)
+        rhs = sde.Psi_np(t, 0.5)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-6, atol=1e-10)
+
+    @given(t=ts_strategy)
+    @settings(**SLOW)
+    def test_vpsde_eq17(self, t):
+        """dR/dt == (F + G2/(2 Sigma)) R (the paper's Eq. 17), FD check."""
+        sde = VPSDE()
+        h = 1e-6
+        t = min(max(t, 1e-3 + h), 0.999 - h)
+        dR = (sde.R_np(t + h) - sde.R_np(t - h)) / (2 * h)
+        rhs = (sde.F_np(t) + 0.5 * sde.G2_np(t) / sde.Sigma_np(t)) * sde.R_np(t)
+        np.testing.assert_allclose(dR, rhs, rtol=1e-3)
+
+    @given(t=st.floats(min_value=0.05, max_value=0.95))
+    @settings(**SLOW)
+    def test_bdm_g2_nonnegative(self, t):
+        sde = BDM(data_shape=(8, 8, 1))
+        assert (sde.G2_np(t) >= 0).all()
+
+
+class TestRecurrenceProperties:
+    @given(
+        s_chunks=st.integers(min_value=1, max_value=4),
+        chunk=st.sampled_from([8, 16]),
+        h=st.integers(min_value=1, max_value=3),
+        dk=st.sampled_from([4, 8]),
+        seed=st.integers(min_value=0, max_value=2**30),
+    )
+    @settings(**SLOW)
+    def test_rwkv_chunked_equals_sequential(self, s_chunks, chunk, h, dk, seed):
+        B, S = 1, s_chunks * chunk
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        r = jax.random.normal(ks[0], (B, S, h, dk))
+        k = jax.random.normal(ks[1], (B, S, h, dk))
+        v = jax.random.normal(ks[2], (B, S, h, dk))
+        w_log = -jnp.exp(jax.random.normal(ks[3], (B, S, h, dk)))
+        u = jax.random.normal(ks[4], (h, dk)) * 0.5
+        y1, s1 = rwkv6.rwkv6_chunked(r, k, v, w_log, u, chunk=chunk)
+        y2, s2 = rwkv6.rwkv6_sequential(r, k, v, w_log, u)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-3, atol=1e-3)
+
+    @given(
+        e=st.sampled_from([4, 8]),
+        k=st.integers(min_value=1, max_value=3),
+        seed=st.integers(min_value=0, max_value=2**30),
+    )
+    @settings(**SLOW)
+    def test_moe_sorted_equals_dense(self, e, k, seed):
+        B, S, D = 1, 8, 16
+        p = common.moe_params(jax.random.PRNGKey(seed), D, 32, e, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, S, D))
+        dense = common.moe_apply(p, x, top_k=k)
+        srt = common.moe_sorted_apply(p, x, top_k=k, capacity_factor=float(e))
+        np.testing.assert_allclose(np.asarray(srt), np.asarray(dense),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestKernelProperties:
+    @given(
+        B=st.integers(min_value=1, max_value=3),
+        k=st.sampled_from([1, 2]),
+        D=st.sampled_from([64, 100, 256]),
+        q=st.integers(min_value=1, max_value=3),
+        seed=st.integers(min_value=0, max_value=2**30),
+    )
+    @settings(**SLOW)
+    def test_ei_update_kernel(self, B, k, D, q, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        u = jax.random.normal(ks[0], (B, k, D))
+        eh = jax.random.normal(ks[1], (q, B, k, D))
+        psi = jax.random.normal(ks[2], (k, k))
+        C = jax.random.normal(ks[3], (q, k, k))
+        ref = ei_update_ref(u, eh, psi, C)
+        out = ei_update(u, eh, psi, C, block_d=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestDataProperties:
+    @given(step=st.integers(min_value=0, max_value=10_000),
+           seed=st.integers(min_value=0, max_value=2**30))
+    @settings(**SLOW)
+    def test_token_pipeline_pure_function_of_step(self, step, seed):
+        from repro.data.pipeline import TokenPipeline
+        p1 = TokenPipeline(vocab=64, seq_len=8, global_batch=2, seed=seed)
+        p2 = TokenPipeline(vocab=64, seq_len=8, global_batch=2, seed=seed)
+        a, _ = p1.batch_at(step)
+        b, _ = p2.batch_at(step)
+        np.testing.assert_array_equal(a, b)
+        assert (a >= 0).all() and (a < 64).all()
+
+
+class TestCoeffProperties:
+    @given(n=st.integers(min_value=2, max_value=12),
+           seed=st.integers(min_value=0, max_value=2**30))
+    @settings(**SLOW)
+    def test_vpsde_gddim_coeff_matches_ddim(self, n, seed):
+        """Prop 2 as a property: for any grid size, the q=1 quadrature
+        coefficient equals the closed-form DDIM coefficient."""
+        from repro.core import build_sampler_coeffs, time_grid, \
+            ddim_closed_form_check
+        sde = VPSDE()
+        ts = time_grid(sde, n)
+        co = build_sampler_coeffs(sde, ts, q=1)
+        ddim = ddim_closed_form_check(sde, ts)
+        np.testing.assert_allclose(np.asarray(co.pC[:, 0]), ddim,
+                                   rtol=1e-4, atol=1e-6)
