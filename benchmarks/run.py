@@ -9,6 +9,7 @@ Output CSV: table,config,nfe,us_per_call,sw2,mode_recovery
 import sys
 
 from . import tables
+from . import serving
 
 
 ALL = {
@@ -18,6 +19,7 @@ ALL = {
     "tab8": tables.table8_pc,
     "fig1": tables.fig1_eps_constancy,
     "kernels": tables.kernel_micro,
+    "serving": serving.serving_throughput,
 }
 
 

@@ -1,0 +1,69 @@
+"""Serving throughput: the continuous-batching engines under load.
+
+Rows follow the repo CSV schema (table,config,nfe,us_per_call,sw2,mode_rec);
+for serving rows the quality columns carry throughput instead:
+
+  * token rows     — config "<arch>_B<batch>", us_per_call = us per decode
+                     round, sw2 column = tokens/s
+  * diffusion rows — config "gddim_B<batch>", nfe = sampler NFE,
+                     us_per_call = us per batch step, sw2 column = samples/s
+
+Reduced CPU configs: the numbers are for *relative* tracking (batch scaling,
+regression against the per-request loop), not absolute hardware claims.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterator
+
+import numpy as np
+import jax
+
+from repro.configs import get_arch, get_diffusion
+from repro.models.registry import Arch
+from repro.serve import DiffusionEngine, Request, SampleRequest, TokenEngine
+
+
+def _token_requests(vocab, n, prompt_len, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(2, vocab, prompt_len).astype(np.int32),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
+                       max_new=16, max_len=64, nfe=10) -> Iterator[str]:
+    # ---- token decoding: one KV-cache arch + one recurrent-state arch ----
+    for arch_name in ("gemma3-1b", "rwkv6-7b"):
+        spec = get_arch(arch_name, reduced=True)
+        arch = Arch(spec)
+        params = arch.init(jax.random.PRNGKey(0))
+        for B in batches:
+            engine = TokenEngine(arch, params, batch_size=B, max_len=max_len)
+            # eos never fires: fixed work per request for comparable rows
+            engine.eos_id = -1
+            reqs = _token_requests(arch.cfg.vocab, n_requests, prompt_len,
+                                   max_new)
+            engine.serve(reqs[:B])                     # warmup + compile
+            n0, s0 = engine.n_tokens_out, engine.n_decode_steps
+            t0 = time.perf_counter()
+            engine.serve(reqs[B:])
+            dt = time.perf_counter() - t0
+            toks = engine.n_tokens_out - n0
+            us_round = 1e6 * dt / max(engine.n_decode_steps - s0, 1)
+            yield (f"serving,{arch_name}_B{B},0,{us_round:.0f},"
+                   f"{toks / dt:.1f},0")
+
+    # ---- gDDIM sampling service ----
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    for B in batches:
+        engine = DiffusionEngine(spec, params, batch_size=B, nfe=nfe)
+        engine.serve([SampleRequest(rid=-1, seed=0)])  # warmup + compile
+        s0, t0 = engine.n_steps, time.perf_counter()
+        engine.serve([SampleRequest(rid=i, seed=i) for i in range(n_requests)])
+        dt = time.perf_counter() - t0
+        us_step = 1e6 * dt / max(engine.n_steps - s0, 1)
+        yield (f"serving,gddim_B{B},{nfe},{us_step:.0f},"
+               f"{n_requests / dt:.2f},0")

@@ -1,20 +1,83 @@
-"""Batched serving walkthrough: continuous batching over the rwkv6 arch
-(O(1)/token state) and the gemma3 arch (sliding-window KV cache).
+"""Continuous-batching walkthrough: the `repro.serve` API.
 
+Two workloads ride the same scheduler/slot-table machinery:
+
+1. Token decoding (`repro.serve.TokenEngine`) over the rwkv6 arch
+   (O(1)/token recurrent state) and the gemma3 arch (GQA KV cache with
+   sliding-window layers):
+
+       engine  = TokenEngine(arch, params, batch_size=4, max_len=64)
+       results = engine.serve([Request(rid=0, tokens=prompt, max_new=8), ...])
+       # results[rid] -> np.ndarray of generated token ids
+
+   Under the hood each admission wave runs ONE batched prefill
+   (`make_prefill_step`) for a same-length group, scatters the resulting
+   cache rows into the admitted slots only, and the decode loop passes a
+   per-slot position vector so a freshly refilled slot decodes at its own
+   absolute position.  A request's output is bitwise identical whether it
+   runs alone or interleaved with neighbours (tests/test_serve_engine.py).
+
+2. gDDIM sampling as a service (`repro.serve.DiffusionEngine`): slots are
+   samples, the per-slot position is the sampler step index k, and one
+   jitted `make_diffusion_serve_step` advances slots at different k in the
+   same batch — the paper's cheap-NFE sampler behind a serving interface:
+
+       engine  = DiffusionEngine(spec, params, batch_size=4, nfe=20)
+       results = engine.serve([SampleRequest(rid=0, seed=0), ...])
+       # results[rid] -> np.ndarray sample in data space
+
+Run:
     PYTHONPATH=src python examples/serve_batched.py
 """
 import sys
 sys.path.insert(0, "src")
 
-from repro.launch import serve
+import numpy as np
+import jax
+
+from repro.configs import get_arch, get_diffusion
+from repro.models.registry import Arch
+from repro.serve import DiffusionEngine, Request, SampleRequest, TokenEngine
+
+
+def serve_tokens(arch_name: str) -> None:
+    print(f"== token engine: {arch_name} (reduced config)")
+    spec = get_arch(arch_name, reduced=True)
+    arch = Arch(spec)
+    params = arch.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    # 6 requests through 4 slots: the last two are admitted into slots
+    # retired by earlier requests (continuous batching)
+    requests = [Request(rid=i,
+                        tokens=rng.integers(2, arch.cfg.vocab, 8).astype(np.int32),
+                        max_new=8)
+                for i in range(6)]
+    engine = TokenEngine(arch, params, batch_size=4, max_len=32)
+    results = engine.serve(requests)
+    for rid in sorted(results):
+        print(f"  req{rid}: {results[rid].tolist()}")
+    print(f"  {engine.n_prefill_calls} prefill calls, "
+          f"{engine.n_decode_steps} decode rounds, "
+          f"compile={engine.compile_stats()}")
+
+
+def serve_samples() -> None:
+    print("== diffusion engine: cifar10-ddpm (reduced config)")
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    engine = DiffusionEngine(spec, params, batch_size=4, nfe=10)
+    results = engine.serve([SampleRequest(rid=i, seed=i) for i in range(6)])
+    for rid in sorted(results):
+        x = results[rid]
+        print(f"  sample{rid}: shape={x.shape} mean={x.mean():+.3f} "
+              f"std={x.std():.3f}")
+    print(f"  {engine.n_steps} gDDIM rounds, compile={engine.compile_stats()}")
 
 
 def main():
     for arch in ("rwkv6-7b", "gemma3-1b"):
-        print(f"== serving {arch} (reduced config)")
-        serve.main(["--arch", arch, "--reduced", "--batch", "4",
-                    "--requests", "6", "--prompt-len", "8", "--max-new", "8",
-                    "--max-len", "32"])
+        serve_tokens(arch)
+    serve_samples()
     return 0
 
 

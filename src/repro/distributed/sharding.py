@@ -245,6 +245,49 @@ def constrain_acts(x: Array) -> Array:
     return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
 
 
+def _ambient_mesh():
+    """The mesh installed by `with mesh:` (None outside a mesh context).
+
+    jax 0.4.x has no public ambient-mesh accessor; try the semi-public
+    pxla location first, then the private module it re-exports.  If a JAX
+    upgrade breaks both, constrain_batch degrades to a no-op — that
+    regression is caught by test_distributed.py::test_fsdp_train_step_*,
+    which asserts sharded == single-device numerics."""
+    for get in (lambda: __import__("jax").interpreters.pxla.thread_resources,
+                lambda: __import__("jax._src.mesh", fromlist=["thread_resources"]).thread_resources):
+        try:
+            m = get().env.physical_mesh
+            return None if m.empty else m
+        except Exception:
+            continue
+    return None                                         # pragma: no cover
+
+
+def constrain_batch(x: Array) -> Array:
+    """Pin a batch-leading activation to the data-parallel layout (dim 0
+    over the batch axes, everything else replicated).
+
+    Model code calls this right after the embedding lookup.  Left to
+    itself, GSPMD propagates the vocab-sharded embedding table's gather
+    sharding into the layer scan, and the CPU SPMD partitioner miscompiles
+    that composition — the sharded forward diverged from the single-device
+    result by O(1) logits error while each block in isolation agreed to
+    1e-6 (caught by tests/test_distributed.py::test_fsdp_train_step_*).
+    An explicit constraint at the lookup restores agreement up to
+    reduction order.  Honors an installed activation spec first; derives
+    the spec from the ambient mesh otherwise; no-op outside a mesh
+    context (single-device tests, the serving engine on CPU)."""
+    if _ACT_SPEC is not None and x.ndim == len(_ACT_SPEC):
+        return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    spec = batch_spec(mesh, ShardCfg(), x.ndim, x.shape[0])
+    if all(a is None for a in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
 def logical_to_sharding(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
 

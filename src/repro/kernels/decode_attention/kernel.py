@@ -6,9 +6,16 @@ On TPU the grid is *sequential* per core, so the merge is free: we iterate
 KV blocks on the last grid axis, carrying the online-softmax running
 (m, l, acc) in VMEM scratch, exactly like the prefill flash kernel but with
 the q tile being the `rep` grouped-query rows of one KV head (rep = Hq/Hkv;
-the GQA repeat is never materialized).  The cache beyond `cache_len` is
-masked, and whole KV blocks past the valid length are skipped with pl.when
-— decode cost is O(cache_len), not O(S_max).
+the GQA repeat is never materialized).  The cache beyond the valid length is
+masked, and whole KV blocks past it are skipped with pl.when — decode cost
+is O(cache_len), not O(S_max).
+
+`cache_len` is scalar or per-row (B,): each batch row masks (and skips
+blocks) against its own valid length, which is what the continuous-batching
+engine needs — slots in one batch decode at different absolute positions.
+`window` (static) additionally masks keys below the trailing window and
+skips whole blocks beneath it (sliding-window layers: valid keys are the
+last `window` of the `cache_len` entries).
 
 Grid: (B, Hkv, num_k_blocks); q tile (rep, Dh), kv tiles (block_k, Dh).
 VMEM per step ~ (rep + 2*block_k + rep) * Dh * 4B — tiny; the pipeline
@@ -19,6 +26,7 @@ once per token).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,9 +40,11 @@ NEG_INF = -1e30
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                    m_scr, l_scr, acc_scr, *,
-                   block_k: int, num_k_blocks: int, sm_scale: float):
+                   block_k: int, num_k_blocks: int, sm_scale: float,
+                   window: Optional[int]):
+    b = pl.program_id(0)
     kb = pl.program_id(2)
-    cache_len = len_ref[0]
+    cache_len = len_ref[b]
 
     @pl.when(kb == 0)
     def _init():
@@ -42,7 +52,12 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    @pl.when(kb * block_k < cache_len)
+    live = kb * block_k < cache_len
+    if window is not None:
+        # the whole block ends before the trailing window: nothing valid in it
+        live = live & ((kb + 1) * block_k > cache_len - window)
+
+    @pl.when(live)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)                  # (rep, Dh)
         k = k_ref[0, 0].astype(jnp.float32)                  # (bk, Dh)
@@ -51,7 +66,10 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         s = s * sm_scale                                     # (rep, bk)
         k_pos = kb * block_k + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
-        s = jnp.where(k_pos < cache_len, s, NEG_INF)
+        valid = k_pos < cache_len
+        if window is not None:
+            valid = valid & (k_pos >= cache_len - window)
+        s = jnp.where(valid, s, NEG_INF)
 
         m_prev, l_prev = m_scr[...], l_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -71,9 +89,10 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_k", "window", "interpret"))
 def decode_attention(q: Array, k: Array, v: Array, cache_len: Array,
-                     *, block_k: int = 512, interpret: bool = False) -> Array:
+                     *, block_k: int = 512, window: Optional[int] = None,
+                     interpret: bool = False) -> Array:
     """q: (B, Hq, Dh); k/v: (B, S, Hkv, Dh); cache_len: () or (B,) int32."""
     B, Hq, Dh = q.shape
     _, S, Hkv, _ = k.shape
@@ -86,15 +105,17 @@ def decode_attention(q: Array, k: Array, v: Array, cache_len: Array,
     qt = q.reshape(B, Hkv, rep, Dh)
     kt = k.transpose(0, 2, 1, 3)                             # (B, Hkv, S, Dh)
     vt = v.transpose(0, 2, 1, 3)
-    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1), (1,))
+    clen = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
 
     kernel = functools.partial(_decode_kernel, block_k=block_k,
-                               num_k_blocks=nk, sm_scale=1.0 / (Dh ** 0.5))
+                               num_k_blocks=nk, sm_scale=1.0 / (Dh ** 0.5),
+                               window=window)
     out = pl.pallas_call(
         kernel,
         grid=(B, Hkv, nk),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),           # cache_len
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # cache_len (B,)
             pl.BlockSpec((1, 1, rep, Dh), lambda b, h, j: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, j: (b, h, j, 0)),
             pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, j: (b, h, j, 0)),

@@ -1,5 +1,14 @@
-"""Dispatch wrapper for decode attention (kernel / reference)."""
+"""Dispatch wrapper for decode attention (kernel / reference).
+
+`cache_len` may be a scalar (all rows share one position — the single
+sequence / lockstep-batch case) or a (B,) vector of per-row valid lengths
+(continuous batching: every slot decodes at its own absolute position).
+`window` restricts attention to the trailing `window` valid positions
+(sliding-window layers at decode time).
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
@@ -10,13 +19,15 @@ Array = jax.Array
 
 
 def decode_attention(q: Array, k: Array, v: Array, cache_len,
+                     window: Optional[int] = None,
                      impl: str = "auto") -> Array:
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "pallas":
-        return decode_attention_pallas(q, k, v, cache_len)
+        return decode_attention_pallas(q, k, v, cache_len, window=window)
     if impl == "pallas_interpret":
-        return decode_attention_pallas(q, k, v, cache_len, interpret=True)
+        return decode_attention_pallas(q, k, v, cache_len, window=window,
+                                       interpret=True)
     if impl == "ref":
-        return decode_attention_ref(q, k, v, cache_len)
+        return decode_attention_ref(q, k, v, cache_len, window=window)
     raise ValueError(impl)

@@ -2,10 +2,16 @@
 
 q: (B, Hq, Dh) — one new token per sequence;
 k/v: (B, S, Hkv, Dh) — pre-allocated cache, `cache_len` valid entries.
-Only positions < cache_len (plus the just-written slot handled by the
-caller) participate; GQA broadcast Hq = rep * Hkv.
+`cache_len` is scalar (shared position) or (B,) — one valid length per
+batch row, the continuous-batching case where every slot decodes at its
+own absolute position.  Only positions < cache_len (plus the just-written
+slot handled by the caller) participate; `window` additionally restricts
+attention to the trailing `window` valid positions (sliding-window
+layers); GQA broadcast Hq = rep * Hkv.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -13,14 +19,21 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
-def decode_attention_ref(q: Array, k: Array, v: Array, cache_len: Array) -> Array:
+def decode_attention_ref(q: Array, k: Array, v: Array, cache_len: Array,
+                         window: Optional[int] = None) -> Array:
     B, Hq, Dh = q.shape
     _, S, Hkv, _ = k.shape
     rep = Hq // Hkv
     qg = q.reshape(B, Hkv, rep, Dh).astype(jnp.float32)
     scores = jnp.einsum("bhrd,bshd->bhrs", qg, k.astype(jnp.float32))
     scores = scores / jnp.sqrt(float(Dh))
-    mask = jnp.arange(S)[None] < jnp.asarray(cache_len).reshape(-1, 1)   # (B, S)
+    n_valid = jnp.asarray(cache_len).reshape(-1, 1)                  # (B|1, 1)
+    k_pos = jnp.arange(S)[None]                                      # (1, S)
+    mask = k_pos < n_valid                                           # (B|1, S)
+    if window is not None:
+        # query sits at position n_valid - 1: keep the last `window` keys
+        mask = mask & (k_pos >= n_valid - window)
+    mask = jnp.broadcast_to(mask, (B, S))
     scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     w = jnp.where(jnp.isfinite(scores).any(-1, keepdims=True), w, 0.0)

@@ -255,54 +255,66 @@ def hlo_program_stats(hlo: str):
         memo_flops[name] = total
         return total
 
-    # ---- fusion operand traffic: a fusion parameter consumed only by
+    # ---- fusion/call operand traffic: a parameter consumed only by
     # dynamic-slice reads only the slice; a ROOT dynamic-update-slice writes
     # only the update (in-place aliasing).  This matters enormously for
     # scanned layer stacks, where every step slices one layer out of an
     # (L, ...) stacked weight: the real read is |layer|, not L*|layer|.
-    _param_re = re.compile(r"parameter\((\d+)\)")
-
-    def fusion_operand_bytes(called: str, operand_names, caller: str) -> float:
-        if called not in parsed:
-            return sum(parsed[caller][0].get(o, 0) for o in operand_names)
+    # XLA CPU wraps the slice as  call -> wrapper-computation -> fusion ->
+    # dynamic-slice  (outer_dimension_partitions), so the resolution walks
+    # through pass-through wrappers recursively.
+    def operand_read_bytes(called: str, op_idx: int, full: float,
+                           stack=()) -> float:
+        """Bytes a fusion/call actually reads from operand `op_idx`."""
+        if called not in parsed or called in stack:
+            return full
         sizes_c, dims_c, ops_c = parsed[called]
-        sizes_caller = parsed[caller][0]
-        # param index -> param name (parameter ops carry the index as args)
         pidx = {}
+        root_dus_dest = None
         for oname, shape_txt, kind, args, attrs, line in ops_c:
             if kind == "parameter":
                 try:
                     pidx[int(args.strip())] = oname
                 except ValueError:
                     pass
-        # uses of each param
-        total = 0.0
-        root_dus_update = None
-        for oname, shape_txt, kind, args, attrs, line in ops_c:
-            if kind == "dynamic-update-slice" and "ROOT" in line:
+            elif kind == "dynamic-update-slice" and "ROOT" in line:
                 opnds = _op_operands(args)
-                if len(opnds) > 1:
-                    root_dus_update = opnds[0]  # destination param
-        for i, op in enumerate(operand_names):
-            pname = pidx.get(i)
-            full = sizes_caller.get(op, 0)
-            if pname is None:
-                total += full
-                continue
-            uses = [(k, _op_operands(a)) for (_, _, k, a, _, _) in ops_c
-                    if pname in _op_operands(a)]
-            if uses and all(k == "dynamic-slice" and o and o[0] == pname
-                            for k, o in uses):
-                # read only the slices
-                total += sum(sizes_c.get(n, 0)
-                             for (n, _, k, a, _, _) in ops_c
-                             if k == "dynamic-slice" and _op_operands(a)
-                             and _op_operands(a)[0] == pname)
-            elif pname == root_dus_update:
-                total += 0.0   # aliased destination; update counted via result
-            else:
-                total += full
-        return total
+                if opnds:
+                    root_dus_dest = opnds[0]   # aliased destination
+        pname = pidx.get(op_idx)
+        if pname is None:
+            return full
+        uses = [(k, _op_operands(a), at) for (_, _, k, a, at, _) in ops_c
+                if pname in _op_operands(a)]
+        if not uses:
+            return 0.0
+        if all(k == "dynamic-slice" and o and o[0] == pname
+               for k, o, _ in uses):
+            # read only the slices
+            return sum(sizes_c.get(n, 0)
+                       for (n, _, k, a, _, _) in ops_c
+                       if k == "dynamic-slice" and _op_operands(a)
+                       and _op_operands(a)[0] == pname)
+        if pname == root_dus_dest:
+            return 0.0   # update counted via the result convention
+        if all(k in ("fusion", "call") for k, o, _ in uses):
+            total = 0.0
+            for k, o, at in uses:
+                cm = _CALLS.search(at)
+                if cm is None:
+                    return full
+                total += sum(
+                    operand_read_bytes(cm.group(1), i, full,
+                                       stack + (called,))
+                    for i, nm in enumerate(o) if nm == pname)
+            return total
+        return full
+
+    def fusion_operand_bytes(called: str, operand_names, caller: str) -> float:
+        sizes_caller = parsed[caller][0]
+        return sum(
+            operand_read_bytes(called, i, sizes_caller.get(op, 0))
+            for i, op in enumerate(operand_names))
 
     def fusion_result_bytes(called: str, oname: str, caller: str) -> float:
         full = parsed[caller][0].get(oname, 0)
@@ -386,7 +398,7 @@ def hlo_program_stats(hlo: str):
                 upd = sizes.get(opnds[1], 0) if len(opnds) > 1 else 0
                 nbytes += 2 * upd
                 continue
-            if kind == "fusion" and called is not None:
+            if kind in ("fusion", "call") and called is not None:
                 nbytes += fusion_result_bytes(called, oname, name)
                 nbytes += fusion_operand_bytes(called, _op_operands(args), name)
                 continue

@@ -1,123 +1,104 @@
-"""Batched serving driver: continuous-batching decode loop over any arch.
+"""Serving CLI: a thin driver over the `repro.serve` continuous-batching
+engines.
 
-Demonstrates the production serving path on CPU-sized configs:
+Two workloads share the same scheduler/slot machinery:
 
-  * prefill phase fills a pre-allocated KV cache (paged by max_len),
-  * decode loop emits one token/step for the whole batch (greedy),
-  * slots retire on EOS and are refilled from the request queue
-    (continuous batching) — the cache slot is re-prefilled in place.
+  * token decoding (any Arch family) — batched prefill, per-slot positions,
+    retire-and-refill without recompilation:
 
-    python -m repro.launch.serve --arch gemma3-1b --reduced --requests 12
+        python -m repro.launch.serve --arch gemma3-1b --reduced --requests 12
+
+  * gDDIM sampling as a service — slots are samples, each at its own
+    sampler step index:
+
+        python -m repro.launch.serve --diffusion cifar10-ddpm --reduced \\
+            --requests 8 --nfe 20
+
+All engine logic (slot isolation, cache scatter, admission grouping) lives
+in `repro.serve.engine`; this module only parses flags, builds a synthetic
+request stream, and reports throughput.
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import List
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from ..configs import get_arch, ARCH_IDS
+from ..configs import get_arch, get_diffusion, ARCH_IDS, DIFFUSION_MODULES
 from ..models.registry import Arch
-from . import steps as steps_lib
+from ..serve import DiffusionEngine, Request, SampleRequest, TokenEngine
+
+
+def _serve_tokens(args) -> int:
+    spec = get_arch(args.arch, reduced=args.reduced)
+    arch = Arch(spec)
+    key = jax.random.PRNGKey(args.seed)
+    params = arch.init(key)
+
+    rng = np.random.default_rng(args.seed)
+    requests = []
+    for rid in range(args.requests):
+        req = Request(
+            rid=rid,
+            tokens=rng.integers(2, arch.cfg.vocab,
+                                size=args.prompt_len).astype(np.int32),
+            max_new=args.max_new)
+        if spec.family == "encdec":
+            req.frames = rng.standard_normal(
+                (spec.frontend_ctx, arch.cfg.d_model)).astype(np.float32)
+        requests.append(req)
+
+    engine = TokenEngine(arch, params, batch_size=args.batch,
+                         max_len=args.max_len)
+    t0 = time.time()
+    results = engine.serve(requests)
+    dt = time.time() - t0
+    tps = engine.n_tokens_out / max(dt, 1e-9)
+    print(f"served {len(results)} requests in {dt:.1f}s "
+          f"({engine.n_decode_steps} decode rounds, "
+          f"{engine.n_prefill_calls} prefill calls, batch {args.batch}, "
+          f"{tps:.1f} tok/s)  compile={engine.compile_stats()}")
+    for rid in sorted(results)[:4]:
+        print(f"  req{rid}: {results[rid][:12].tolist()}...")
+    return 0
+
+
+def _serve_samples(args) -> int:
+    spec = get_diffusion(args.diffusion, reduced=args.reduced)
+    params = spec.init(jax.random.PRNGKey(args.seed))
+    engine = DiffusionEngine(spec, params, batch_size=args.batch,
+                             nfe=args.nfe)
+    requests = [SampleRequest(rid=i, seed=args.seed + i)
+                for i in range(args.requests)]
+    t0 = time.time()
+    results = engine.serve(requests)
+    dt = time.time() - t0
+    sps = engine.n_samples_out / max(dt, 1e-9)
+    print(f"sampled {len(results)} requests in {dt:.1f}s "
+          f"({engine.n_steps} gDDIM rounds @ NFE {args.nfe}, "
+          f"batch {args.batch}, {sps:.2f} samples/s)  "
+          f"compile={engine.compile_stats()}")
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--diffusion", choices=list(DIFFUSION_MODULES))
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--nfe", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-
-    spec = get_arch(args.arch, reduced=args.reduced)
-    arch = Arch(spec)
-    key = jax.random.PRNGKey(args.seed)
-    params = arch.init(key)
-    vocab = arch.cfg.vocab
-    eos = 1
-
-    # synthetic request queue
-    rng = np.random.default_rng(args.seed)
-    queue: List[np.ndarray] = [
-        rng.integers(2, vocab, size=args.prompt_len).astype(np.int32)
-        for _ in range(args.requests)]
-    done: List[np.ndarray] = []
-
-    serve_step = jax.jit(steps_lib.make_serve_step(arch))
-
-    B = args.batch
-    caches = arch.init_cache(B, args.max_len)
-    memory = None
-    if spec.family == "encdec":
-        frames = jax.random.normal(key, (B, spec.frontend_ctx, arch.cfg.d_model))
-        from ..models import zoo
-        memory = zoo.encode(params, arch.cfg, frames)
-
-    # NOTE: for simplicity each slot decodes independently but the batch
-    # steps together; slot-level cache_len bookkeeping uses the max (safe
-    # because positions are masked per the global cache_len in this demo).
-    slots = [None] * B
-    outputs = [[] for _ in range(B)]
-    n_steps = 0
-    t0 = time.time()
-
-    def prefill_slot(i):
-        nonlocal caches
-        prompt = queue.pop(0)
-        slots[i] = {"prompt": prompt, "generated": []}
-        # per-slot prefill: run tokens one at a time into the batch cache row
-        # (slot-level prefill; production would batch these)
-        for t, tok in enumerate(prompt):
-            tok_b = jnp.zeros((B, 1), jnp.int32).at[i, 0].set(int(tok))
-            _, _, c2 = serve_step(params, tok_b, caches,
-                                  jnp.int32(t), memory) if memory is not None \
-                else serve_step(params, tok_b, caches, jnp.int32(t))
-            caches = _merge_slot(caches, c2, i)
-
-    def _merge_slot(old, new, i):
-        def m(o, n):
-            if o.ndim >= 2 and o.shape[-4 if o.ndim >= 4 else 0] == B:
-                pass
-            return n  # single-slot demo: accept the new cache wholesale
-        return jax.tree.map(m, old, new)
-
-    # simple synchronous batch loop (all slots share position counters)
-    while queue or any(s is not None for s in slots):
-        for i in range(B):
-            if slots[i] is None and queue:
-                prefill_slot(i)
-        pos = args.prompt_len + max(len(s["generated"]) if s else 0 for s in slots)
-        tok_b = jnp.array([[s["generated"][-1] if s and s["generated"]
-                            else (s["prompt"][-1] if s else eos)] for s in slots],
-                          jnp.int32)
-        nxt, logits, caches = (serve_step(params, tok_b, caches, jnp.int32(pos), memory)
-                               if memory is not None else
-                               serve_step(params, tok_b, caches, jnp.int32(pos)))
-        n_steps += 1
-        nxt = np.asarray(nxt)
-        for i in range(B):
-            s = slots[i]
-            if s is None:
-                continue
-            t = int(nxt[i, 0])
-            s["generated"].append(t)
-            if t == eos or len(s["generated"]) >= args.max_new:
-                done.append(np.array(s["generated"]))
-                slots[i] = None
-
-    dt = time.time() - t0
-    print(f"served {len(done)} requests in {dt:.1f}s "
-          f"({n_steps} decode steps, batch {B})")
-    for i, g in enumerate(done[:4]):
-        print(f"  req{i}: {g[:12].tolist()}...")
-    return 0
+    if (args.arch is None) == (args.diffusion is None):
+        ap.error("pass exactly one of --arch / --diffusion")
+    return _serve_samples(args) if args.diffusion else _serve_tokens(args)
 
 
 if __name__ == "__main__":

@@ -3,12 +3,16 @@
   make_train_step(arch, opt_cfg)   full train step: loss -> grad -> clip ->
                                    AdamW (mixed precision; bf16 grads =
                                    compressed collectives) -> new params
-  make_prefill_step(arch, S)       forward + KV-cache fill (inference prefill)
-  make_serve_step(arch)            one-token decode against a fixed cache
+  make_prefill_step(arch, S)       forward + KV-cache fill (inference prefill;
+                                   the serving engine runs whole admission
+                                   groups through one call)
+  make_serve_step(arch)            one-token decode against a fixed cache;
+                                   cache_len is scalar or per-slot (B,)
   make_diffusion_train_step(spec)  DSM/HSM step for the paper's DMs
   make_diffusion_serve_step(spec)  one gDDIM predictor step (the sampler's
                                    inner loop body — what a sampling service
-                                   executes NFE times)
+                                   executes NFE times); step index k is
+                                   scalar or per-slot (B,)
 
 `shardings_for(...)` produces (params, opt, inputs) NamedShardings for any
 (arch x shape x mesh) cell from the rules in distributed/sharding.py.
@@ -59,6 +63,10 @@ def make_prefill_step(arch: Arch, max_len: int):
 
 
 def make_serve_step(arch: Arch):
+    """One-token greedy decode.  `cache_len` is a scalar (all rows at one
+    shared position) or a (B,) per-slot vector — the continuous-batching
+    engine (repro.serve) always passes the vector form so every slot decodes
+    at its own absolute position."""
     def serve_step(params, token, caches, cache_len, memory=None):
         logits, caches = arch.decode(params, token, caches, cache_len,
                                      memory=memory)
@@ -88,16 +96,28 @@ def make_diffusion_train_step(spec, opt_cfg: AdamWCfg):
 def make_diffusion_serve_step(spec, coeffs):
     """One deterministic gDDIM predictor step — the inner loop of a
     sampling service (executed NFE times per request batch).  `k` is the
-    step index 0..N-1 (advancing t_{N-k} -> t_{N-k-1})."""
+    step index 0..N-1 (advancing t_{N-k} -> t_{N-k-1}): a scalar when the
+    whole batch steps in lockstep, or a (B,) vector of per-slot indices for
+    the continuous-batching sampling service (repro.serve.DiffusionEngine),
+    where each slot gathers its own Psi/pC row and the per-example
+    coefficients go through `sde.apply_batched`.  Inactive slots may carry
+    any k; out-of-range indices are clipped and their rows ignored by the
+    engine."""
     N = coeffs.psi.shape[0]
 
     def serve_step(params, u, k):
-        i = N - k
-        t = jnp.full((u.shape[0],), 1.0, jnp.float32) * coeffs.ts[i]
+        k = jnp.asarray(k)
+        if k.ndim == 0:
+            i = N - k
+            t = jnp.full((u.shape[0],), 1.0, jnp.float32) * coeffs.ts[i]
+            eps = spec.eps_model(params, u, t)
+            return spec.sde.apply(coeffs.psi[k], u) + \
+                spec.sde.apply(coeffs.pC[k, 0], eps)
+        kc = jnp.clip(k, 0, N - 1)
+        t = coeffs.ts[N - kc]
         eps = spec.eps_model(params, u, t)
-        u_next = spec.sde.apply(coeffs.psi[k], u) + \
-            spec.sde.apply(coeffs.pC[k, 0], eps)
-        return u_next
+        return spec.sde.apply_batched(coeffs.psi[kc], u) + \
+            spec.sde.apply_batched(coeffs.pC[kc, 0], eps)
 
     return serve_step
 

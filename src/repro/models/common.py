@@ -130,6 +130,20 @@ def attn_params(key, d_model: int, n_heads: int, n_kv: int, d_head: int, dtype):
     }
 
 
+def decode_positions(seq_len: int, cache_len: Optional[Array]) -> Array:
+    """Absolute positions for a (B, S) input decoded against a cache.
+
+    Scalar `cache_len` (all rows at one position) -> (S,); per-slot (B,)
+    `cache_len` (continuous batching) -> (B, S).  None -> (S,) from zero.
+    """
+    if cache_len is None:
+        return jnp.arange(seq_len)
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 1:
+        return cl[:, None] + jnp.arange(seq_len)[None]
+    return jnp.arange(seq_len) + cl
+
+
 def attn_apply(p: Params, x: Array, *, n_heads: int, n_kv: int, d_head: int,
                causal: bool = True, window: Optional[int] = None,
                rope_theta: float = 10000.0, positions: Optional[Array] = None,
@@ -138,7 +152,10 @@ def attn_apply(p: Params, x: Array, *, n_heads: int, n_kv: int, d_head: int,
                x_kv: Optional[Array] = None) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
     """Returns (out, new_kv) where new_kv is (k, v) if a cache was provided
     or requested.  Decode mode: x is (B, 1, D), kv_cache is (B, Skv, Hkv, Dh)
-    pre-allocated; cache_len gives the number of valid entries."""
+    pre-allocated; cache_len gives the number of valid entries — a scalar
+    (all rows share one position) or a (B,) vector of per-row positions
+    (continuous batching: each slot writes its KV row and masks at its own
+    length; routed through the flash-decode kernel surface)."""
     B, Sq, D = x.shape
     src = x if x_kv is None else x_kv
     q = (x @ p["wq"]).reshape(B, Sq, n_heads, d_head)
@@ -151,6 +168,21 @@ def attn_apply(p: Params, x: Array, *, n_heads: int, n_kv: int, d_head: int,
         q = apply_rope(q, positions, rope_theta)
         k = apply_rope(k, positions if x_kv is None else jnp.arange(src.shape[1]),
                        rope_theta)
+
+    per_slot = cache_len is not None and jnp.ndim(cache_len) == 1
+    if kv_cache is not None and per_slot:
+        if Sq != 1:
+            raise ValueError("per-slot cache_len supports one-token decode "
+                             f"only; got Sq={Sq}")
+        ck, cv = kv_cache
+        # slot-wise KV write: row b lands at its own position cache_len[b]
+        ck = ck.at[jnp.arange(B), cache_len].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[jnp.arange(B), cache_len].set(v[:, 0].astype(cv.dtype))
+        from ..kernels.decode_attention import ops as decode_ops
+        out = decode_ops.decode_attention(q[:, 0], ck, cv, cache_len + 1,
+                                          window=window)
+        out = out.reshape(B, Sq, n_heads * d_head) @ p["wo"]
+        return out, (ck, cv)
 
     if kv_cache is not None:
         ck, cv = kv_cache

@@ -132,6 +132,30 @@ class Arch:
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self.cache_shapes(batch, max_len))
 
+    def cache_batch_axes(self, max_len: int) -> Any:
+        """Pytree (same structure as the cache) of ints: which axis of each
+        cache leaf is the batch/slot axis.  Probed by diffing shapes at two
+        batch sizes, so it is correct for any family layout (KV caches carry
+        batch at axis 1 under the scan-stacked group axis; recurrent states
+        at axis 1 under the layer axis; unrolled remainder KV at axis 0)."""
+        a = self.cache_shapes(2, max_len)
+        b = self.cache_shapes(3, max_len)
+
+        def axis(sa, sb):
+            diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                    if x != y]
+            if len(diff) != 1:
+                raise ValueError(f"ambiguous batch axis for leaf {sa.shape}")
+            return diff[0]
+
+        return jax.tree.map(axis, a, b)
+
+    def encode_memory(self, params: Any, frames: Optional[Array]) -> Optional[Array]:
+        """Encoder memory for encdec archs ((B, ctx, D)); None otherwise."""
+        if self.spec.family != "encdec":
+            return None
+        return zoo.encode(params, self.cfg, frames)
+
     def decode(self, params: Any, token: Array, caches: Any, cache_len: Array,
                memory: Optional[Array] = None) -> Tuple[Array, Any]:
         """One-token serve step.  token: (B, 1) int32."""
@@ -170,7 +194,9 @@ class Arch:
                                                embeddings=batch.get("embeddings"),
                                                caches=caches, cache_len=jnp.int32(0))
         elif fam == "encdec":
-            memory = zoo.encode(params, self.cfg, batch["frames"])
+            memory = batch.get("memory")
+            if memory is None:
+                memory = zoo.encode(params, self.cfg, batch["frames"])
             logits, caches = zoo.decode_forward(params, self.cfg, tokens, memory,
                                                 caches=caches, cache_len=jnp.int32(0))
         else:

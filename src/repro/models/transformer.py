@@ -186,17 +186,15 @@ def forward(params: Params, cfg: TransformerCfg, tokens: Array,
     Returns (logits, new_caches).  If `caches` is given, runs in cached mode
     (prefill when cache_len is None and S>1 semantics handled by caller via
     cache_len=0; decode when S==1 and cache_len>0)."""
+    from ..distributed.sharding import constrain_batch
     if embeddings is not None:
         x = embeddings.astype(cfg.dtype)
     else:
         x = params["embed"][tokens]
+    x = constrain_batch(x)
     B, S = x.shape[:2]
-    if cache_len is None:
-        positions = jnp.arange(S)
-        c_len = None
-    else:
-        positions = jnp.arange(S) + cache_len
-        c_len = cache_len
+    positions = common.decode_positions(S, cache_len)
+    c_len = cache_len
 
     P = cfg.pattern
 

@@ -67,7 +67,9 @@ def rwkv_init(key, cfg: RWKV6LMCfg) -> Params:
 def rwkv_forward(params: Params, cfg: RWKV6LMCfg, tokens: Array,
                  embeddings: Optional[Array] = None,
                  caches=None) -> Tuple[Array, Optional[Any]]:
+    from ..distributed.sharding import constrain_batch
     x = params["embed"][tokens] if embeddings is None else embeddings.astype(cfg.dtype)
+    x = constrain_batch(x)
 
     def body(x, xs):
         layer_p, cache = xs if caches is not None else (xs[0], None)
@@ -168,9 +170,11 @@ def zamba_forward(params: Params, cfg: Zamba2Cfg, tokens: Array,
                   embeddings: Optional[Array] = None,
                   caches=None, cache_len=None):
     """caches = (mamba_caches stacked (L, ...), kv_caches stacked (n_groups, ...))."""
+    from ..distributed.sharding import constrain_batch
     x = params["embed"][tokens] if embeddings is None else embeddings.astype(cfg.dtype)
+    x = constrain_batch(x)
     B, S = x.shape[:2]
-    positions = jnp.arange(S) + (cache_len if cache_len is not None else 0)
+    positions = common.decode_positions(S, cache_len)
     k = cfg.share_every
     G = cfg.n_groups
     # reshape layer stack into (G, k, ...) groups
@@ -313,9 +317,10 @@ def decode_forward(params: Params, cfg: EncDecCfg, tokens: Array, memory: Array,
                    caches=None, cache_len=None):
     """Decoder over `tokens` with cross-attention into `memory`.
     caches: stacked self-attn KV (L, B, S_max, Hkv, Dh) pairs."""
-    x = params["embed"][tokens]
+    from ..distributed.sharding import constrain_batch
+    x = constrain_batch(params["embed"][tokens])
     S = x.shape[1]
-    positions = jnp.arange(S) + (cache_len if cache_len is not None else 0)
+    positions = common.decode_positions(S, cache_len)
 
     def body(x, xs):
         lp, kv = xs if caches is not None else (xs[0], None)

@@ -1,0 +1,321 @@
+"""Continuous-batching engines: token decoding and gDDIM sampling.
+
+Both engines share the same discipline (one pre-allocated device batch of
+`batch_size` slots, FIFO admission through a `Scheduler`, per-slot progress
+tracked in a `SlotTable`, retire-and-refill without recompilation) and
+differ only in what a "step" is:
+
+  * `TokenEngine`  — a step is one greedy decode token for every active
+    slot.  Admission runs a *batched* prefill through `make_prefill_step`
+    (one forward over the whole admitted group — not token-at-a-time
+    through the decode step) and scatters the resulting cache rows
+    slot-wise into the engine cache, so prefilling one slot can never
+    touch another slot's KV rows.  Decode passes the per-slot position
+    vector `cache_len[b]` to the model: a freshly refilled slot decodes at
+    its own absolute position while its neighbours continue at theirs.
+
+  * `DiffusionEngine` — a step is one deterministic gDDIM predictor step
+    (`make_diffusion_serve_step`) for every active slot, each at its own
+    step index k; per-slot Psi/pC rows are gathered and applied through
+    `sde.apply_batched`.  A sampling request admitted mid-flight starts at
+    k=0 next to slots at k>0 — continuous batching for diffusion sampling.
+
+Compile behaviour: after warmup the decode/sampler step is one jitted
+program reused for every round regardless of which slots retire or refill
+(`compile_stats()` exposes the jit cache sizes so tests can assert this).
+Prefill compiles once per distinct prompt length actually seen — the
+scheduler's head-of-line grouping keeps groups single-shape, which is also
+a *correctness* requirement for the recurrent-state archs (right-padding a
+prompt would corrupt RWKV/Mamba state; KV caches merely mask it).
+
+Determinism: slots are batch rows and every per-row computation in the
+model stack is row-independent, so a request's output stream is bitwise
+identical whether it runs alone or interleaved with arbitrary neighbours
+(tests/test_serve_engine.py locks this in for a KV-cache arch, a
+recurrent-state arch, and the diffusion service).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..launch import steps as steps_lib
+from ..models.registry import Arch
+from ..core import build_sampler_coeffs, time_grid
+from .scheduler import Request, SampleRequest, Scheduler
+from .slots import SlotTable
+
+Array = jax.Array
+
+
+def _cache_size(jitted) -> int:
+    try:
+        return int(jitted._cache_size())
+    except Exception:                                   # pragma: no cover
+        return -1
+
+
+def _check_unique_rids(requests) -> None:
+    seen = set()
+    for r in requests:
+        if r.rid in seen:
+            raise ValueError(f"duplicate request rid {r.rid}: results are "
+                             "keyed by rid, a duplicate would be dropped")
+        seen.add(r.rid)
+
+
+def _make_row_scatter(batch_axes: List[int]):
+    """jitted (dst_tree, src_tree, slot_ids) -> dst_tree with src's batch
+    rows written at `slot_ids`.  `slot_ids` is padded to the source batch
+    size with an out-of-range sentinel; those rows are dropped, so one
+    compilation serves every admission group size."""
+
+    def scatter(dst_tree, src_tree, slot_ids):
+        dst_leaves, treedef = jax.tree.flatten(dst_tree)
+        src_leaves, _ = jax.tree.flatten(src_tree)
+        out = []
+        for d, s, ax in zip(dst_leaves, src_leaves, batch_axes):
+            dm = jnp.moveaxis(d, ax, 0)
+            sm = jnp.moveaxis(s, ax, 0).astype(d.dtype)
+            dm = dm.at[slot_ids].set(sm, mode="drop")
+            out.append(jnp.moveaxis(dm, 0, ax))
+        return jax.tree.unflatten(treedef, out)
+
+    return jax.jit(scatter)
+
+
+# ===========================================================================
+# Token decoding
+# ===========================================================================
+class TokenEngine:
+    """Continuous-batching greedy decode over any `Arch` family.
+
+    Usage:
+        engine = TokenEngine(arch, params, batch_size=8, max_len=256)
+        results = engine.serve([Request(rid=0, tokens=prompt, max_new=32), ...])
+        # results[rid] -> np.ndarray of generated token ids
+
+    The engine is persistent: repeated `serve()` calls reuse the allocated
+    cache and the compiled steps (retire-and-refill, no recompilation).
+    """
+
+    def __init__(self, arch: Arch, params: Any, batch_size: int, max_len: int,
+                 eos_id: int = 1):
+        self.arch = arch
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+
+        self.slots = SlotTable(batch_size)
+        self.scheduler = Scheduler(group_key=lambda r: r.prompt_len)
+
+        self.caches = arch.init_cache(batch_size, max_len)
+        axes_tree = arch.cache_batch_axes(max_len)
+        self._merge = _make_row_scatter(jax.tree.leaves(axes_tree))
+
+        self._decode = jax.jit(steps_lib.make_serve_step(arch))
+        self._prefill = jax.jit(steps_lib.make_prefill_step(arch, max_len))
+
+        self.memory: Optional[Array] = None
+        self._encode = None
+        if arch.spec.family == "encdec":
+            ctx, d = arch.spec.frontend_ctx, arch.cfg.d_model
+            self.memory = jnp.zeros((batch_size, ctx, d), jnp.float32)
+            self._encode = jax.jit(arch.encode_memory)
+            self._merge_memory = _make_row_scatter([0])
+
+        # throughput counters (benchmarks read these)
+        self.n_decode_steps = 0
+        self.n_prefill_calls = 0
+        self.n_tokens_out = 0
+
+    # ---- public API ---------------------------------------------------------
+    def serve(self, requests: List[Request]) -> Dict[int, np.ndarray]:
+        _check_unique_rids(requests)
+        for r in requests:
+            if r.prompt_len < 1:
+                raise ValueError(f"request {r.rid}: empty prompt")
+            if r.max_new < 1:
+                raise ValueError(f"request {r.rid}: max_new must be >= 1 "
+                                 f"(got {r.max_new})")
+            if r.prompt_len + r.max_new > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt_len {r.prompt_len} + max_new "
+                    f"{r.max_new} exceeds max_len {self.max_len}")
+            if self._encode is not None and r.frames is None:
+                raise ValueError(f"request {r.rid}: encdec arch needs frames")
+        self.scheduler.submit_all(requests)
+        results: Dict[int, np.ndarray] = {}
+        while self.scheduler.has_pending() or self.slots.active_ids():
+            self._admit(results)
+            if self.slots.active_ids():
+                self._decode_round(results)
+        return results
+
+    def compile_stats(self) -> Dict[str, int]:
+        stats = {"decode": _cache_size(self._decode),
+                 "prefill": _cache_size(self._prefill),
+                 "merge": _cache_size(self._merge)}
+        if self._encode is not None:
+            stats["encode"] = _cache_size(self._encode)
+        return stats
+
+    # ---- admission: batched prefill + slot-wise cache scatter ---------------
+    def _admit(self, results: Dict[int, np.ndarray]) -> None:
+        while True:
+            free = self.slots.free_ids()
+            group = self.scheduler.take_group(len(free))
+            if not group:
+                return
+            self._admit_group(group, free, results)
+
+    def _admit_group(self, group: List[Request], free: List[int],
+                     results: Dict[int, np.ndarray]) -> None:
+        PB, L = self.batch_size, group[0].prompt_len
+        toks = np.zeros((PB, L), np.int32)
+        for g, req in enumerate(group):
+            toks[g] = req.tokens
+        batch = {"tokens": jnp.asarray(toks)}
+        mem_g = None
+        if self._encode is not None:
+            frames = np.zeros(self.memory.shape, np.float32)
+            for g, req in enumerate(group):
+                frames[g] = req.frames
+            mem_g = self._encode(self.params, jnp.asarray(frames))
+            batch["memory"] = mem_g
+
+        logits_last, caches_g = self._prefill(self.params, batch)
+        self.n_prefill_calls += 1
+        first = np.asarray(jnp.argmax(logits_last, axis=-1)).astype(np.int32)
+
+        # slot-wise merge: row g of the group cache -> slot_ids[g]; padded
+        # rows carry the PB sentinel and are dropped (never touch the cache)
+        slot_ids = np.full((PB,), PB, np.int32)
+        for g, req in enumerate(group):
+            slot_ids[g] = free[g]
+        ids = jnp.asarray(slot_ids)
+        self.caches = self._merge(self.caches, caches_g, ids)
+        if mem_g is not None:
+            self.memory = self._merge_memory(self.memory, mem_g, ids)
+
+        for g, req in enumerate(group):
+            i = free[g]
+            self.slots.assign(i, req, pos=L, last=int(first[g]),
+                              out=[int(first[g])])
+            self.n_tokens_out += 1
+            self._maybe_retire(i, results)
+
+    # ---- one decode step for every active slot ------------------------------
+    def _decode_round(self, results: Dict[int, np.ndarray]) -> None:
+        B = self.batch_size
+        tok = np.zeros((B, 1), np.int32)
+        clen = np.zeros((B,), np.int32)
+        for s in self.slots.active():
+            tok[s.index, 0] = s.data["last"]
+            clen[s.index] = s.data["pos"]
+        nxt, _, self.caches = self._decode(
+            self.params, jnp.asarray(tok), self.caches, jnp.asarray(clen),
+            self.memory)
+        self.n_decode_steps += 1
+        nxt = np.asarray(nxt)
+        for s in self.slots.active():
+            t = int(nxt[s.index, 0])
+            s.data["pos"] += 1
+            s.data["last"] = t
+            s.data["out"].append(t)
+            self.n_tokens_out += 1
+            self._maybe_retire(s.index, results)
+
+    def _maybe_retire(self, i: int, results: Dict[int, np.ndarray]) -> None:
+        s = self.slots[i]
+        out = s.data["out"]
+        if out[-1] == self.eos_id or len(out) >= s.request.max_new:
+            results[s.request.rid] = np.asarray(out, np.int32)
+            self.slots.release(i)
+
+
+# ===========================================================================
+# gDDIM sampling service
+# ===========================================================================
+class DiffusionEngine:
+    """Continuous-batching gDDIM sampling: slots are samples, the per-slot
+    position is the sampler step index k in 0..nfe-1.
+
+    Usage:
+        engine = DiffusionEngine(spec, params, batch_size=16, nfe=50)
+        results = engine.serve([SampleRequest(rid=0, seed=0), ...])
+        # results[rid] -> np.ndarray sample in data space
+
+    Samples are a pure function of the request seed: admission order and
+    neighbouring slots cannot change a result (per-row independence).
+    """
+
+    def __init__(self, spec: Any, params: Any, batch_size: int, nfe: int,
+                 grid: str = "quadratic"):
+        self.spec = spec
+        self.params = params
+        self.batch_size = batch_size
+        self.nfe = nfe
+
+        ts = time_grid(spec.sde, nfe, grid)
+        # q=1 so pC[k, 0] is the exact single-step (DDIM-order) coefficient
+        self.coeffs = build_sampler_coeffs(spec.sde, ts, q=1, kt=spec.kt)
+        self._step = jax.jit(
+            steps_lib.make_diffusion_serve_step(spec, self.coeffs))
+
+        state = spec.sde.state_shape(tuple(spec.data_shape))
+        self.u = jnp.zeros((batch_size,) + state, jnp.float32)
+        self.slots = SlotTable(batch_size)
+        self.scheduler = Scheduler()           # all samples share one shape
+
+        self._prior1 = jax.jit(
+            lambda key: spec.sde.prior_sample(key, 1, tuple(spec.data_shape)))
+        self._set_row = jax.jit(lambda u, row, i: u.at[i].set(row[0]))
+        self._project_row = jax.jit(
+            lambda u, i: spec.sde.project_data(u[i][None])[0])
+
+        self.n_steps = 0
+        self.n_samples_out = 0
+
+    def serve(self, requests: List[SampleRequest]) -> Dict[int, np.ndarray]:
+        _check_unique_rids(requests)
+        self.scheduler.submit_all(requests)
+        results: Dict[int, np.ndarray] = {}
+        while self.scheduler.has_pending() or self.slots.active_ids():
+            self._admit()
+            if self.slots.active_ids():
+                self._step_round(results)
+        return results
+
+    def compile_stats(self) -> Dict[str, int]:
+        return {"step": _cache_size(self._step),
+                "prior": _cache_size(self._prior1)}
+
+    def _admit(self) -> None:
+        free = self.slots.free_ids()
+        for req in self.scheduler.take_group(len(free)):
+            i = free.pop(0)
+            row = self._prior1(jax.random.PRNGKey(req.seed))
+            self.u = self._set_row(self.u, row, i)
+            self.slots.assign(i, req, k=0)
+
+    def _step_round(self, results: Dict[int, np.ndarray]) -> None:
+        # inactive slots step at a clipped index on garbage rows; their
+        # result is never read and the row is overwritten at admission
+        k = np.full((self.batch_size,), self.nfe - 1, np.int32)
+        for s in self.slots.active():
+            k[s.index] = s.data["k"]
+        self.u = self._step(self.params, self.u, jnp.asarray(k))
+        self.n_steps += 1
+        for s in self.slots.active():
+            s.data["k"] += 1
+            if s.data["k"] >= self.nfe:
+                results[s.request.rid] = np.asarray(
+                    self._project_row(self.u, s.index))
+                self.n_samples_out += 1
+                self.slots.release(s.index)

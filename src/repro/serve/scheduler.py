@@ -1,0 +1,75 @@
+"""Request types + FIFO scheduler with head-of-line shape grouping.
+
+The scheduler is workload-agnostic: the same instance admits token-decoding
+requests (grouped by prompt length so one `make_prefill_step` call serves
+the whole group with a single shape — essential for the recurrent-state
+archs, whose prefill cannot tolerate right-padding) and diffusion sampling
+requests (ungrouped; every sample has the same state shape).
+
+Admission is FIFO with head-of-line grouping: `take_group(n)` pops up to
+`n` requests from the front whose group key equals the head's key.  A
+request with a new prompt length therefore waits for the current length
+run to drain rather than being reordered around — simple, starvation-free,
+and it keeps the number of distinct prefill shapes (→ compilations) at one
+per prompt length actually seen.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One token-decoding request: greedy-decode up to `max_new` tokens
+    (counting the one emitted by prefill) or until `eos`."""
+    rid: int
+    tokens: np.ndarray                  # (L,) int32 prompt
+    max_new: int = 16
+    frames: Optional[np.ndarray] = None  # (ctx, d_model) f32, encdec archs
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.tokens))
+
+
+@dataclasses.dataclass
+class SampleRequest:
+    """One diffusion sampling request: one gDDIM sample, seeded so the
+    result is a pure function of `seed` (independent of admission order)."""
+    rid: int
+    seed: int = 0
+
+
+class Scheduler:
+    def __init__(self, group_key: Callable[[Any], Any] = lambda r: None):
+        self._queue: deque = deque()
+        self._group_key = group_key
+
+    def submit(self, request: Any) -> None:
+        self._queue.append(request)
+
+    def submit_all(self, requests) -> None:
+        for r in requests:
+            self.submit(r)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._queue)
+
+    def has_pending(self) -> bool:
+        return bool(self._queue)
+
+    def take_group(self, n: int) -> List[Any]:
+        """Pop up to `n` front requests sharing the head's group key."""
+        if n <= 0 or not self._queue:
+            return []
+        key = self._group_key(self._queue[0])
+        group = []
+        while self._queue and len(group) < n \
+                and self._group_key(self._queue[0]) == key:
+            group.append(self._queue.popleft())
+        return group

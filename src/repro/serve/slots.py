@@ -1,0 +1,65 @@
+"""Slot table: per-slot bookkeeping for the continuous-batching engines.
+
+A slot is one row of the device batch.  The engine pre-allocates `n` slots
+(the decode batch size) once; requests are admitted into free slots, run to
+completion at their own per-slot position, retire, and the slot is refilled
+— no reallocation, no recompilation, no cross-slot state.
+
+The two correctness bugs this table exists to prevent (both present in the
+old demo loop):
+
+  * cache clobbering — prefilling one slot must write only that slot's
+    cache rows.  The engine scatters prefill results slot-wise (see
+    `TokenEngine._merge`), keyed by `Slot.index`.
+  * shared positions — each slot decodes at its own `pos`; the engine
+    passes the per-slot vector to the model, never a batch-wide max.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Slot:
+    """One batch row.  `request` is None while free; `data` holds the
+    engine's per-slot state (position, last token, sampler step index...)."""
+    index: int
+    request: Optional[Any] = None
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class SlotTable:
+    def __init__(self, n_slots: int):
+        self.slots: List[Slot] = [Slot(i) for i in range(n_slots)]
+
+    def __len__(self) -> int:
+        return len(self.slots)
+
+    def __getitem__(self, i: int) -> Slot:
+        return self.slots[i]
+
+    def free_ids(self) -> List[int]:
+        return [s.index for s in self.slots if s.free]
+
+    def active_ids(self) -> List[int]:
+        return [s.index for s in self.slots if not s.free]
+
+    def active(self) -> List[Slot]:
+        return [s for s in self.slots if not s.free]
+
+    def assign(self, index: int, request: Any, **data) -> Slot:
+        s = self.slots[index]
+        assert s.free, f"slot {index} already occupied"
+        s.request = request
+        s.data = dict(data)
+        return s
+
+    def release(self, index: int) -> None:
+        s = self.slots[index]
+        s.request = None
+        s.data = {}

@@ -15,8 +15,8 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 from repro.distributed.sharding import (ShardCfg, param_spec, batch_spec,
                                         kv_cache_spec)
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 CFG = ShardCfg()
 
 

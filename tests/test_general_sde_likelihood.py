@@ -44,8 +44,17 @@ class TestGeneralSDE:
                                        rtol=2e-2, atol=2e-3)
             u = gsde.apply(co.psi[k], u) + gsde.apply(co.pC[k, 0], e)
 
-    def test_one_step_dirac_recovery(self, gsde):
-        """Prop 2/4: exact score + K=R recovers the data point in ONE step."""
+    def test_one_step_dirac_recovery(self):
+        """Prop 2/4: exact score + K=R recovers the data point in ONE step.
+
+        The achievable accuracy is floored by the diffusion width at the
+        stopping time — the flow transports the prior to p_{t_min}, whose
+        x-channel std is sqrt(Sigma_x(t_min)) ~ sqrt(G2_xx * t_min)
+        (verified: the residual spread tracks this scale exactly and is
+        NFE-independent, i.e. it is not sampler error).  The default
+        t_min=1e-3 gives a 0.025 floor, wider than these bounds, so the
+        recovery test stops at t_min=1e-4 (floor 0.008)."""
+        gsde = GeneralSDE(t_min=1e-4)
         mix = GaussianMixture(np.array([[0.37]]), np.array([1e-5]), np.array([1.0]))
         oracle = ExactScore(gsde, mix)
         ts = np.array([gsde.t_min, gsde.T])

@@ -98,6 +98,24 @@ def test_decode_attention_skips_invalid_blocks():
     np.testing.assert_allclose(np.asarray(out), 0.0)
 
 
+@pytest.mark.parametrize("window", [None, 32, 64, 300])
+def test_decode_attention_per_row_clen_and_window(window):
+    """Continuous-batching paths of the Pallas kernel: per-row (B,)
+    cache_len vectors (each row masks/skips at its own valid length) and
+    sliding-window masking, against the jnp oracle in interpret mode."""
+    B, Hq, Hkv, Dh, S = 4, 8, 2, 32, 256
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh))
+    clen = jnp.array([3, 64, 129, 256], jnp.int32)      # straddles blocks
+    ref = decode_attention_ref(q, k, v, clen, window=window)
+    out = decode_attention(q, k, v, clen, block_k=64, window=window,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # ei_update (fused gDDIM state update)
 # ---------------------------------------------------------------------------

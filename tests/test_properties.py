@@ -3,6 +3,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (see requirements-dev.txt); "
+           "property tests degrade to a skip without it")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.sde import VPSDE, CLD, BDM
