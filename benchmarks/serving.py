@@ -5,11 +5,17 @@ for serving rows the quality columns carry throughput instead:
 
   * token rows     — config "<arch>_B<batch>", us_per_call = us per decode
                      round, sw2 column = tokens/s
-  * diffusion rows — config "gddim_B<batch>", nfe = sampler NFE,
-                     us_per_call = us per batch step, sw2 column = samples/s
+  * diffusion rows — config "gddim_B<batch>" for homogeneous traffic
+                     (every request at the default NFE) and
+                     "gddim_mix_B<batch>" for heterogeneous traffic (a mix
+                     of NFE budgets, multistep orders, and the corrector
+                     cycling through one engine/one compiled step);
+                     nfe = the default sampler NFE, us_per_call = us per
+                     batch step, sw2 column = samples/s
 
 Reduced CPU configs: the numbers are for *relative* tracking (batch scaling,
-regression against the per-request loop), not absolute hardware claims.
+homogeneous vs mixed traffic, regression against the per-request loop), not
+absolute hardware claims.
 """
 from __future__ import annotations
 
@@ -55,15 +61,26 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
             yield (f"serving,{arch_name}_B{B},0,{us_round:.0f},"
                    f"{toks / dt:.1f},0")
 
-    # ---- gDDIM sampling service ----
+    # ---- gDDIM sampling service: homogeneous vs mixed traffic ----
     spec = get_diffusion("cifar10-ddpm", reduced=True)
     params = spec.init(jax.random.PRNGKey(0))
+    # mixed traffic cycles a preview, a multistep render, a corrector
+    # render, and a stochastic sample through ONE engine (one compiled
+    # step, per-slot configs)
+    mix = [dict(nfe=max(nfe // 2, 2)),
+           dict(nfe=nfe, q=2),
+           dict(nfe=nfe, q=2, corrector=True),
+           dict(nfe=nfe, lam=0.5)]
     for B in batches:
-        engine = DiffusionEngine(spec, params, batch_size=B, nfe=nfe)
-        engine.serve([SampleRequest(rid=-1, seed=0)])  # warmup + compile
-        s0, t0 = engine.n_steps, time.perf_counter()
-        engine.serve([SampleRequest(rid=i, seed=i) for i in range(n_requests)])
-        dt = time.perf_counter() - t0
-        us_step = 1e6 * dt / max(engine.n_steps - s0, 1)
-        yield (f"serving,gddim_B{B},{nfe},{us_step:.0f},"
-               f"{n_requests / dt:.2f},0")
+        for tag, kinds in (("", [dict()]), ("mix_", mix)):
+            engine = DiffusionEngine(spec, params, batch_size=B, nfe=nfe)
+            engine.serve([SampleRequest(rid=-1 - i, seed=0, **kw)
+                          for i, kw in enumerate(kinds)])   # warmup + compile
+            s0, t0 = engine.n_steps, time.perf_counter()
+            engine.serve([SampleRequest(rid=i, seed=i,
+                                        **kinds[i % len(kinds)])
+                          for i in range(n_requests)])
+            dt = time.perf_counter() - t0
+            us_step = 1e6 * dt / max(engine.n_steps - s0, 1)
+            yield (f"serving,gddim_{tag}B{B},{nfe},{us_step:.0f},"
+                   f"{n_requests / dt:.2f},0")

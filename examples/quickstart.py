@@ -11,7 +11,11 @@ supervised — Eq. 80), then samples with:
 and reports sliced-W2 to ground truth at NFE in {10, 50}.
 
     PYTHONPATH=src:. python examples/quickstart.py
+
+`--smoke` (CI) shrinks training to a few hundred steps and samples at one
+NFE — same code path end to end, seconds instead of minutes.
 """
+import argparse
 import sys
 
 import numpy as np
@@ -30,7 +34,15 @@ from repro.optim.adamw import AdamWCfg, adamw_init, adamw_update
 from benchmarks.common import sliced_w2, mode_recovery
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer train steps, one NFE")
+    args = ap.parse_args(argv)
+    train_steps = 300 if args.smoke else 2500
+    nfes = (10,) if args.smoke else (10, 50)
+    n_eval = 1000 if args.smoke else 4000
+
     key = jax.random.PRNGKey(0)
     sde = CLD()
     ang = np.linspace(0, 2 * np.pi, 4, endpoint=False)
@@ -40,7 +52,7 @@ def main():
     # ---- train (DSM/HSM with K_t = R_t; both eps channels supervised) -----
     cfg = MLPScoreCfg(state_shape=(2, 2), hidden=192, n_blocks=3)
     params = mlp_score_init(key, cfg)
-    opt_cfg = AdamWCfg(lr=2e-3, warmup_steps=50, total_steps=2500,
+    opt_cfg = AdamWCfg(lr=2e-3, warmup_steps=50, total_steps=train_steps,
                        weight_decay=0.0)
     opt = adamw_init(params, opt_cfg)
     tables = losses.build_perturb_tables(sde, kt="R")
@@ -56,7 +68,7 @@ def main():
         return params, opt, l
 
     print("training MLP score net on CLD (K_t = R_t, HSM) ...")
-    for i in range(2500):
+    for i in range(train_steps):
         k1, k2, key = jax.random.split(key, 3)
         x0 = mix.sample(k1, 256)
         params, opt, l = step(params, opt, x0, k2)
@@ -64,34 +76,42 @@ def main():
             print(f"  step {i:4d}  dsm-loss {float(l):.4f}")
 
     # ---- sample --------------------------------------------------------------
-    truth = np.asarray(mix.sample(jax.random.PRNGKey(42), 4000))
+    truth = np.asarray(mix.sample(jax.random.PRNGKey(42), n_eval))
+    sw2_seen = []
     print(f"\n{'sampler':28s} {'NFE':>4s} {'sw2':>8s} {'modes':>6s}")
-    for nfe in (10, 50):
+    for nfe in nfes:
         ts = time_grid(sde, nfe)
         eps_fn = losses.make_eps_fn_from_model(
             sde, lambda u, t: mlp_score_apply(params, cfg, u, t), ts)
-        uT = sde.prior_sample(jax.random.PRNGKey(7), 4000, (2,))
+        uT = sde.prior_sample(jax.random.PRNGKey(7), n_eval, (2,))
+
+        def report(label, x):
+            sw2 = sliced_w2(np.asarray(x), truth)
+            sw2_seen.append(sw2)
+            print(f"{label:28s} {nfe:4d} {sw2:8.4f} "
+                  f"{mode_recovery(np.asarray(x), mix):6.2f}")
 
         for q in (1, 2):
             co = build_sampler_coeffs(sde, ts, q=q)
             x = sde.project_data(sample_gddim(sde, co, eps_fn, uT, q=q))
-            print(f"{'gDDIM det (q=%d)' % q:28s} {nfe:4d} "
-                  f"{sliced_w2(np.asarray(x), truth):8.4f} "
-                  f"{mode_recovery(np.asarray(x), mix):6.2f}")
+            report("gDDIM det (q=%d)" % q, x)
 
         co_s = build_sampler_coeffs(sde, ts, q=1, lam=0.5)
         x = sde.project_data(sample_gddim_stochastic(
             sde, co_s, eps_fn, uT, jax.random.PRNGKey(9)))
-        print(f"{'gDDIM stoch (lam=0.5)':28s} {nfe:4d} "
-              f"{sliced_w2(np.asarray(x), truth):8.4f} "
-              f"{mode_recovery(np.asarray(x), mix):6.2f}")
+        report("gDDIM stoch (lam=0.5)", x)
 
         co_em = build_sampler_coeffs(sde, ts, q=1, lam=1.0)
         x = sde.project_data(sample_em(sde, co_em, eps_fn, uT,
                                        jax.random.PRNGKey(9), lam=1.0))
-        print(f"{'Euler-Maruyama (lam=1)':28s} {nfe:4d} "
-              f"{sliced_w2(np.asarray(x), truth):8.4f} "
-              f"{mode_recovery(np.asarray(x), mix):6.2f}")
+        report("Euler-Maruyama (lam=1)", x)
+
+    # smoke gate: a short run can't hit the paper's numbers, but every
+    # sampler must at least produce finite samples
+    if not np.all(np.isfinite(sw2_seen)):
+        print("FAIL: non-finite sliced-W2 — the sampling path is broken",
+              file=sys.stderr)
+        return 1
     return 0
 
 

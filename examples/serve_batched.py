@@ -18,13 +18,25 @@ Two workloads ride the same scheduler/slot-table machinery:
    runs alone or interleaved with neighbours (tests/test_serve_engine.py).
 
 2. gDDIM sampling as a service (`repro.serve.DiffusionEngine`): slots are
-   samples, the per-slot position is the sampler step index k, and one
-   jitted `make_diffusion_serve_step` advances slots at different k in the
-   same batch — the paper's cheap-NFE sampler behind a serving interface:
+   samples, the per-slot position is the sampler step index k, and each
+   request carries its *own sampler config* — NFE budget, multistep order
+   q, Eq. 45 corrector, stochasticity lambda.  One jitted
+   `make_diffusion_serve_step` (bank mode) advances slots at different k
+   AND different configs in the same batch, gathering each slot's
+   coefficient rows from a stacked, bucket-padded `CoeffBank` built once
+   per distinct config by the host-side `CoeffCache`:
 
        engine  = DiffusionEngine(spec, params, batch_size=4, nfe=20)
-       results = engine.serve([SampleRequest(rid=0, seed=0), ...])
+       results = engine.serve([
+           SampleRequest(rid=0, seed=0),                  # engine default
+           SampleRequest(rid=1, seed=1, nfe=5),           # fast preview
+           SampleRequest(rid=2, seed=2, nfe=20, q=2, corrector=True),
+           SampleRequest(rid=3, seed=3, nfe=10, lam=0.5), # stochastic
+       ])
        # results[rid] -> np.ndarray sample in data space
+
+   The paper's point — one trained score network supports the whole
+   sampler family (Eqs. 19/22/45) — behind one hot, batched program.
 
 Run:
     PYTHONPATH=src python examples/serve_batched.py
@@ -62,16 +74,33 @@ def serve_tokens(arch_name: str) -> None:
 
 
 def serve_samples() -> None:
-    print("== diffusion engine: cifar10-ddpm (reduced config)")
+    print("== diffusion engine: cifar10-ddpm (reduced config), mixed configs")
     spec = get_diffusion("cifar10-ddpm", reduced=True)
     params = spec.init(jax.random.PRNGKey(0))
     engine = DiffusionEngine(spec, params, batch_size=4, nfe=10)
-    results = engine.serve([SampleRequest(rid=i, seed=i) for i in range(6)])
+    # 6 requests, 4 distinct sampler configs, one engine: previews at 5
+    # NFE retire early and their slots are refilled while the q=2
+    # corrector renders are still mid-flight.  (4 distinct configs fit the
+    # coefficient cache's first config bucket — a 5th would grow the bank
+    # and cost a one-time recompile; see docs/serving.md.)
+    requests = [
+        SampleRequest(rid=0, seed=0),                       # default, 10 NFE
+        SampleRequest(rid=1, seed=1, nfe=5),                # fast preview
+        SampleRequest(rid=2, seed=2, nfe=5),
+        SampleRequest(rid=3, seed=3, nfe=10, q=2, corrector=True),
+        SampleRequest(rid=4, seed=4, nfe=5),                # another preview
+        SampleRequest(rid=5, seed=5, nfe=8, lam=0.5),       # stochastic
+    ]
+    results = engine.serve(requests)
     for rid in sorted(results):
-        x = results[rid]
-        print(f"  sample{rid}: shape={x.shape} mean={x.mean():+.3f} "
-              f"std={x.std():.3f}")
-    print(f"  {engine.n_steps} gDDIM rounds, compile={engine.compile_stats()}")
+        x, r = results[rid], requests[rid]
+        cfg = engine.config_of(r)
+        print(f"  sample{rid}: nfe={cfg.nfe} q={cfg.q} "
+              f"corrector={cfg.corrector} lam={cfg.lam} shape={x.shape} "
+              f"mean={x.mean():+.3f} std={x.std():.3f}")
+    print(f"  {engine.n_steps} gDDIM rounds, "
+          f"{len(engine.cache)} cached sampler configs, "
+          f"compile={engine.compile_stats()}")
 
 
 def main():

@@ -1,10 +1,13 @@
 """gDDIM core: Stage-I coefficient pipeline + Stage-II samplers."""
-from .coeffs import SamplerCoeffs, build_sampler_coeffs, time_grid, ddim_closed_form_check
+from .coeffs import (SamplerCoeffs, SamplerConfig, CoeffBank, CoeffCache,
+                     build_sampler_coeffs, bucket_size, time_grid,
+                     ddim_closed_form_check)
 from .gddim import (sample_gddim, sample_gddim_stochastic, sample_em,
                     sample_heun, sample_ancestral_bdm, sample_rk45_np)
 
 __all__ = [
-    "SamplerCoeffs", "build_sampler_coeffs", "time_grid", "ddim_closed_form_check",
+    "SamplerCoeffs", "SamplerConfig", "CoeffBank", "CoeffCache",
+    "build_sampler_coeffs", "bucket_size", "time_grid", "ddim_closed_form_check",
     "sample_gddim", "sample_gddim_stochastic", "sample_em", "sample_heun",
     "sample_ancestral_bdm", "sample_rk45_np",
 ]

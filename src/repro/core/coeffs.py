@@ -24,7 +24,7 @@ loop is branch-free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Sequence
+from typing import Callable, Dict, List, NamedTuple, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -181,6 +181,224 @@ def build_sampler_coeffs(
         Sigma=f32(Sig_stack),
         lam=float(lam),
     )
+
+
+# ---------------------------------------------------------------------------
+# Sampler-config cache: many sampler families, one compiled step.
+# ---------------------------------------------------------------------------
+# Bucket minima for the stacked bank.  A bank whose (configs, steps, order)
+# all fit inside the warmed bucket reuses the compiled step program verbatim:
+# the bank is an *argument* of the jitted step, so only a bucket overflow
+# (which doubles the padded axis) changes shapes and triggers one new
+# compilation.
+C_BUCKET_MIN = 4      # config slots
+N_BUCKET_MIN = 8      # sampler steps (NFE)
+Q_BUCKET_MIN = 2      # multistep order
+
+
+def bucket_size(n: int, minimum: int) -> int:
+    """Smallest power-of-two multiple of `minimum` that holds `n`."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """One point in gDDIM's sampler family (the per-request surface).
+
+    nfe        number of grid steps N (= model evaluations for the
+               predictor; the corrector adds N-1 more — see
+               `sample_gddim`'s NFE accounting)
+    q          exponential-multistep order (Eq. 19/41); stochastic
+               sampling is single-step, so q must be 1 when lam > 0
+    corrector  run the Eq. 45 corrector after every predictor step but
+               the last (Alg. 1)
+    lam        stochasticity level lambda of Eq. 22 (0 = deterministic)
+    grid       time-grid kind ('quadratic' | 'uniform', see `time_grid`)
+    """
+    nfe: int
+    q: int = 1
+    corrector: bool = False
+    lam: float = 0.0
+    grid: str = "quadratic"
+
+    def __post_init__(self):
+        if self.nfe < 1:
+            raise ValueError(f"nfe must be >= 1, got {self.nfe}")
+        if self.q < 1:
+            raise ValueError(f"q must be >= 1, got {self.q}")
+        if self.lam < 0.0:
+            raise ValueError(f"lam must be >= 0, got {self.lam}")
+        if self.lam > 0.0 and (self.q != 1 or self.corrector):
+            raise ValueError(
+                "stochastic gDDIM (lam > 0, Eq. 22) is single-step: "
+                "q must be 1 and corrector off")
+        if self.grid not in ("quadratic", "uniform"):
+            raise ValueError(f"unknown grid kind {self.grid!r}")
+
+
+class CoeffBank(NamedTuple):
+    """Stacked, bucket-padded Stage-I coefficients for >= 1 sampler configs.
+
+    Axis 0 is the config slot c, axis 1 the step index k (a step advances
+    t_i -> t_{i-1} with i = N_c - k).  Real data occupies [:C, :N_c(, :q_c)]
+    of each leaf; the padding is zeros (coefficients) or edge values (times)
+    and is never read because the serve step clips k to n_steps[c] - 1 and
+    zero coefficient rows annihilate their term.
+
+      t_cur   (C, Nb)             t_i   — model-eval time at step k
+      t_nxt   (C, Nb)             t_{i-1} — corrector-eval time at step k
+      psi     (C, Nb, *coeff)     transition Psi(t_{i-1}, t_i)
+      pC      (C, Nb, Qb, *coeff) predictor coeffs (Eq. 41)
+      cC      (C, Nb, Qb, *coeff) corrector coeffs (Eq. 46)
+      B       (C, Nb, *coeff)     (Psi_hat - Psi) R_{t_i} (Eq. 22 mean)
+      P_chol  (C, Nb, *coeff)     chol of injected covariance (Eq. 23)
+      n_steps (C,) int32          true N_c per config
+      stochastic (C,) bool        lam > 0 (selects the Eq. 22 update)
+      corrector  (C,) bool        Eq. 45 corrector enabled
+    """
+    t_cur: jnp.ndarray
+    t_nxt: jnp.ndarray
+    psi: jnp.ndarray
+    pC: jnp.ndarray
+    cC: jnp.ndarray
+    B: jnp.ndarray
+    P_chol: jnp.ndarray
+    n_steps: jnp.ndarray
+    stochastic: jnp.ndarray
+    corrector: jnp.ndarray
+
+    @property
+    def shape_key(self) -> Tuple[int, int, int]:
+        """(Cb, Nb, Qb) — two banks with equal shape_key share one compiled
+        step program."""
+        return (self.psi.shape[0], self.psi.shape[1], self.pC.shape[2])
+
+
+class CoeffCache:
+    """Host-side Stage-I coefficient cache keyed by
+    (sde family, grid kind, NFE, q, corrector, lambda).
+
+    `get(cfg)` memoizes `build_sampler_coeffs` per key (a hit returns the
+    identical `SamplerCoeffs` object; the corrector toggle is excluded from
+    this key because Stage I always computes both predictor and corrector
+    rows).  `index_of(cfg)` additionally assigns
+    the config a stable slot in the stacked `bank`, which pads every entry
+    to shared bucketed shapes so one compiled serve step handles any mix of
+    cached configs — heterogeneous NFE/q/corrector/lambda traffic in one
+    batch (repro.serve.DiffusionEngine).
+
+    Growth model, deliberately simple: slots are never evicted (stability
+    of `index_of` is what lets in-flight requests keep their index), and
+    registering a new config re-stacks the whole bank host-side.  That is
+    the right trade for a deployment serving a curated menu of configs
+    (tens, not thousands); a front end that lets clients pick *arbitrary*
+    floats for lam / any NFE should quantize them to a menu first, or
+    every distinct value permanently widens the bank and each config-
+    bucket overflow recompiles the step.
+    """
+
+    def __init__(self, sde: LinearSDE, kt: str = "R", quad_points: int = 48,
+                 rk_substeps: int = 32):
+        self.sde = sde
+        self.kt = kt
+        self.quad_points = quad_points
+        self.rk_substeps = rk_substeps
+        self._coeffs: Dict[tuple, SamplerCoeffs] = {}
+        self._configs: List[SamplerConfig] = []
+        self._slots: Dict[tuple, int] = {}
+        self._bank: CoeffBank | None = None
+
+    def key_of(self, cfg: SamplerConfig) -> tuple:
+        """Full config key (the bank-slot identity)."""
+        return (type(self.sde).__name__, cfg.grid, cfg.nfe, cfg.q,
+                cfg.corrector, cfg.lam)
+
+    def _coeff_key(self, cfg: SamplerConfig) -> tuple:
+        """Stage-I memo key: `build_sampler_coeffs` always computes both
+        predictor and corrector rows, so the corrector toggle shares one
+        coefficient computation."""
+        return (type(self.sde).__name__, cfg.grid, cfg.nfe, cfg.q, cfg.lam)
+
+    def __len__(self) -> int:
+        return len(self._configs)
+
+    @property
+    def configs(self) -> List[SamplerConfig]:
+        return list(self._configs)
+
+    def get(self, cfg: SamplerConfig) -> SamplerCoeffs:
+        """Stage-I coefficients for `cfg`; computed once per key."""
+        key = self._coeff_key(cfg)
+        if key not in self._coeffs:
+            ts = time_grid(self.sde, cfg.nfe, cfg.grid)
+            self._coeffs[key] = build_sampler_coeffs(
+                self.sde, ts, q=cfg.q, lam=cfg.lam, kt=self.kt,
+                quad_points=self.quad_points, rk_substeps=self.rk_substeps)
+        return self._coeffs[key]
+
+    def index_of(self, cfg: SamplerConfig) -> int:
+        """Config slot of `cfg` in `bank` (registers the config if new)."""
+        key = self.key_of(cfg)
+        if key not in self._slots:
+            self.get(cfg)                       # build coefficients eagerly
+            self._slots[key] = len(self._configs)
+            self._configs.append(cfg)
+            self._bank = None                   # bank is stale
+        return self._slots[key]
+
+    @property
+    def bank(self) -> CoeffBank:
+        if self._bank is None:
+            self._bank = self._build_bank()
+        return self._bank
+
+    def _build_bank(self) -> CoeffBank:
+        if not self._configs:
+            raise ValueError("CoeffCache.bank: no configs registered "
+                             "(call index_of first)")
+        coeff_shape = np.shape(np.asarray(self.sde.ops.eye()))
+        Cb = bucket_size(len(self._configs), C_BUCKET_MIN)
+        Nb = bucket_size(max(c.nfe for c in self._configs), N_BUCKET_MIN)
+        Qb = bucket_size(max(c.q for c in self._configs), Q_BUCKET_MIN)
+
+        t_cur = np.zeros((Cb, Nb), np.float64)
+        t_nxt = np.zeros((Cb, Nb), np.float64)
+        psi = np.zeros((Cb, Nb) + coeff_shape, np.float64)
+        pC = np.zeros((Cb, Nb, Qb) + coeff_shape, np.float64)
+        cC = np.zeros((Cb, Nb, Qb) + coeff_shape, np.float64)
+        B = np.zeros((Cb, Nb) + coeff_shape, np.float64)
+        P_chol = np.zeros((Cb, Nb) + coeff_shape, np.float64)
+        n_steps = np.ones((Cb,), np.int32)
+        stoch = np.zeros((Cb,), bool)
+        corr = np.zeros((Cb,), bool)
+
+        for c, cfg in enumerate(self._configs):
+            co = self.get(cfg)
+            N, q = cfg.nfe, cfg.q
+            ts = np.asarray(co.ts)
+            # step k advances i = N - k -> i - 1
+            t_cur[c, :N] = ts[N - np.arange(N)]
+            t_cur[c, N:] = ts[1]
+            t_nxt[c, :N] = ts[N - 1 - np.arange(N)]
+            t_nxt[c, N:] = ts[0]
+            psi[c, :N] = np.asarray(co.psi)
+            pC[c, :N, :q] = np.asarray(co.pC)
+            cC[c, :N, :q] = np.asarray(co.cC)
+            B[c, :N] = np.asarray(co.B)
+            P_chol[c, :N] = np.asarray(co.P_chol)
+            n_steps[c] = N
+            stoch[c] = cfg.lam > 0.0
+            corr[c] = cfg.corrector
+
+        f32 = lambda x: jnp.asarray(x, jnp.float32)
+        return CoeffBank(
+            t_cur=f32(t_cur), t_nxt=f32(t_nxt), psi=f32(psi), pC=f32(pC),
+            cC=f32(cC), B=f32(B), P_chol=f32(P_chol),
+            n_steps=jnp.asarray(n_steps),
+            stochastic=jnp.asarray(stoch), corrector=jnp.asarray(corr))
 
 
 def ddim_closed_form_check(sde, ts) -> np.ndarray:

@@ -1,5 +1,8 @@
 """Serving CLI: a thin driver over the `repro.serve` continuous-batching
-engines.
+engines (all engine logic — slot isolation, cache scatter, admission
+grouping, the sampler-coefficient cache — lives in `repro.serve` and
+`repro.core.coeffs`; this module only parses flags, builds a synthetic
+request stream, and reports throughput).
 
 Two workloads share the same scheduler/slot machinery:
 
@@ -9,26 +12,66 @@ Two workloads share the same scheduler/slot machinery:
         python -m repro.launch.serve --arch gemma3-1b --reduced --requests 12
 
   * gDDIM sampling as a service — slots are samples, each at its own
-    sampler step index:
+    sampler step index *and* its own sampler config.  Homogeneous traffic
+    uses the engine defaults (--nfe/--q/--corrector/--lam); heterogeneous
+    traffic cycles requests through --mix specs, one comma-separated
+    key=value config per spec:
 
         python -m repro.launch.serve --diffusion cifar10-ddpm --reduced \\
-            --requests 8 --nfe 20
+            --requests 9 --batch 3 \\
+            --mix nfe=10 nfe=50,q=2,corrector nfe=20,lam=0.5
 
-All engine logic (slot isolation, cache scatter, admission grouping) lives
-in `repro.serve.engine`; this module only parses flags, builds a synthetic
-request stream, and reports throughput.
+    One engine serves the whole mix from one compiled step program
+    (`compile_stats` is printed so you can see it).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
 import jax
 
 from ..configs import get_arch, get_diffusion, ARCH_IDS, DIFFUSION_MODULES
+from ..core import SamplerConfig
 from ..models.registry import Arch
 from ..serve import DiffusionEngine, Request, SampleRequest, TokenEngine
+
+
+def parse_sampler_spec(spec: str) -> dict:
+    """Parse one --mix item: 'nfe=50,q=2,corrector,lam=0.5,grid=uniform'.
+
+    Bare flags ('corrector') mean True; 'lambda' is accepted for 'lam'.
+    Returns a kwargs dict for `SampleRequest`; `main()` validates the
+    merged `SamplerConfig` (defaults + spec) before any device work."""
+    def parse_bool(v: str) -> bool:
+        v = v.strip().lower()
+        if v in ("", "1", "true", "yes", "on"):
+            return True
+        if v in ("0", "false", "no", "off"):
+            return False
+        raise ValueError(v)
+
+    convert = {"nfe": int, "q": int, "lam": float, "grid": str.strip,
+               "corrector": parse_bool}
+    out: dict = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        key, _, val = part.partition("=")
+        key = key.strip().replace("-", "_")
+        if key == "lambda":
+            key = "lam"
+        if key not in convert:
+            raise ValueError(f"unknown sampler-config key {key!r} in {spec!r}")
+        try:
+            out[key] = convert[key](val)
+        except ValueError:
+            raise ValueError(
+                f"bad value {val!r} for {key} in {spec!r}") from None
+    return out
 
 
 def _serve_tokens(args) -> int:
@@ -68,18 +111,28 @@ def _serve_tokens(args) -> int:
 def _serve_samples(args) -> int:
     spec = get_diffusion(args.diffusion, reduced=args.reduced)
     params = spec.init(jax.random.PRNGKey(args.seed))
+    default, mix = args.default_config, args.mix_parsed
     engine = DiffusionEngine(spec, params, batch_size=args.batch,
-                             nfe=args.nfe)
-    requests = [SampleRequest(rid=i, seed=args.seed + i)
-                for i in range(args.requests)]
+                             default_config=default)
+    requests = []
+    for i in range(args.requests):
+        kw = mix[i % len(mix)] if mix else {}
+        requests.append(SampleRequest(rid=i, seed=args.seed + i, **kw))
     t0 = time.time()
     results = engine.serve(requests)
     dt = time.time() - t0
     sps = engine.n_samples_out / max(dt, 1e-9)
+    kinds = ("mixed traffic, "
+             f"{len(engine.cache)} sampler configs") if mix else \
+        f"homogeneous @ NFE {default.nfe}"
     print(f"sampled {len(results)} requests in {dt:.1f}s "
-          f"({engine.n_steps} gDDIM rounds @ NFE {args.nfe}, "
+          f"({engine.n_steps} gDDIM rounds, {kinds}, "
           f"batch {args.batch}, {sps:.2f} samples/s)  "
           f"compile={engine.compile_stats()}")
+    if mix:
+        for cfg in engine.cache.configs:
+            print(f"  config: nfe={cfg.nfe} q={cfg.q} "
+                  f"corrector={cfg.corrector} lam={cfg.lam} grid={cfg.grid}")
     return 0
 
 
@@ -93,11 +146,41 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--nfe", type=int, default=20)
+    ap.add_argument("--nfe", type=int, default=20,
+                    help="default sampler NFE (grid steps)")
+    ap.add_argument("--q", type=int, default=1,
+                    help="default multistep order (Eq. 19)")
+    ap.add_argument("--corrector", action="store_true",
+                    help="default: run the Eq. 45 corrector")
+    ap.add_argument("--lam", "--lambda", type=float, default=0.0,
+                    dest="lam", help="default stochasticity lambda (Eq. 22)")
+    ap.add_argument("--grid", choices=("quadratic", "uniform"),
+                    default="quadratic")
+    ap.add_argument("--mix", nargs="+", metavar="SPEC",
+                    help="per-request sampler configs to cycle through, "
+                         "e.g. --mix nfe=10 nfe=50,q=2,corrector "
+                         "nfe=20,lam=0.5 (keys not named fall back to the "
+                         "defaults above)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if (args.arch is None) == (args.diffusion is None):
         ap.error("pass exactly one of --arch / --diffusion")
+    if args.mix and args.diffusion is None:
+        ap.error("--mix only applies to --diffusion serving")
+    if args.diffusion:
+        # validate the full merged configs (defaults + every --mix spec)
+        # here, before any model init / device work
+        try:
+            args.default_config = SamplerConfig(
+                nfe=args.nfe, q=args.q, corrector=args.corrector,
+                lam=args.lam, grid=args.grid)
+            args.mix_parsed = [parse_sampler_spec(s)
+                               for s in (args.mix or [])]
+            for kw in args.mix_parsed:
+                SamplerConfig(**{**dataclasses.asdict(args.default_config),
+                                 **kw})
+        except ValueError as e:
+            ap.error(str(e))
     return _serve_samples(args) if args.diffusion else _serve_tokens(args)
 
 

@@ -9,10 +9,15 @@
   make_serve_step(arch)            one-token decode against a fixed cache;
                                    cache_len is scalar or per-slot (B,)
   make_diffusion_train_step(spec)  DSM/HSM step for the paper's DMs
-  make_diffusion_serve_step(spec)  one gDDIM predictor step (the sampler's
-                                   inner loop body — what a sampling service
-                                   executes NFE times); step index k is
-                                   scalar or per-slot (B,)
+  make_diffusion_serve_step(spec)  one gDDIM step (the sampler's inner loop
+                                   body — what a sampling service executes
+                                   NFE times); single-config mode closes
+                                   over one Stage-I bank (scalar or (B,)
+                                   step index k), bank mode takes a stacked
+                                   CoeffBank argument plus per-slot
+                                   (k, cfg) indices so one compiled program
+                                   serves mixed NFE/q/corrector/lambda
+                                   traffic
 
 `shardings_for(...)` produces (params, opt, inputs) NamedShardings for any
 (arch x shape x mesh) cell from the rules in distributed/sharding.py.
@@ -93,33 +98,98 @@ def make_diffusion_train_step(spec, opt_cfg: AdamWCfg):
     return train_step
 
 
-def make_diffusion_serve_step(spec, coeffs):
-    """One deterministic gDDIM predictor step — the inner loop of a
-    sampling service (executed NFE times per request batch).  `k` is the
-    step index 0..N-1 (advancing t_{N-k} -> t_{N-k-1}): a scalar when the
-    whole batch steps in lockstep, or a (B,) vector of per-slot indices for
-    the continuous-batching sampling service (repro.serve.DiffusionEngine),
-    where each slot gathers its own Psi/pC row and the per-example
-    coefficients go through `sde.apply_batched`.  Inactive slots may carry
-    any k; out-of-range indices are clipped and their rows ignored by the
-    engine."""
-    N = coeffs.psi.shape[0]
+def make_diffusion_serve_step(spec, coeffs=None):
+    """One gDDIM step — the inner loop of a sampling service (executed NFE
+    times per request batch).  Two modes:
 
-    def serve_step(params, u, k):
-        k = jnp.asarray(k)
-        if k.ndim == 0:
-            i = N - k
-            t = jnp.full((u.shape[0],), 1.0, jnp.float32) * coeffs.ts[i]
+    * **single-config** (Stage-I `coeffs` given): the historical surface —
+      a deterministic q=1 predictor step closed over one coefficient bank.
+      `k` is the step index 0..N-1 (advancing t_{N-k} -> t_{N-k-1}): a
+      scalar when the whole batch steps in lockstep (the dry-run lowers
+      this form), or a (B,) vector of per-slot indices.
+
+    * **bank mode** (`coeffs=None`): the heterogeneous-config step used by
+      `repro.serve.DiffusionEngine`.  The stacked `CoeffBank` is an
+      *argument* (not a closure constant), so refreshing the bank with new
+      configs never recompiles as long as its bucketed shapes are stable.
+      Every slot b gathers its own psi/pC/cC/B/P_chol rows by (cfg[b], k[b])
+      and the per-example coefficients go through `sde.apply_batched`:
+
+          u, hist = step(params, u, hist, k, cfg, keys, bank,
+                         with_corrector=...)
+
+      with `u` (B, *state) the slot states, `hist` (B, Qb, *state) the
+      per-slot eps history (hist[:, j] ~ eps(t_{i+j}); zeroed at admission
+      — the Alg. 1 warm start lives in the bank's zero-padded low-order
+      pC rows), `k`/`cfg` (B,) int32, and `keys` (B, 2) uint32 per-slot
+      PRNG keys for the Eq. 22 stochastic branch (noise is keyed by
+      fold_in(key, k), so a slot's trajectory is a pure function of its
+      request seed).  `with_corrector` must be static under jit: the False
+      variant is the 1-eval predictor program, the True variant adds the
+      Eq. 45 corrector re-evaluation and applies it only to slots whose
+      config asks for it (and never on a slot's final step, matching
+      Alg. 1's NFE accounting).  Deterministic/stochastic configs mix
+      freely per-slot; inactive slots may carry any k — indices are
+      clipped and their rows ignored by the engine."""
+    if coeffs is not None:
+        N = coeffs.psi.shape[0]
+
+        def serve_step(params, u, k):
+            k = jnp.asarray(k)
+            if k.ndim == 0:
+                i = N - k
+                t = jnp.full((u.shape[0],), 1.0, jnp.float32) * coeffs.ts[i]
+                eps = spec.eps_model(params, u, t)
+                return spec.sde.apply(coeffs.psi[k], u) + \
+                    spec.sde.apply(coeffs.pC[k, 0], eps)
+            kc = jnp.clip(k, 0, N - 1)
+            t = coeffs.ts[N - kc]
             eps = spec.eps_model(params, u, t)
-            return spec.sde.apply(coeffs.psi[k], u) + \
-                spec.sde.apply(coeffs.pC[k, 0], eps)
-        kc = jnp.clip(k, 0, N - 1)
-        t = coeffs.ts[N - kc]
-        eps = spec.eps_model(params, u, t)
-        return spec.sde.apply_batched(coeffs.psi[kc], u) + \
-            spec.sde.apply_batched(coeffs.pC[kc, 0], eps)
+            return spec.sde.apply_batched(coeffs.psi[kc], u) + \
+                spec.sde.apply_batched(coeffs.pC[kc, 0], eps)
 
-    return serve_step
+        return serve_step
+
+    sde = spec.sde
+
+    def bank_step(params, u, hist, k, cfg, keys, bank, with_corrector=False):
+        kc = jnp.clip(jnp.asarray(k), 0, bank.n_steps[cfg] - 1)
+        t = bank.t_cur[cfg, kc]
+        eps = spec.eps_model(params, u, t)
+        hist = jnp.concatenate([eps[:, None], hist[:, :-1]], axis=1)
+        Qb = hist.shape[1]
+
+        u_lin = sde.apply_batched(bank.psi[cfg, kc], u)
+        # predictor (Eq. 19a): slots with q_c < Qb hit zero-padded pC rows,
+        # so the extra terms vanish identically
+        u_pred = u_lin
+        for j in range(Qb):
+            u_pred = u_pred + sde.apply_batched(bank.pC[cfg, kc, j],
+                                                hist[:, j])
+        # stochastic branch (Eq. 22/23); for deterministic configs P_chol
+        # is zero but the branch is still computed so every traffic mix
+        # runs the identical program (bitwise solo == interleaved)
+        state_shape = u.shape[1:]
+        noise = jax.vmap(
+            lambda key, kk: sde.noise_like(jax.random.fold_in(key, kk),
+                                           state_shape, u.dtype))(keys, kc)
+        u_sto = u_lin + sde.apply_batched(bank.B[cfg, kc], eps) \
+            + sde.apply_batched(bank.P_chol[cfg, kc], noise)
+        bmask = lambda m: m.reshape((-1,) + (1,) * (u.ndim - 1))
+        u_next = jnp.where(bmask(bank.stochastic[cfg]), u_sto, u_pred)
+
+        if with_corrector:
+            eps_n = spec.eps_model(params, u_pred, bank.t_nxt[cfg, kc])
+            u_corr = u_lin + sde.apply_batched(bank.cC[cfg, kc, 0], eps_n)
+            for j in range(1, Qb):
+                u_corr = u_corr + sde.apply_batched(bank.cC[cfg, kc, j],
+                                                    hist[:, j - 1])
+            # Alg. 1: no corrector on the final step (k == N_c - 1)
+            use_c = bank.corrector[cfg] & (kc < bank.n_steps[cfg] - 1)
+            u_next = jnp.where(bmask(use_c), u_corr, u_next)
+        return u_next, hist
+
+    return bank_step
 
 
 # ---------------------------------------------------------------------------

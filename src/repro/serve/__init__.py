@@ -9,18 +9,23 @@ engine:
                     cache-clobbering bugs: every slot owns its cache rows and
                     its own absolute position)
   * `Scheduler`   — FIFO admission with head-of-line grouping so prefill
-                    batches share one shape (no padding into recurrent state)
+                    batches share one shape (no padding into recurrent
+                    state) and sampling waves share a corrector cost class
   * `TokenEngine` — continuous-batching greedy decode over any Arch family
                     (KV-cache transformers, RWKV/Mamba recurrent state,
                     encoder-decoder with cross-attention memory)
   * `DiffusionEngine` — the same scheduling discipline applied to batched
                     gDDIM sampling: slots are samples, the per-slot position
-                    is the sampler step index k, and one jitted
+                    is the sampler step index k, and every request carries
+                    its own sampler config (NFE / multistep order q /
+                    corrector / stochasticity lambda).  One jitted
                     `make_diffusion_serve_step` serves slots at different k
-                    in the same batch.
+                    and different configs in the same batch, fed by the
+                    host-side Stage-I coefficient cache
+                    (`repro.core.coeffs.CoeffCache`).
 
-See `repro.launch.serve` for the CLI and `examples/serve_batched.py` for a
-worked walkthrough of the API.
+See `repro.launch.serve` for the CLI, `docs/serving.md` for the full API
+reference, and `examples/serve_batched.py` for a worked walkthrough.
 """
 from .slots import Slot, SlotTable
 from .scheduler import Request, SampleRequest, Scheduler

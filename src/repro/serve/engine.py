@@ -14,16 +14,24 @@ differ only in what a "step" is:
     vector `cache_len[b]` to the model: a freshly refilled slot decodes at
     its own absolute position while its neighbours continue at theirs.
 
-  * `DiffusionEngine` — a step is one deterministic gDDIM predictor step
-    (`make_diffusion_serve_step`) for every active slot, each at its own
-    step index k; per-slot Psi/pC rows are gathered and applied through
-    `sde.apply_batched`.  A sampling request admitted mid-flight starts at
-    k=0 next to slots at k>0 — continuous batching for diffusion sampling.
+  * `DiffusionEngine` — a step is one gDDIM update
+    (`make_diffusion_serve_step` in bank mode) for every active slot, each
+    at its own step index k *and* its own sampler config (NFE, multistep
+    order q, corrector, stochasticity lambda); per-slot Psi/pC/cC/B/P_chol
+    rows are gathered from a stacked `CoeffBank` by (cfg[b], k[b]) and
+    applied through `sde.apply_batched`.  A sampling request admitted
+    mid-flight starts at k=0 next to slots at k>0, and a 10-NFE preview
+    batches with a 50-NFE predictor-corrector render — continuous batching
+    for diffusion sampling across gDDIM's whole sampler family.
 
-Compile behaviour: after warmup the decode/sampler step is one jitted
-program reused for every round regardless of which slots retire or refill
-(`compile_stats()` exposes the jit cache sizes so tests can assert this).
-Prefill compiles once per distinct prompt length actually seen — the
+Compile behaviour: after warmup the decode/sampler step programs are
+reused for every round regardless of which slots retire or refill, and —
+for the diffusion engine — regardless of which sampler configs the traffic
+mixes, because the coefficient bank is a bucket-padded *argument* of the
+step (`compile_stats()` exposes the jit cache sizes so tests can assert
+this; the sampler step has at most two entries, the predictor-only and
+with-corrector variants).  Prefill compiles once per distinct prompt
+length actually seen — the
 scheduler's head-of-line grouping keeps groups single-shape, which is also
 a *correctness* requirement for the recurrent-state archs (right-padding a
 prompt would corrupt RWKV/Mamba state; KV caches merely mask it).
@@ -45,7 +53,7 @@ import jax.numpy as jnp
 
 from ..launch import steps as steps_lib
 from ..models.registry import Arch
-from ..core import build_sampler_coeffs, time_grid
+from ..core import CoeffCache, SamplerConfig
 from .scheduler import Request, SampleRequest, Scheduler
 from .slots import SlotTable
 
@@ -243,39 +251,87 @@ class TokenEngine:
 # gDDIM sampling service
 # ===========================================================================
 class DiffusionEngine:
-    """Continuous-batching gDDIM sampling: slots are samples, the per-slot
-    position is the sampler step index k in 0..nfe-1.
+    """Continuous-batching gDDIM sampling over a *heterogeneous* sampler
+    family: slots are samples, the per-slot position is the sampler step
+    index k, and every slot additionally carries its own sampler config —
+    NFE budget, multistep order q, Eq. 45 corrector toggle, and Eq. 22
+    stochasticity lambda.  One trained score network, one compiled step,
+    many scenarios: a 10-NFE preview batches with a 50-NFE
+    predictor-corrector render.
 
     Usage:
         engine = DiffusionEngine(spec, params, batch_size=16, nfe=50)
-        results = engine.serve([SampleRequest(rid=0, seed=0), ...])
+        results = engine.serve([
+            SampleRequest(rid=0, seed=0),                    # engine default
+            SampleRequest(rid=1, seed=1, nfe=10),            # fast preview
+            SampleRequest(rid=2, seed=2, nfe=50, q=2, corrector=True),
+            SampleRequest(rid=3, seed=3, nfe=20, lam=0.5),   # stochastic
+        ])
         # results[rid] -> np.ndarray sample in data space
 
-    Samples are a pure function of the request seed: admission order and
-    neighbouring slots cannot change a result (per-row independence).
+    Coefficients come from a host-side `CoeffCache` (Stage-I quadrature run
+    once per distinct config) whose stacked `CoeffBank` is padded to
+    bucketed shapes and passed to the jitted step as an argument — so
+    admitting a config the engine has never seen refreshes the bank
+    *contents* without recompiling, as long as the new config fits the
+    warmed buckets (`CoeffBank.shape_key`; a bucket overflow costs one
+    recompile, then the doubled bucket absorbs further growth).  The
+    corrector needs a second model evaluation per step, so the step has two
+    jit variants (static `with_corrector`); each round dispatches on
+    whether any *active* slot wants the corrector.  The scheduler keeps
+    admission waves homogeneous in that cost class, which biases runs of
+    same-class traffic into sharing rounds — it cannot prevent classes
+    from co-residing after retire-and-refill, so a predictor-only slot
+    admitted next to a mid-flight corrector render still rides the 2-eval
+    program (correct, just not cheaper) until the render retires.
+
+    Samples are a pure function of (request seed, sampler config): the
+    stochastic branch keys its per-step noise by fold_in(seed-derived key,
+    k), so admission order and neighbouring slots cannot change a result
+    (per-row independence, locked in bitwise by tests/test_serve_engine.py).
     """
 
-    def __init__(self, spec: Any, params: Any, batch_size: int, nfe: int,
-                 grid: str = "quadratic"):
+    _NOISE_SALT = 0x5EED              # separates step noise from the prior
+
+    def __init__(self, spec: Any, params: Any, batch_size: int,
+                 nfe: Optional[int] = None, grid: Optional[str] = None,
+                 default_config: Optional[SamplerConfig] = None):
         self.spec = spec
         self.params = params
         self.batch_size = batch_size
-        self.nfe = nfe
+        if default_config is None:
+            default_config = SamplerConfig(
+                nfe=20 if nfe is None else nfe,
+                grid="quadratic" if grid is None else grid)
+        elif nfe is not None or grid is not None:
+            raise ValueError("pass either nfe/grid or default_config, "
+                             "not both")
+        self.default_config = default_config
+        self.nfe = default_config.nfe
 
-        ts = time_grid(spec.sde, nfe, grid)
-        # q=1 so pC[k, 0] is the exact single-step (DDIM-order) coefficient
-        self.coeffs = build_sampler_coeffs(spec.sde, ts, q=1, kt=spec.kt)
-        self._step = jax.jit(
-            steps_lib.make_diffusion_serve_step(spec, self.coeffs))
+        self.cache = CoeffCache(spec.sde, kt=spec.kt)
+        self.cache.index_of(default_config)
+        # single-config Stage-I bank of the default config (reference /
+        # introspection surface; the serve loop reads the stacked bank)
+        self.coeffs = self.cache.get(default_config)
+        self._step = jax.jit(steps_lib.make_diffusion_serve_step(spec),
+                             static_argnames=("with_corrector",))
 
         state = spec.sde.state_shape(tuple(spec.data_shape))
+        self._state = state
         self.u = jnp.zeros((batch_size,) + state, jnp.float32)
+        self.hist = jnp.zeros(
+            (batch_size, self.cache.bank.pC.shape[2]) + state, jnp.float32)
+        self.keys = np.zeros((batch_size, 2), np.uint32)
         self.slots = SlotTable(batch_size)
-        self.scheduler = Scheduler()           # all samples share one shape
+        # admission waves group by corrector cost class (see class docs)
+        self.scheduler = Scheduler(
+            group_key=lambda r: self.config_of(r).corrector)
 
         self._prior1 = jax.jit(
             lambda key: spec.sde.prior_sample(key, 1, tuple(spec.data_shape)))
         self._set_row = jax.jit(lambda u, row, i: u.at[i].set(row[0]))
+        self._zero_row = jax.jit(lambda h, i: h.at[i].set(0.0))
         self._project_row = jax.jit(
             lambda u, i: spec.sde.project_data(u[i][None])[0])
 
@@ -284,6 +340,11 @@ class DiffusionEngine:
 
     def serve(self, requests: List[SampleRequest]) -> Dict[int, np.ndarray]:
         _check_unique_rids(requests)
+        for r in requests:
+            try:
+                self.config_of(r)       # fail fast, before any device work
+            except ValueError as e:
+                raise ValueError(f"request {r.rid}: {e}") from None
         self.scheduler.submit_all(requests)
         results: Dict[int, np.ndarray] = {}
         while self.scheduler.has_pending() or self.slots.active_ids():
@@ -293,28 +354,71 @@ class DiffusionEngine:
         return results
 
     def compile_stats(self) -> Dict[str, int]:
+        # step counts both jit variants (predictor-only / with-corrector);
+        # after warmup it stays put across any traffic mix whose configs
+        # fit the warmed coefficient buckets
         return {"step": _cache_size(self._step),
                 "prior": _cache_size(self._prior1)}
 
+    def config_of(self, req: SampleRequest) -> SamplerConfig:
+        d = self.default_config
+        pick = lambda v, dv: dv if v is None else v
+        return SamplerConfig(
+            nfe=pick(req.nfe, d.nfe), q=pick(req.q, d.q),
+            corrector=pick(req.corrector, d.corrector),
+            lam=pick(req.lam, d.lam), grid=pick(req.grid, d.grid))
+
     def _admit(self) -> None:
+        # one head-of-line group per round: an admission wave is
+        # homogeneous in corrector cost class (the next class waits for
+        # the next round rather than being reordered around)
         free = self.slots.free_ids()
-        for req in self.scheduler.take_group(len(free)):
+        group = self.scheduler.take_group(len(free))
+        if not group:
+            return
+        # register the whole wave's configs before touching the bank, so
+        # it restacks at most once per wave (not once per new config)
+        cfgs = [self.config_of(req) for req in group]
+        idx = [self.cache.index_of(cfg) for cfg in cfgs]
+        self._sync_hist_bucket()
+        for req, cfg, ci in zip(group, cfgs, idx):
             i = free.pop(0)
-            row = self._prior1(jax.random.PRNGKey(req.seed))
+            base = jax.random.PRNGKey(req.seed)
+            row = self._prior1(base)
             self.u = self._set_row(self.u, row, i)
-            self.slots.assign(i, req, k=0)
+            self.hist = self._zero_row(self.hist, i)
+            self.keys[i] = np.asarray(
+                jax.random.fold_in(base, self._NOISE_SALT))
+            self.slots.assign(i, req, k=0, cfg=ci, nfe=cfg.nfe,
+                              pc=cfg.corrector)
+
+    def _sync_hist_bucket(self) -> None:
+        """Grow the per-slot eps-history buffer when the bank's multistep
+        bucket Qb grows (a shape change — i.e. one-time warmup cost)."""
+        qb = self.cache.bank.pC.shape[2]
+        if self.hist.shape[1] < qb:
+            pad = np.zeros((self.batch_size, qb - self.hist.shape[1])
+                           + self._state, np.float32)
+            self.hist = jnp.concatenate([self.hist, jnp.asarray(pad)], axis=1)
 
     def _step_round(self, results: Dict[int, np.ndarray]) -> None:
         # inactive slots step at a clipped index on garbage rows; their
         # result is never read and the row is overwritten at admission
-        k = np.full((self.batch_size,), self.nfe - 1, np.int32)
+        k = np.zeros((self.batch_size,), np.int32)
+        c = np.zeros((self.batch_size,), np.int32)
+        with_corr = False
         for s in self.slots.active():
             k[s.index] = s.data["k"]
-        self.u = self._step(self.params, self.u, jnp.asarray(k))
+            c[s.index] = s.data["cfg"]
+            with_corr = with_corr or s.data["pc"]
+        self.u, self.hist = self._step(
+            self.params, self.u, self.hist, jnp.asarray(k), jnp.asarray(c),
+            jnp.asarray(self.keys), self.cache.bank,
+            with_corrector=with_corr)
         self.n_steps += 1
         for s in self.slots.active():
             s.data["k"] += 1
-            if s.data["k"] >= self.nfe:
+            if s.data["k"] >= s.data["nfe"]:
                 results[s.request.rid] = np.asarray(
                     self._project_row(self.u, s.index))
                 self.n_samples_out += 1

@@ -4,7 +4,11 @@ The scheduler is workload-agnostic: the same instance admits token-decoding
 requests (grouped by prompt length so one `make_prefill_step` call serves
 the whole group with a single shape — essential for the recurrent-state
 archs, whose prefill cannot tolerate right-padding) and diffusion sampling
-requests (ungrouped; every sample has the same state shape).
+requests (grouped by coefficient cost class: every sample shares one state
+shape, but the `DiffusionEngine` keys admission on whether a config needs
+the 2-eval corrector program, so admission waves are class-homogeneous and
+runs of cheap predictor-only traffic tend to share rounds; classes can
+still co-reside after retire-and-refill — see the engine docstring).
 
 Admission is FIFO with head-of-line grouping: `take_group(n)` pops up to
 `n` requests from the front whose group key equals the head's key.  A
@@ -39,9 +43,21 @@ class Request:
 @dataclasses.dataclass
 class SampleRequest:
     """One diffusion sampling request: one gDDIM sample, seeded so the
-    result is a pure function of `seed` (independent of admission order)."""
+    result is a pure function of `seed` and the sampler config
+    (independent of admission order and of neighbouring slots).
+
+    The sampler-config fields select a member of gDDIM's sampler family
+    (see `repro.core.coeffs.SamplerConfig`); `None` means "use the
+    engine's default".  One `DiffusionEngine` serves any mix of configs
+    in the same batch — a 10-NFE preview can share slots with a 50-NFE
+    predictor-corrector render."""
     rid: int
     seed: int = 0
+    nfe: Optional[int] = None           # grid steps N
+    q: Optional[int] = None             # multistep order (Eq. 19)
+    corrector: Optional[bool] = None    # Eq. 45 / Alg. 1 corrector
+    lam: Optional[float] = None         # stochasticity lambda (Eq. 22)
+    grid: Optional[str] = None          # 'quadratic' | 'uniform'
 
 
 class Scheduler:

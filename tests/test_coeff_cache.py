@@ -1,0 +1,127 @@
+"""Stage-I coefficient cache: memoization, bank stacking, and bucketing.
+
+The cache is the host half of heterogeneous-config serving: Stage-I
+quadrature runs once per distinct (sde family, grid, NFE, q, corrector,
+lambda) key, and the stacked `CoeffBank` pads every entry to shared
+bucketed shapes so the device step program is reused across any traffic
+mix (see tests/test_serve_engine.py for the engine-level lockdown).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CoeffCache, SamplerConfig, bucket_size,
+                        build_sampler_coeffs, time_grid)
+from repro.core.coeffs import C_BUCKET_MIN, N_BUCKET_MIN, Q_BUCKET_MIN
+from repro.sde import VPSDE, CLD
+
+
+def test_cache_hit_returns_identical_bank_object():
+    cache = CoeffCache(VPSDE())
+    cfg = SamplerConfig(nfe=6, q=2)
+    co1 = cache.get(cfg)
+    co2 = cache.get(SamplerConfig(nfe=6, q=2))    # equal key, fresh object
+    assert co1 is co2
+    # a different key is a different bank
+    assert cache.get(SamplerConfig(nfe=6, q=1)) is not co1
+    assert cache.get(SamplerConfig(nfe=6, q=2, grid="uniform")) is not co1
+
+
+def test_cached_coeffs_match_direct_stage1():
+    sde = VPSDE()
+    cache = CoeffCache(sde)
+    cfg = SamplerConfig(nfe=5, q=2)
+    co = cache.get(cfg)
+    ref = build_sampler_coeffs(sde, time_grid(sde, 5), q=2)
+    for a, b in zip(co[:-1], ref[:-1]):           # skip the lam float
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_index_of_is_stable_and_len_counts_configs():
+    cache = CoeffCache(VPSDE())
+    a = cache.index_of(SamplerConfig(nfe=4))
+    b = cache.index_of(SamplerConfig(nfe=8, q=2))
+    assert (a, b) == (0, 1)
+    assert cache.index_of(SamplerConfig(nfe=4)) == 0      # hit, no growth
+    assert len(cache) == 2
+
+
+def test_bank_rows_reproduce_unstacked_coeffs():
+    """Bank slot c must carry config c's Stage-I arrays verbatim, padded
+    with zero coefficients (so out-of-order terms vanish) beyond N_c/q_c."""
+    sde = VPSDE()
+    cache = CoeffCache(sde)
+    cfgs = [SamplerConfig(nfe=4), SamplerConfig(nfe=6, q=2),
+            SamplerConfig(nfe=5, lam=0.5)]
+    idx = [cache.index_of(c) for c in cfgs]
+    bank = cache.bank
+
+    for c, cfg in zip(idx, cfgs):
+        co = cache.get(cfg)
+        N, q = cfg.nfe, cfg.q
+        ts = np.asarray(co.ts)
+        np.testing.assert_array_equal(np.asarray(bank.psi[c, :N]),
+                                      np.asarray(co.psi))
+        np.testing.assert_array_equal(np.asarray(bank.pC[c, :N, :q]),
+                                      np.asarray(co.pC))
+        np.testing.assert_array_equal(np.asarray(bank.cC[c, :N, :q]),
+                                      np.asarray(co.cC))
+        np.testing.assert_array_equal(np.asarray(bank.B[c, :N]),
+                                      np.asarray(co.B))
+        np.testing.assert_array_equal(np.asarray(bank.P_chol[c, :N]),
+                                      np.asarray(co.P_chol))
+        # time rows follow the step convention k: t_i with i = N - k
+        np.testing.assert_array_equal(np.asarray(bank.t_cur[c, :N]),
+                                      ts[N - np.arange(N)])
+        np.testing.assert_array_equal(np.asarray(bank.t_nxt[c, :N]),
+                                      ts[N - 1 - np.arange(N)])
+        assert int(bank.n_steps[c]) == N
+        assert bool(bank.stochastic[c]) == (cfg.lam > 0)
+        # padding beyond N_c is zero coefficients
+        assert not np.asarray(bank.pC[c, N:]).any()
+        assert not np.asarray(bank.pC[c, :N, q:]).any()
+
+
+def test_bank_bucket_shapes_and_stability():
+    cache = CoeffCache(VPSDE())
+    cache.index_of(SamplerConfig(nfe=5, q=2))
+    bank = cache.bank
+    Cb, Nb, Qb = bank.shape_key
+    assert Cb == C_BUCKET_MIN and Nb == N_BUCKET_MIN and Qb == Q_BUCKET_MIN
+
+    # anything inside the buckets reuses the shape (same compiled step)
+    cache.index_of(SamplerConfig(nfe=8))
+    cache.index_of(SamplerConfig(nfe=3, corrector=True))
+    assert cache.bank.shape_key == (Cb, Nb, Qb)
+
+    # overflow doubles only the overflowing axis
+    cache.index_of(SamplerConfig(nfe=2 * N_BUCKET_MIN - 1))
+    assert cache.bank.shape_key == (Cb, 2 * N_BUCKET_MIN, Qb)
+
+
+def test_bucket_size():
+    assert bucket_size(1, 8) == 8
+    assert bucket_size(8, 8) == 8
+    assert bucket_size(9, 8) == 16
+    assert bucket_size(33, 8) == 64
+
+
+def test_bank_works_for_block_family():
+    """CLD's (2,2) block coefficients stack with trailing coeff dims."""
+    cache = CoeffCache(CLD())
+    cache.index_of(SamplerConfig(nfe=4, q=2))
+    bank = cache.bank
+    assert bank.psi.shape[2:] == (2, 2)
+    assert bank.pC.shape[3:] == (2, 2)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(nfe=0),
+    dict(nfe=4, q=0),
+    dict(nfe=4, lam=-0.1),
+    dict(nfe=4, lam=0.5, q=2),             # stochastic is single-step
+    dict(nfe=4, lam=0.5, corrector=True),
+    dict(nfe=4, grid="geometric"),
+])
+def test_sampler_config_validation(bad):
+    with pytest.raises(ValueError):
+        SamplerConfig(**bad)

@@ -8,7 +8,11 @@ two bugs in the old demo loop — `_merge_slot` accepting the new cache
 wholesale (prefilling one slot clobbered every other slot's KV rows) and
 `pos` computed as a max over slots (a refilled slot decoded at another
 request's position).  Covered for a KV-cache arch (gemma3: GQA + sliding
-window) and a recurrent-state arch (rwkv6), plus the diffusion service.
+window) and a recurrent-state arch (rwkv6), plus the diffusion service —
+where isolation extends to the *sampler config*: a request's sample may not
+depend on the NFE/q/corrector/lambda of its neighbours, and serving a new
+config after warmup may not recompile (the coefficient bank is a bucketed
+argument of the step, see repro.core.coeffs.CoeffCache).
 """
 import numpy as np
 import jax
@@ -119,6 +123,83 @@ def test_diffusion_engine_isolation_and_reference():
             sample_gddim(spec.sde, engine.coeffs, eps_fn, uT, q=1))
         np.testing.assert_allclose(batched[r.rid], np.asarray(ref[0]),
                                    rtol=1e-5, atol=1e-5)
+
+
+def test_diffusion_engine_mixed_configs_bitwise_and_reference():
+    """One engine, one batch, >= 3 sampler configs (different NFE / q /
+    corrector, plus a stochastic lambda): every request's output must be
+    bitwise identical to a solo-engine run of that config, and the
+    deterministic configs must match the lockstep reference sampler."""
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    B = 2
+    reqs = [SampleRequest(rid=0, seed=0),                        # default 6
+            SampleRequest(rid=1, seed=1, nfe=4),                 # preview
+            SampleRequest(rid=2, seed=2, nfe=5, q=2, corrector=True),
+            SampleRequest(rid=3, seed=3, nfe=8, lam=0.5)]        # stochastic
+
+    engine = DiffusionEngine(spec, params, batch_size=B, nfe=6)
+    mixed = engine.serve(reqs)
+    assert set(mixed) == {r.rid for r in reqs}
+    assert len(engine.cache) == 4
+
+    # bitwise solo == mixed, per config
+    for r in reqs:
+        solo = DiffusionEngine(spec, params, batch_size=B, nfe=6).serve([r])
+        np.testing.assert_array_equal(
+            mixed[r.rid], solo[r.rid],
+            err_msg=f"request {r.rid} output depends on neighbour configs")
+
+    # deterministic configs match the lockstep Stage-II reference
+    from repro.core import sample_gddim
+    for r in reqs[:3]:
+        cfg = engine.config_of(r)
+        co = engine.cache.get(cfg)
+        uT = spec.sde.prior_sample(jax.random.PRNGKey(r.seed), 1,
+                                   tuple(spec.data_shape))
+        eps_fn = spec.make_eps_fn(params, np.asarray(co.ts))
+        ref = spec.sde.project_data(sample_gddim(
+            spec.sde, co, eps_fn, uT, q=cfg.q, corrector=cfg.corrector))
+        np.testing.assert_allclose(mixed[r.rid], np.asarray(ref[0]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_diffusion_engine_zero_recompiles_across_nfe():
+    """After warmup, serving new NFE values (and re-serving old ones) must
+    not recompile: the coefficient bank is an argument of the jitted step,
+    and every NFE inside the warmed bucket shares its padded shapes."""
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    engine = DiffusionEngine(spec, params, batch_size=2, nfe=6)
+
+    engine.serve([SampleRequest(rid=0, seed=0)])          # warmup
+    warm = engine.compile_stats()
+    assert warm["step"] == 1
+
+    # three NFE values the engine has never seen, all within the N bucket
+    engine.serve([SampleRequest(rid=1, seed=1, nfe=4),
+                  SampleRequest(rid=2, seed=2, nfe=5),
+                  SampleRequest(rid=3, seed=3, nfe=8)])
+    assert engine.compile_stats() == warm, \
+        "new NFE values inside the warmed bucket must not recompile"
+    assert len(engine.cache) == 4
+
+
+def test_diffusion_engine_admission_groups_by_corrector_class():
+    """The scheduler keys admission on the corrector cost class, so a
+    predictor-only wave never runs the 2-eval program just because a
+    corrector request sits behind it in the queue."""
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    engine = DiffusionEngine(spec, params, batch_size=4, nfe=4)
+    reqs = [SampleRequest(rid=0, seed=0),
+            SampleRequest(rid=1, seed=1, nfe=4, corrector=True),
+            SampleRequest(rid=2, seed=2)]
+    engine.scheduler.submit_all(reqs)
+    engine._admit()
+    # head-of-line grouping: only rid 0 admitted (rid 1 breaks the class,
+    # rid 2 waits behind it rather than being reordered around)
+    assert [s.request.rid for s in engine.slots.active()] == [0]
 
 
 def test_diffusion_engine_staggered_step_indices():

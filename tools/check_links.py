@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in README.md and docs/ (stdlib only).
+
+Checks every markdown inline link `[text](target)` whose target is a
+relative path: the file must exist relative to the linking document.
+External schemes (http/https/mailto) and pure in-page anchors (#...) are
+skipped; a `path#anchor` target is checked for the path part only.
+
+    python tools/check_links.py [files/dirs ...]   # default: README.md docs/
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links, tolerating one level of nested brackets in the text (badges)
+LINK_RE = re.compile(r"\[(?:[^\[\]]|\[[^\]]*\])*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def strip_code(text: str) -> str:
+    """Drop fenced and inline code spans so example snippets aren't linted."""
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(strip_code(md.read_text())):
+        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    roots = [Path(a) for a in argv] or [Path("README.md"), Path("docs")]
+    files: list[Path] = []
+    for r in roots:
+        if r.is_dir():
+            files.extend(sorted(r.rglob("*.md")))
+        elif r.exists():
+            files.append(r)
+        else:
+            print(f"check_links: no such file {r}", file=sys.stderr)
+            return 2
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
