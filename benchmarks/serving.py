@@ -13,14 +13,22 @@ for serving rows the quality columns carry throughput instead:
                      nfe = the default sampler NFE, us_per_call = us per
                      batch step, sw2 column = samples/s
 
+Besides the CSV rows, a machine-readable `BENCH_serving.json` is written at
+the repo root every time the table runs (via `python -m benchmarks.run
+serving`), so the serving perf trajectory is tracked PR-over-PR: one record
+per CSV row with explicit field names plus engine counters (rounds, polls,
+prefill widths) and the host/device context.
+
 Reduced CPU configs: the numbers are for *relative* tracking (batch scaling,
 homogeneous vs mixed traffic, regression against the per-request loop), not
 absolute hardware claims.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Iterator
+from typing import Iterator, List
 
 import numpy as np
 import jax
@@ -28,6 +36,9 @@ import jax
 from repro.configs import get_arch, get_diffusion
 from repro.models.registry import Arch
 from repro.serve import DiffusionEngine, Request, SampleRequest, TokenEngine
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_serving.json")
 
 
 def _token_requests(vocab, n, prompt_len, max_new, seed=0):
@@ -38,8 +49,25 @@ def _token_requests(vocab, n, prompt_len, max_new, seed=0):
             for i in range(n)]
 
 
+def _write_json(records: List[dict]) -> None:
+    doc = {
+        "table": "serving",
+        "schema": "benchmarks/serving.py (see module docstring)",
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "records": records,
+    }
+    tmp = BENCH_JSON + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, BENCH_JSON)
+
+
 def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
                        max_new=16, max_len=64, nfe=10) -> Iterator[str]:
+    records: List[dict] = []
+
     # ---- token decoding: one KV-cache arch + one recurrent-state arch ----
     for arch_name in ("gemma3-1b", "rwkv6-7b"):
         spec = get_arch(arch_name, reduced=True)
@@ -53,11 +81,22 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
                                    max_new)
             engine.serve(reqs[:B])                     # warmup + compile
             n0, s0 = engine.n_tokens_out, engine.n_decode_steps
+            p0, w0 = engine.n_polls, len(engine.prefill_widths)
             t0 = time.perf_counter()
             engine.serve(reqs[B:])
             dt = time.perf_counter() - t0
             toks = engine.n_tokens_out - n0
-            us_round = 1e6 * dt / max(engine.n_decode_steps - s0, 1)
+            rounds = max(engine.n_decode_steps - s0, 1)
+            us_round = 1e6 * dt / rounds
+            records.append({
+                "workload": "token", "config": f"{arch_name}_B{B}",
+                "arch": arch_name, "batch": B,
+                "us_per_round": round(us_round, 1),
+                "tokens_per_s": round(toks / dt, 2),
+                "rounds": rounds, "polls": engine.n_polls - p0,
+                "prefill_widths": list(engine.prefill_widths)[w0:],
+                "n_requests": n_requests - B,
+            })
             yield (f"serving,{arch_name}_B{B},0,{us_round:.0f},"
                    f"{toks / dt:.1f},0")
 
@@ -76,11 +115,25 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
             engine = DiffusionEngine(spec, params, batch_size=B, nfe=nfe)
             engine.serve([SampleRequest(rid=-1 - i, seed=0, **kw)
                           for i, kw in enumerate(kinds)])   # warmup + compile
-            s0, t0 = engine.n_steps, time.perf_counter()
+            s0, p0 = engine.n_steps, engine.n_polls
+            t0 = time.perf_counter()
             engine.serve([SampleRequest(rid=i, seed=i,
                                         **kinds[i % len(kinds)])
                           for i in range(n_requests)])
             dt = time.perf_counter() - t0
-            us_step = 1e6 * dt / max(engine.n_steps - s0, 1)
+            rounds = max(engine.n_steps - s0, 1)
+            us_step = 1e6 * dt / rounds
+            records.append({
+                "workload": "diffusion",
+                "config": f"gddim_{tag}B{B}", "batch": B, "nfe": nfe,
+                "traffic": "mixed" if tag else "homogeneous",
+                "us_per_round": round(us_step, 1),
+                "samples_per_s": round(n_requests / dt, 3),
+                "rounds": rounds, "polls": engine.n_polls - p0,
+                "n_requests": n_requests,
+                "n_configs": len(engine.cache),
+            })
             yield (f"serving,gddim_{tag}B{B},{nfe},{us_step:.0f},"
                    f"{n_requests / dt:.2f},0")
+
+    _write_json(records)

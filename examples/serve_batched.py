@@ -11,20 +11,24 @@ Two workloads ride the same scheduler/slot-table machinery:
        # results[rid] -> np.ndarray of generated token ids
 
    Under the hood each admission wave runs ONE batched prefill
-   (`make_prefill_step`) for a same-length group, scatters the resulting
-   cache rows into the admitted slots only, and the decode loop passes a
-   per-slot position vector so a freshly refilled slot decodes at its own
-   absolute position.  A request's output is bitwise identical whether it
-   runs alone or interleaved with neighbours (tests/test_serve_engine.py).
+   (`make_prefill_step`, width-bucketed to the wave's power-of-two size)
+   for a same-length group and scatters the resulting cache rows into the
+   admitted slots only.  Per-slot metadata — positions, output rings,
+   active masks — lives on device in a `TokenState` pytree updated inside
+   the donated round step, so the steady-state loop moves nothing
+   host->device; the host polls a small done mask every few rounds.  A
+   request's output is bitwise identical whether it runs alone or
+   interleaved with neighbours (tests/test_serve_engine.py).
 
 2. gDDIM sampling as a service (`repro.serve.DiffusionEngine`): slots are
    samples, the per-slot position is the sampler step index k, and each
    request carries its *own sampler config* — NFE budget, multistep order
    q, Eq. 45 corrector, stochasticity lambda.  One jitted
-   `make_diffusion_serve_step` (bank mode) advances slots at different k
-   AND different configs in the same batch, gathering each slot's
-   coefficient rows from a stacked, bucket-padded `CoeffBank` built once
-   per distinct config by the host-side `CoeffCache`:
+   `make_diffusion_round_step` advances a device-resident `DiffusionState`
+   whose slots sit at different k AND different configs in the same batch,
+   gathering each slot's coefficient rows from a stacked, bucket-padded
+   `CoeffBank` built once per distinct config by the host-side
+   `CoeffCache`:
 
        engine  = DiffusionEngine(spec, params, batch_size=4, nfe=20)
        results = engine.serve([
@@ -37,6 +41,10 @@ Two workloads ride the same scheduler/slot-table machinery:
 
    The paper's point — one trained score network supports the whole
    sampler family (Eqs. 19/22/45) — behind one hot, batched program.
+
+Both engines also take `mesh=` (repro.launch.mesh.make_local_mesh) to
+shard the slot batch over a data-parallel device mesh with bitwise-
+identical results — see docs/serving.md and tests/test_serve_mesh.py.
 
 Run:
     PYTHONPATH=src python examples/serve_batched.py

@@ -49,7 +49,11 @@ class CheckpointStore:
         continue while the write happens."""
         self.wait()
         leaves, treedef = _flatten(tree)
-        host_leaves = [np.asarray(l) for l in leaves]
+        # copy=True: on CPU backends np.asarray can alias the device buffer,
+        # and the training loop donates params/opt into the next step — an
+        # aliased view would let that step scribble over the snapshot while
+        # the async writer reads it
+        host_leaves = [np.array(l, copy=True) for l in leaves]
         manifest = {
             "step": step,
             "n_leaves": len(host_leaves),

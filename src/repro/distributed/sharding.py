@@ -169,20 +169,24 @@ def param_shardings(params: Any, mesh: Mesh, cfg: ShardCfg = ShardCfg()) -> Any:
 # ---------------------------------------------------------------------------
 # Activation / batch / cache specs
 # ---------------------------------------------------------------------------
-def batch_spec(mesh: Mesh, cfg: ShardCfg, ndim: int, batch_size: int,
-               extra: Optional[Dict[int, Any]] = None) -> P:
-    """Batch-leading activation spec; batch sharded over the batch axes that
-    divide it (pods first), remaining dims per `extra` {dim: axis}."""
+def batch_axes_entry(mesh: Mesh, cfg: ShardCfg, batch_size: int):
+    """The PartitionSpec entry for a batch dim of `batch_size`: the largest
+    prefix of the batch axes (pods first) whose product divides it."""
     axes = [a for a in cfg.batch_axes if a in mesh.axis_names]
-    # greedy: use the largest prefix of batch axes whose product divides B
-    use = []
-    prod = 1
+    use, prod = [], 1
     for a in axes:
         if batch_size % (prod * mesh.shape[a]) == 0:
             use.append(a)
             prod *= mesh.shape[a]
+    return tuple(use) if len(use) > 1 else (use[0] if use else None)
+
+
+def batch_spec(mesh: Mesh, cfg: ShardCfg, ndim: int, batch_size: int,
+               extra: Optional[Dict[int, Any]] = None) -> P:
+    """Batch-leading activation spec; batch sharded over the batch axes that
+    divide it (pods first), remaining dims per `extra` {dim: axis}."""
     spec: list = [None] * ndim
-    spec[0] = tuple(use) if len(use) > 1 else (use[0] if use else None)
+    spec[0] = batch_axes_entry(mesh, cfg, batch_size)
     for d, ax in (extra or {}).items():
         if ax in mesh.axis_names:
             spec[d] = ax
@@ -206,13 +210,7 @@ def kv_cache_spec(mesh: Mesh, cfg: ShardCfg, cache_shape: Tuple[int, ...],
     ndim = len(cache_shape)
     lead = ndim - 4
     spec: list = [None] * ndim
-    axes = [a for a in cfg.batch_axes if a in mesh.axis_names]
-    use, prod = [], 1
-    for a in axes:
-        if batch_size % (prod * mesh.shape[a]) == 0:
-            use.append(a)
-            prod *= mesh.shape[a]
-    spec[lead] = tuple(use) if len(use) > 1 else (use[0] if use else None)
+    spec[lead] = batch_axes_entry(mesh, cfg, batch_size)
     tp = cfg.tp_axis
     if tp in mesh.axis_names:
         if n_kv_heads % mesh.shape[tp] == 0:
@@ -220,6 +218,57 @@ def kv_cache_spec(mesh: Mesh, cfg: ShardCfg, cache_shape: Tuple[int, ...],
         elif seq_fallback and cache_shape[lead + 1] % mesh.shape[tp] == 0:
             spec[lead + 1] = cfg.seq_axis        # SP over cache length
     return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# Serving-engine state: the mesh rules for `repro.serve` (EngineState pytrees
+# + engine caches).  Every EngineState leaf is slot-batch-leading, so one
+# rule shards the whole engine over the data axes; cache leaves carry their
+# batch/slot dim wherever the arch family put it (probed by
+# `Arch.cache_batch_axes`), with KV-shaped leaves additionally head-sharded
+# via `kv_cache_spec`.
+# ---------------------------------------------------------------------------
+def serve_state_spec(mesh: Mesh, cfg: ShardCfg, ndim: int,
+                     batch_size: int) -> P:
+    """Spec for one slot-batch-leading EngineState leaf: dim 0 over the
+    batch axes that divide the slot count, everything else replicated."""
+    return batch_spec(mesh, cfg, ndim, batch_size)
+
+
+def serve_state_shardings(state: Any, mesh: Mesh,
+                          cfg: ShardCfg = ShardCfg()) -> Any:
+    """NamedShardings for an EngineState pytree (all leaves batch-leading)."""
+    return jax.tree.map(
+        lambda l: NamedSharding(
+            mesh, serve_state_spec(mesh, cfg, l.ndim, l.shape[0])), state)
+
+
+def cache_leaf_spec(mesh: Mesh, cfg: ShardCfg, shape: Tuple[int, ...],
+                    batch_axis: Optional[int], batch_size: int,
+                    n_kv_heads: int = 0, d_head: int = -1) -> P:
+    """Spec for one engine-cache leaf.  KV-shaped leaves ((.., B, S, Hkv, Dh))
+    go through `kv_cache_spec` (batch + head sharding); every other state
+    leaf (ssm/conv/recurrent aux) shards its probed batch axis only."""
+    if len(shape) >= 4 and n_kv_heads and shape[-2] == n_kv_heads \
+            and shape[-1] == d_head:
+        return kv_cache_spec(mesh, cfg, shape, batch_size, n_kv_heads)
+    spec: list = [None] * len(shape)
+    if batch_axis is not None:
+        spec[batch_axis] = batch_axes_entry(mesh, cfg, batch_size)
+    return P(*spec)
+
+
+def cache_shardings(cache_like: Any, batch_axes: Any, mesh: Mesh,
+                    cfg: ShardCfg, batch_size: int, n_kv_heads: int = 0,
+                    d_head: int = -1) -> Any:
+    """NamedShardings for an engine cache pytree; `batch_axes` is the
+    same-structure pytree of batch-axis indices from
+    `Arch.cache_batch_axes`."""
+    def one(leaf, ax):
+        return NamedSharding(mesh, cache_leaf_spec(
+            mesh, cfg, tuple(leaf.shape), int(ax), batch_size,
+            n_kv_heads, d_head))
+    return jax.tree.map(one, cache_like, batch_axes)
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,17 @@ Two workloads share the same scheduler/slot machinery:
 
     One engine serves the whole mix from one compiled step program
     (`compile_stats` is printed so you can see it).
+
+Both workloads take `--mesh` to shard the engine over a (data, model)
+device mesh (slot batch and caches over `data`, params via the repo's
+TP/FSDP rules) — e.g. on a CPU host:
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+        python -m repro.launch.serve --diffusion cifar10-ddpm --reduced \\
+            --requests 8 --batch 4 --mesh data=2
+
+and `--sync-every` to bound how many device-resident rounds run between
+host polls of the retire mask (see repro.serve.ServeLoop).
 """
 from __future__ import annotations
 
@@ -37,6 +48,7 @@ from ..configs import get_arch, get_diffusion, ARCH_IDS, DIFFUSION_MODULES
 from ..core import SamplerConfig
 from ..models.registry import Arch
 from ..serve import DiffusionEngine, Request, SampleRequest, TokenEngine
+from .mesh import make_serve_mesh
 
 
 def parse_sampler_spec(spec: str) -> dict:
@@ -74,6 +86,13 @@ def parse_sampler_spec(spec: str) -> dict:
     return out
 
 
+def _mesh_banner(engine) -> str:
+    if engine.mesh is None:
+        return "single-device"
+    return (f"mesh {dict(engine.mesh.shape)} "
+            f"({engine.n_shards} slot shard{'s' if engine.n_shards > 1 else ''})")
+
+
 def _serve_tokens(args) -> int:
     spec = get_arch(args.arch, reduced=args.reduced)
     arch = Arch(spec)
@@ -94,14 +113,16 @@ def _serve_tokens(args) -> int:
         requests.append(req)
 
     engine = TokenEngine(arch, params, batch_size=args.batch,
-                         max_len=args.max_len)
+                         max_len=args.max_len, mesh=make_serve_mesh(args.mesh),
+                         sync_every=args.sync_every)
     t0 = time.time()
     results = engine.serve(requests)
     dt = time.time() - t0
     tps = engine.n_tokens_out / max(dt, 1e-9)
     print(f"served {len(results)} requests in {dt:.1f}s "
           f"({engine.n_decode_steps} decode rounds, "
-          f"{engine.n_prefill_calls} prefill calls, batch {args.batch}, "
+          f"{engine.n_prefill_calls} prefill calls, {engine.n_polls} polls, "
+          f"batch {args.batch}, {_mesh_banner(engine)}, "
           f"{tps:.1f} tok/s)  compile={engine.compile_stats()}")
     for rid in sorted(results)[:4]:
         print(f"  req{rid}: {results[rid][:12].tolist()}...")
@@ -113,7 +134,9 @@ def _serve_samples(args) -> int:
     params = spec.init(jax.random.PRNGKey(args.seed))
     default, mix = args.default_config, args.mix_parsed
     engine = DiffusionEngine(spec, params, batch_size=args.batch,
-                             default_config=default)
+                             default_config=default,
+                             mesh=make_serve_mesh(args.mesh),
+                             sync_every=args.sync_every)
     requests = []
     for i in range(args.requests):
         kw = mix[i % len(mix)] if mix else {}
@@ -127,7 +150,8 @@ def _serve_samples(args) -> int:
         f"homogeneous @ NFE {default.nfe}"
     print(f"sampled {len(results)} requests in {dt:.1f}s "
           f"({engine.n_steps} gDDIM rounds, {kinds}, "
-          f"batch {args.batch}, {sps:.2f} samples/s)  "
+          f"batch {args.batch}, {_mesh_banner(engine)}, "
+          f"{sps:.2f} samples/s)  "
           f"compile={engine.compile_stats()}")
     if mix:
         for cfg in engine.cache.configs:
@@ -161,6 +185,16 @@ def main(argv=None) -> int:
                          "e.g. --mix nfe=10 nfe=50,q=2,corrector "
                          "nfe=20,lam=0.5 (keys not named fall back to the "
                          "defaults above)")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="shard the engine over a (data, model) device mesh:"
+                         " 'data=2', 'data=2,model=1', '2x1', or 'auto' "
+                         "(all devices on the data axis).  Slot batch and "
+                         "caches shard over data; params follow the "
+                         "repo's TP/FSDP rules.  Default: single device")
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="max rounds between host polls of the done mask "
+                         "(R); the loop polls sooner when a retirement is "
+                         "provably near")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if (args.arch is None) == (args.diffusion is None):

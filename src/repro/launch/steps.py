@@ -2,12 +2,23 @@
 
   make_train_step(arch, opt_cfg)   full train step: loss -> grad -> clip ->
                                    AdamW (mixed precision; bf16 grads =
-                                   compressed collectives) -> new params
+                                   compressed collectives) -> new params.
+                                   Donation-safe on (params, opt_state):
+                                   launch/train.py jits it with
+                                   donate_argnums=(0, 1) so the optimizer
+                                   update is in-place at the XLA level
   make_prefill_step(arch, S)       forward + KV-cache fill (inference prefill;
                                    the serving engine runs whole admission
-                                   groups through one call)
+                                   groups through one call, width-bucketed
+                                   to the group's power-of-two size)
   make_serve_step(arch)            one-token decode against a fixed cache;
-                                   cache_len is scalar or per-slot (B,)
+                                   cache_len is scalar or per-slot (B,).
+                                   Lowering/reference surface — the engine
+                                   runs make_token_round_step instead
+  make_token_round_step(arch)      one full serve *round*: decode + the
+                                   device-resident TokenState update
+                                   (append/advance/retire masking).  The
+                                   engine jits it with state+caches donated
   make_diffusion_train_step(spec)  DSM/HSM step for the paper's DMs
   make_diffusion_serve_step(spec)  one gDDIM step (the sampler's inner loop
                                    body — what a sampling service executes
@@ -18,6 +29,13 @@
                                    (k, cfg) indices so one compiled program
                                    serves mixed NFE/q/corrector/lambda
                                    traffic
+  make_diffusion_round_step(spec)  bank-mode gDDIM step over a
+                                   DiffusionState pytree: the update is
+                                   masked by the active mask (retired rows
+                                   freeze until the host fetches them) and
+                                   k advances on device.  The engine jits
+                                   it with the state donated, so u/hist
+                                   update in place
 
 `shardings_for(...)` produces (params, opt, inputs) NamedShardings for any
 (arch x shape x mesh) cell from the rules in distributed/sharding.py.
@@ -79,6 +97,69 @@ def make_serve_step(arch: Arch):
         return next_token, logits, caches
 
     return serve_step
+
+
+def make_token_round_step(arch: Arch):
+    """One full serving *round* over a device-resident `TokenState`: decode
+    every slot at its own position, then apply the per-slot bookkeeping the
+    host loop used to do in numpy — append the token to the slot's output
+    ring, advance `pos`/`n_out`, and retire (clear `active`) on eos or
+    budget exhaustion.  Retired rows are frozen: every update is masked by
+    `state.active`, so a finished slot's outputs survive verbatim until the
+    host fetches them (decode still runs on frozen rows — row-local garbage
+    that admission overwrites).
+
+    `eos` is a device scalar argument (not a closure constant) so changing
+    the eos id never recompiles.  The engine jits this with `state` and
+    `caches` donated: the round is in-place at the XLA level and the
+    steady-state loop moves no per-slot metadata host->device.
+    """
+    def round_step(params, state, caches, eos, memory=None):
+        from ..serve.state import TokenState
+        logits, caches = arch.decode(params, state.last, caches, state.pos,
+                                     memory=memory)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # (B,)
+        act = state.active
+        rows = jnp.arange(state.out.shape[0])
+        # inactive rows write at an out-of-range column and are dropped
+        col = jnp.where(act, state.n_out, state.out.shape[1])
+        out = state.out.at[rows, col].set(nxt, mode="drop")
+        n_out = jnp.where(act, state.n_out + 1, state.n_out)
+        done_now = act & ((nxt == eos) | (n_out >= state.budget))
+        return TokenState(
+            last=jnp.where(act[:, None], nxt[:, None], state.last),
+            pos=jnp.where(act, state.pos + 1, state.pos),
+            n_out=n_out, budget=state.budget, out=out,
+            active=act & ~done_now), caches
+
+    return round_step
+
+
+def make_diffusion_round_step(spec):
+    """Bank-mode gDDIM step over a device-resident `DiffusionState`: the
+    Eq. 19/22/45 update of `make_diffusion_serve_step` plus the per-slot
+    bookkeeping — advance `k`, retire (clear `active`) when a slot reaches
+    its config's NFE, and freeze retired rows so the finished sample `u`
+    survives until the host fetches it.  The engine jits this with `state`
+    donated (`u`/`hist` update in place) and the bank as a non-donated
+    argument (it is reused every round)."""
+    bank_step = make_diffusion_serve_step(spec)
+
+    def round_step(params, state, bank, with_corrector=False):
+        from ..serve.state import DiffusionState
+        u_next, hist_next = bank_step(
+            params, state.u, state.hist, state.k, state.cfg, state.keys,
+            bank, with_corrector=with_corrector)
+        act = state.active
+        rmask = lambda x: act.reshape((-1,) + (1,) * (x.ndim - 1))
+        k = jnp.where(act, state.k + 1, state.k)
+        return DiffusionState(
+            u=jnp.where(rmask(state.u), u_next, state.u),
+            hist=jnp.where(rmask(state.hist), hist_next, state.hist),
+            k=k, cfg=state.cfg, keys=state.keys,
+            active=act & (k < bank.n_steps[state.cfg]))
+
+    return round_step
 
 
 def make_diffusion_train_step(spec, opt_cfg: AdamWCfg):
@@ -228,25 +309,13 @@ def shardings_for(arch: Arch, mesh: Mesh, shape: str,
     for name, s in specs.items():
         if name == "caches":
             n_kv = getattr(arch.cfg, "n_kv_heads", 0)
+            d_head = getattr(arch.cfg, "d_head", -1)
             def cache_sh(leaf):
-                if leaf.ndim >= 4 and n_kv and leaf.shape[-2] == n_kv \
-                        and leaf.shape[-1] == getattr(arch.cfg, "d_head", -1):
-                    spec_ = shd.kv_cache_spec(mesh, cfg, leaf.shape, B, n_kv)
-                else:
-                    # ssm/conv/aux states: shard batch dim only
-                    bdim = _find_batch_dim(leaf.shape, B)
-                    spec_l = [None] * leaf.ndim
-                    if bdim is not None:
-                        axes = [a for a in cfg.batch_axes if a in mesh.axis_names]
-                        use, prod = [], 1
-                        for a in axes:
-                            if B % (prod * mesh.shape[a]) == 0:
-                                use.append(a)
-                                prod *= mesh.shape[a]
-                        spec_l[bdim] = tuple(use) if len(use) > 1 else \
-                            (use[0] if use else None)
-                    spec_ = P(*spec_l)
-                return NamedSharding(mesh, spec_)
+                # ssm/conv/aux states shard their batch dim only; KV-shaped
+                # leaves also head-shard (shared rule with the serve engine)
+                return NamedSharding(mesh, shd.cache_leaf_spec(
+                    mesh, cfg, tuple(leaf.shape),
+                    _find_batch_dim(leaf.shape, B), B, n_kv, d_head))
             in_sh[name] = jax.tree.map(cache_sh, s)
         elif name == "cache_len" or (hasattr(s, "ndim") and s.ndim == 0):
             in_sh[name] = NamedSharding(mesh, P())

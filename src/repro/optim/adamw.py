@@ -46,7 +46,12 @@ class AdamWState(NamedTuple):
 
 def adamw_init(params: Any, cfg: AdamWCfg) -> AdamWState:
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) \
+    # master must be a *distinct* buffer: astype is an alias for f32 params,
+    # and an aliased master breaks donated train steps (the same buffer
+    # would be donated twice via params and opt_state)
+    master = jax.tree.map(
+        lambda p: jnp.copy(p) if p.dtype == jnp.float32
+        else p.astype(jnp.float32), params) \
         if cfg.master_f32 else jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
     return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
                       v=jax.tree.map(jnp.copy, zeros), master=master)

@@ -2,36 +2,48 @@
 
 gDDIM's headline result is cheap inference (FID 2.26 @ 50 NFEs on CIFAR10),
 which makes the serving layer — not the sampler math — the bottleneck at
-traffic scale.  This package turns the old single-slot demo loop into a real
-engine:
+traffic scale.  This package is a real engine around one idea: everything
+the per-round step consumes lives on device, sharded over the mesh, and the
+host only paces the loop.
 
-  * `SlotTable`   — per-slot bookkeeping (the fix for the shared-position /
-                    cache-clobbering bugs: every slot owns its cache rows and
-                    its own absolute position)
-  * `Scheduler`   — FIFO admission with head-of-line grouping so prefill
-                    batches share one shape (no padding into recurrent
-                    state) and sampling waves share a corrector cost class
+  * `EngineState` pytrees (state.py: `TokenState`, `DiffusionState`) — the
+    device-resident per-slot state (positions, output rings, sampler
+    state, active masks), updated inside donated jitted round steps so the
+    steady-state loop moves no per-slot metadata host->device
+  * `ServeLoop` (loop.py) — the shared admit/round/poll skeleton both
+    engines specialize; polls a small done mask at most every `sync_every`
+    rounds (or never, when retirement is exactly predictable)
+  * `SlotTable` (slots.py) — the host *shadow*: which request occupies a
+    slot, plus the cheap counters that pace polls; round-robin free-slot
+    placement across mesh shards
+  * `Scheduler` (scheduler.py) — FIFO admission with head-of-line grouping
+    so prefill waves share one shape (no padding into recurrent state) and
+    sampling waves share a corrector cost class
   * `TokenEngine` — continuous-batching greedy decode over any Arch family
-                    (KV-cache transformers, RWKV/Mamba recurrent state,
-                    encoder-decoder with cross-attention memory)
-  * `DiffusionEngine` — the same scheduling discipline applied to batched
-                    gDDIM sampling: slots are samples, the per-slot position
-                    is the sampler step index k, and every request carries
-                    its own sampler config (NFE / multistep order q /
-                    corrector / stochasticity lambda).  One jitted
-                    `make_diffusion_serve_step` serves slots at different k
-                    and different configs in the same batch, fed by the
-                    host-side Stage-I coefficient cache
-                    (`repro.core.coeffs.CoeffCache`).
+    (KV-cache transformers, RWKV/Mamba recurrent state, encoder-decoder
+    with cross-attention memory), width-bucketed batched prefill
+  * `DiffusionEngine` — the same discipline applied to batched gDDIM
+    sampling: slots are samples, the per-slot position is the sampler step
+    index k, and every request carries its own sampler config (NFE /
+    multistep order q / corrector / stochasticity lambda), fed by the
+    host-side Stage-I coefficient cache (`repro.core.coeffs.CoeffCache`)
+
+Both engines accept `mesh=` (see `repro.launch.mesh`) and then shard the
+slot batch over the mesh's data axes via the serve rules in
+`repro.distributed.sharding` — bitwise-identical outputs to the
+single-device engine.
 
 See `repro.launch.serve` for the CLI, `docs/serving.md` for the full API
 reference, and `examples/serve_batched.py` for a worked walkthrough.
 """
 from .slots import Slot, SlotTable
 from .scheduler import Request, SampleRequest, Scheduler
+from .loop import ServeLoop
+from .state import DiffusionState, TokenState
 from .engine import TokenEngine, DiffusionEngine
 
 __all__ = [
     "Slot", "SlotTable", "Request", "SampleRequest", "Scheduler",
+    "ServeLoop", "TokenState", "DiffusionState",
     "TokenEngine", "DiffusionEngine",
 ]

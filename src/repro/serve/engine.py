@@ -1,50 +1,55 @@
 """Continuous-batching engines: token decoding and gDDIM sampling.
 
-Both engines share the same discipline (one pre-allocated device batch of
-`batch_size` slots, FIFO admission through a `Scheduler`, per-slot progress
-tracked in a `SlotTable`, retire-and-refill without recompilation) and
-differ only in what a "step" is:
+Both engines are specializations of one `ServeLoop` core (loop.py): a fixed
+device batch of `batch_size` slots, FIFO admission through a `Scheduler`,
+host shadow bookkeeping in a `SlotTable`, and — since the `EngineState`
+refactor — *device-resident* per-slot state updated inside a donated,
+jitted round step (state.py, `make_token_round_step` /
+`make_diffusion_round_step` in launch/steps.py).  What a "round" is differs:
 
-  * `TokenEngine`  — a step is one greedy decode token for every active
-    slot.  Admission runs a *batched* prefill through `make_prefill_step`
-    (one forward over the whole admitted group — not token-at-a-time
-    through the decode step) and scatters the resulting cache rows
-    slot-wise into the engine cache, so prefilling one slot can never
-    touch another slot's KV rows.  Decode passes the per-slot position
-    vector `cache_len[b]` to the model: a freshly refilled slot decodes at
-    its own absolute position while its neighbours continue at theirs.
+  * `TokenEngine`  — one greedy decode token for every active slot.
+    Admission runs a *batched* prefill through `make_prefill_step` (width-
+    bucketed to the group's power-of-two size, so a 2-request wave on a
+    16-slot engine pays 2 rows of FLOPs, not 16) and scatters the resulting
+    cache rows slot-wise.  The round step decodes at the per-slot position
+    `state.pos`, appends to the per-slot output ring, and retires on
+    eos/budget — all on device.
+  * `DiffusionEngine` — one gDDIM update for every active slot, each at its
+    own step index k *and* its own sampler config (NFE, multistep order q,
+    corrector, stochasticity lambda); per-slot Psi/pC/cC/B/P_chol rows are
+    gathered from a stacked `CoeffBank` by (state.cfg[b], state.k[b]).
 
-  * `DiffusionEngine` — a step is one gDDIM update
-    (`make_diffusion_serve_step` in bank mode) for every active slot, each
-    at its own step index k *and* its own sampler config (NFE, multistep
-    order q, corrector, stochasticity lambda); per-slot Psi/pC/cC/B/P_chol
-    rows are gathered from a stacked `CoeffBank` by (cfg[b], k[b]) and
-    applied through `sde.apply_batched`.  A sampling request admitted
-    mid-flight starts at k=0 next to slots at k>0, and a 10-NFE preview
-    batches with a 50-NFE predictor-corrector render — continuous batching
-    for diffusion sampling across gDDIM's whole sampler family.
+Steady-state data flow: the round step consumes and returns the EngineState
+(donated, so u/hist/caches update in place with no per-step copy) and the
+host transfers *nothing* to the device per round — no slot metadata, no
+token ids, no step indices.  The host polls a small done/progress mask at
+most every `sync_every` rounds (exactly at the next possible retirement
+when that is predictable) and fetches outputs only for retiring slots.
+`tests/test_serve_engine.py` locks this in with a `jax.transfer_guard`.
 
-Compile behaviour: after warmup the decode/sampler step programs are
-reused for every round regardless of which slots retire or refill, and —
-for the diffusion engine — regardless of which sampler configs the traffic
-mixes, because the coefficient bank is a bucket-padded *argument* of the
-step (`compile_stats()` exposes the jit cache sizes so tests can assert
-this; the sampler step has at most two entries, the predictor-only and
-with-corrector variants).  Prefill compiles once per distinct prompt
-length actually seen — the
-scheduler's head-of-line grouping keeps groups single-shape, which is also
-a *correctness* requirement for the recurrent-state archs (right-padding a
-prompt would corrupt RWKV/Mamba state; KV caches merely mask it).
+Mesh mode: pass `mesh=` (e.g. `launch.mesh.make_local_mesh(data=2)`) and
+the engine places params via the `distributed.sharding` param rules and the
+slot batch — EngineState, caches, encoder memory — sharded over the `data`
+axes (`serve_state_shardings` / `cache_shardings`).  Admission targets
+free slots round-robin across shards.  Outputs are bitwise identical to
+the single-device engine (per-row computation is row-independent), which
+`tests/test_serve_mesh.py` asserts on a forced 2-device host.
+
+Compile behaviour: after warmup the round programs are reused for every
+round regardless of which slots retire or refill, and — for the diffusion
+engine — regardless of which sampler configs the traffic mixes, because
+the coefficient bank is a bucket-padded *argument* of the step
+(`compile_stats()` exposes the jit cache sizes; the sampler step has at
+most two entries, the predictor-only and with-corrector variants).
+Prefill compiles once per (prompt length, width bucket) actually seen.
 
 Determinism: slots are batch rows and every per-row computation in the
 model stack is row-independent, so a request's output stream is bitwise
-identical whether it runs alone or interleaved with arbitrary neighbours
-(tests/test_serve_engine.py locks this in for a KV-cache arch, a
-recurrent-state arch, and the diffusion service).
+identical whether it runs alone or interleaved with arbitrary neighbours.
 """
 from __future__ import annotations
 
-import functools
+from collections import deque
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -54,8 +59,11 @@ import jax.numpy as jnp
 from ..launch import steps as steps_lib
 from ..models.registry import Arch
 from ..core import CoeffCache, SamplerConfig
+from ..distributed import sharding as shd
+from .loop import ServeLoop, bucket_pow2
 from .scheduler import Request, SampleRequest, Scheduler
-from .slots import SlotTable
+from .state import (DiffusionState, TokenState, diffusion_state_init,
+                    token_state_init)
 
 Array = jax.Array
 
@@ -67,20 +75,14 @@ def _cache_size(jitted) -> int:
         return -1
 
 
-def _check_unique_rids(requests) -> None:
-    seen = set()
-    for r in requests:
-        if r.rid in seen:
-            raise ValueError(f"duplicate request rid {r.rid}: results are "
-                             "keyed by rid, a duplicate would be dropped")
-        seen.add(r.rid)
-
-
-def _make_row_scatter(batch_axes: List[int]):
+def _make_row_scatter(batch_axes: List[int], out_shardings=None):
     """jitted (dst_tree, src_tree, slot_ids) -> dst_tree with src's batch
     rows written at `slot_ids`.  `slot_ids` is padded to the source batch
     size with an out-of-range sentinel; those rows are dropped, so one
-    compilation serves every admission group size."""
+    compilation serves every admission-wave width bucket.  The destination
+    is donated: the scatter updates the engine cache in place.  In mesh
+    mode `out_shardings` pins the result to the engine's canonical cache
+    layout so the downstream round step never sees a second sharding."""
 
     def scatter(dst_tree, src_tree, slot_ids):
         dst_leaves, treedef = jax.tree.flatten(dst_tree)
@@ -93,13 +95,63 @@ def _make_row_scatter(batch_axes: List[int]):
             out.append(jnp.moveaxis(dm, 0, ax))
         return jax.tree.unflatten(treedef, out)
 
-    return jax.jit(scatter)
+    if out_shardings is None:
+        return jax.jit(scatter, donate_argnums=(0,))
+    return jax.jit(scatter, donate_argnums=(0,), out_shardings=out_shardings)
+
+
+def _jit_state_update(fn, donate, out_shardings=None, **kw):
+    """jit with the state donated and (mesh mode) the output pinned to the
+    engine's canonical shardings — sharding stability is what keeps the
+    round program's jit cache at one entry per variant."""
+    if out_shardings is None:
+        return jax.jit(fn, donate_argnums=donate, **kw)
+    return jax.jit(fn, donate_argnums=donate, out_shardings=out_shardings,
+                   **kw)
+
+
+def _make_token_admit(out_shardings=None):
+    """jitted admission scatter into a TokenState: writes the prefill token
+    and per-slot counters for one wave.  Rows whose `slot_ids` carry the
+    out-of-range sentinel are dropped.  A slot born done (budget 1, or the
+    prefill token is already eos) starts inactive; the first poll retires
+    it without a decode round.  The state is donated."""
+
+    def admit(state, logits_last, slot_ids, budgets, pos, eos):
+        first = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)   # (G,)
+        born_active = (budgets > 1) & (first != eos)
+        return TokenState(
+            last=state.last.at[slot_ids, 0].set(first, mode="drop"),
+            pos=state.pos.at[slot_ids].set(pos, mode="drop"),
+            n_out=state.n_out.at[slot_ids].set(1, mode="drop"),
+            budget=state.budget.at[slot_ids].set(budgets, mode="drop"),
+            out=state.out.at[slot_ids, 0].set(first, mode="drop"),
+            active=state.active.at[slot_ids].set(born_active, mode="drop"))
+
+    return _jit_state_update(admit, (0,), out_shardings)
+
+
+def _make_diffusion_admit(out_shardings=None):
+    """jitted admission scatter into a DiffusionState: one slot row —
+    prior sample, zeroed eps history, k=0, config index, PRNG key.  The
+    state is donated."""
+
+    def admit(state, u_row, key_row, i, ci):
+        return DiffusionState(
+            u=state.u.at[i].set(u_row[0]),
+            hist=state.hist.at[i].set(0.0),
+            k=state.k.at[i].set(0),
+            cfg=state.cfg.at[i].set(ci),
+            keys=state.keys.at[i].set(key_row),
+            active=state.active.at[i].set(True))
+
+    return _jit_state_update(admit, (0,), out_shardings)
 
 
 # ===========================================================================
 # Token decoding
 # ===========================================================================
-class TokenEngine:
+class TokenEngine(ServeLoop):
     """Continuous-batching greedy decode over any `Arch` family.
 
     Usage:
@@ -109,61 +161,90 @@ class TokenEngine:
 
     The engine is persistent: repeated `serve()` calls reuse the allocated
     cache and the compiled steps (retire-and-refill, no recompilation).
+    Pass `mesh=` to shard the slot batch over the mesh's data axes (see the
+    module docstring).
     """
 
     def __init__(self, arch: Arch, params: Any, batch_size: int, max_len: int,
-                 eos_id: int = 1):
+                 eos_id: int = 1, mesh: Any = None,
+                 shard_cfg: Optional[shd.ShardCfg] = None,
+                 sync_every: int = 8):
+        super().__init__(batch_size,
+                         Scheduler(group_key=lambda r: r.prompt_len),
+                         mesh=mesh, shard_cfg=shard_cfg,
+                         sync_every=sync_every)
         self.arch = arch
-        self.params = params
-        self.batch_size = batch_size
         self.max_len = max_len
-        self.eos_id = eos_id
 
-        self.slots = SlotTable(batch_size)
-        self.scheduler = Scheduler(group_key=lambda r: r.prompt_len)
-
-        self.caches = arch.init_cache(batch_size, max_len)
+        caches = arch.init_cache(batch_size, max_len)
         axes_tree = arch.cache_batch_axes(max_len)
-        self._merge = _make_row_scatter(jax.tree.leaves(axes_tree))
-
-        self._decode = jax.jit(steps_lib.make_serve_step(arch))
-        self._prefill = jax.jit(steps_lib.make_prefill_step(arch, max_len))
-
-        self.memory: Optional[Array] = None
-        self._encode = None
+        state = token_state_init(batch_size, max_len)
+        memory = None
         if arch.spec.family == "encdec":
             ctx, d = arch.spec.frontend_ctx, arch.cfg.d_model
-            self.memory = jnp.zeros((batch_size, ctx, d), jnp.float32)
+            memory = jnp.zeros((batch_size, ctx, d), jnp.float32)
+
+        caches_sh = state_sh = memory_sh = None
+        if mesh is not None:
+            scfg = self.shard_cfg
+            params = jax.device_put(params,
+                                    shd.param_shardings(params, mesh, scfg))
+            caches_sh = shd.cache_shardings(
+                caches, axes_tree, mesh, scfg, batch_size,
+                getattr(arch.cfg, "n_kv_heads", 0),
+                getattr(arch.cfg, "d_head", -1))
+            caches = jax.device_put(caches, caches_sh)
+            state_sh = shd.serve_state_shardings(state, mesh, scfg)
+            state = jax.device_put(state, state_sh)
+            if memory is not None:
+                memory_sh = shd.logical_to_sharding(
+                    mesh, shd.batch_spec(mesh, scfg, memory.ndim, batch_size))
+                memory = jax.device_put(memory, memory_sh)
+        self.params = params
+        self.caches = caches
+        self.state = state
+        self.memory = memory
+
+        self._merge = _make_row_scatter(jax.tree.leaves(axes_tree),
+                                        out_shardings=caches_sh)
+        self._admit_state = _make_token_admit(out_shardings=state_sh)
+        # the round step is donated on (state, caches): in-place at the XLA
+        # level, no per-step copy of the KV/recurrent cache.  Output
+        # shardings are pinned in mesh mode so retire-and-refill cycles
+        # keep one compiled program
+        self._decode = _jit_state_update(
+            steps_lib.make_token_round_step(arch), (1, 2),
+            None if mesh is None else (state_sh, caches_sh))
+        self._prefill = jax.jit(steps_lib.make_prefill_step(arch, max_len))
+        self._encode = None
+        if arch.spec.family == "encdec":
             self._encode = jax.jit(arch.encode_memory)
-            self._merge_memory = _make_row_scatter([0])
+            self._merge_memory = _make_row_scatter([0],
+                                                   out_shardings=memory_sh)
+
+        self.eos_id = eos_id
 
         # throughput counters (benchmarks read these)
         self.n_decode_steps = 0
         self.n_prefill_calls = 0
         self.n_tokens_out = 0
+        # recent admission-wave widths (bounded: the engine is persistent)
+        self.prefill_widths: deque = deque(maxlen=256)
 
-    # ---- public API ---------------------------------------------------------
-    def serve(self, requests: List[Request]) -> Dict[int, np.ndarray]:
-        _check_unique_rids(requests)
-        for r in requests:
-            if r.prompt_len < 1:
-                raise ValueError(f"request {r.rid}: empty prompt")
-            if r.max_new < 1:
-                raise ValueError(f"request {r.rid}: max_new must be >= 1 "
-                                 f"(got {r.max_new})")
-            if r.prompt_len + r.max_new > self.max_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt_len {r.prompt_len} + max_new "
-                    f"{r.max_new} exceeds max_len {self.max_len}")
-            if self._encode is not None and r.frames is None:
-                raise ValueError(f"request {r.rid}: encdec arch needs frames")
-        self.scheduler.submit_all(requests)
-        results: Dict[int, np.ndarray] = {}
-        while self.scheduler.has_pending() or self.slots.active_ids():
-            self._admit(results)
-            if self.slots.active_ids():
-                self._decode_round(results)
-        return results
+    # eos is a *device* scalar argument of the round step (not a closure
+    # constant), so changing it never recompiles and never transfers
+    # per-round; the setter keeps the device copy in sync
+    @property
+    def eos_id(self) -> int:
+        return self._eos_id
+
+    @eos_id.setter
+    def eos_id(self, v: int) -> None:
+        self._eos_id = int(v)
+        eos = jnp.int32(v)
+        if self.mesh is not None:
+            eos = jax.device_put(eos, shd.replicated(self.mesh))
+        self._eos = eos
 
     def compile_stats(self) -> Dict[str, int]:
         stats = {"decode": _cache_size(self._decode),
@@ -173,84 +254,99 @@ class TokenEngine:
             stats["encode"] = _cache_size(self._encode)
         return stats
 
-    # ---- admission: batched prefill + slot-wise cache scatter ---------------
-    def _admit(self, results: Dict[int, np.ndarray]) -> None:
-        while True:
-            free = self.slots.free_ids()
-            group = self.scheduler.take_group(len(free))
-            if not group:
-                return
-            self._admit_group(group, free, results)
+    # ---- ServeLoop hooks ----------------------------------------------------
+    def _validate(self, r: Request) -> None:
+        if r.prompt_len < 1:
+            raise ValueError(f"request {r.rid}: empty prompt")
+        if r.max_new < 1:
+            raise ValueError(f"request {r.rid}: max_new must be >= 1 "
+                             f"(got {r.max_new})")
+        if r.prompt_len + r.max_new > self.max_len:
+            raise ValueError(
+                f"request {r.rid}: prompt_len {r.prompt_len} + max_new "
+                f"{r.max_new} exceeds max_len {self.max_len}")
+        if self._encode is not None and r.frames is None:
+            raise ValueError(f"request {r.rid}: encdec arch needs frames")
 
-    def _admit_group(self, group: List[Request], free: List[int],
-                     results: Dict[int, np.ndarray]) -> None:
-        PB, L = self.batch_size, group[0].prompt_len
-        toks = np.zeros((PB, L), np.int32)
+    def _admit_wave(self, group: List[Request], free: List[int]) -> None:
+        # prefill width-bucketed to the group's power-of-two size: a small
+        # admission wave no longer pays full-batch prefill FLOPs
+        L = group[0].prompt_len
+        G = bucket_pow2(len(group), self.batch_size)
+        toks = np.zeros((G, L), np.int32)
         for g, req in enumerate(group):
             toks[g] = req.tokens
         batch = {"tokens": jnp.asarray(toks)}
         mem_g = None
         if self._encode is not None:
-            frames = np.zeros(self.memory.shape, np.float32)
+            shape = (G,) + self.memory.shape[1:]
+            frames = np.zeros(shape, np.float32)
             for g, req in enumerate(group):
                 frames[g] = req.frames
-            mem_g = self._encode(self.params, jnp.asarray(frames))
+            with self._ctx():
+                mem_g = self._encode(self.params, jnp.asarray(frames))
             batch["memory"] = mem_g
 
-        logits_last, caches_g = self._prefill(self.params, batch)
+        with self._ctx():
+            logits_last, caches_g = self._prefill(self.params, batch)
         self.n_prefill_calls += 1
-        first = np.asarray(jnp.argmax(logits_last, axis=-1)).astype(np.int32)
+        self.prefill_widths.append(G)
 
-        # slot-wise merge: row g of the group cache -> slot_ids[g]; padded
-        # rows carry the PB sentinel and are dropped (never touch the cache)
-        slot_ids = np.full((PB,), PB, np.int32)
+        # slot-wise scatter: row g of the wave -> free[g]; padded rows carry
+        # the batch-size sentinel and are dropped (never touch a live slot)
+        slot_ids = np.full((G,), self.batch_size, np.int32)
+        budgets = np.ones((G,), np.int32)
         for g, req in enumerate(group):
             slot_ids[g] = free[g]
+            budgets[g] = req.max_new
         ids = jnp.asarray(slot_ids)
-        self.caches = self._merge(self.caches, caches_g, ids)
-        if mem_g is not None:
-            self.memory = self._merge_memory(self.memory, mem_g, ids)
-
+        with self._ctx():
+            self.caches = self._merge(self.caches, caches_g, ids)
+            if mem_g is not None:
+                self.memory = self._merge_memory(self.memory, mem_g, ids)
+            self.state = self._admit_state(
+                self.state, logits_last, ids, jnp.asarray(budgets),
+                jnp.full((G,), L, jnp.int32), self._eos)
         for g, req in enumerate(group):
-            i = free[g]
-            self.slots.assign(i, req, pos=L, last=int(first[g]),
-                              out=[int(first[g])])
-            self.n_tokens_out += 1
-            self._maybe_retire(i, results)
+            # host shadow: n_out paces polls (it may overshoot the device
+            # count after an early eos — resynced at every poll, and an
+            # overshoot only makes the next poll earlier, never later)
+            self.slots.assign(free[g], req, n_out=1, budget=req.max_new)
 
-    # ---- one decode step for every active slot ------------------------------
-    def _decode_round(self, results: Dict[int, np.ndarray]) -> None:
-        B = self.batch_size
-        tok = np.zeros((B, 1), np.int32)
-        clen = np.zeros((B,), np.int32)
-        for s in self.slots.active():
-            tok[s.index, 0] = s.data["last"]
-            clen[s.index] = s.data["pos"]
-        nxt, _, self.caches = self._decode(
-            self.params, jnp.asarray(tok), self.caches, jnp.asarray(clen),
-            self.memory)
+    def _round(self) -> None:
+        with self._ctx():
+            self.state, self.caches = self._decode(
+                self.params, self.state, self.caches, self._eos, self.memory)
         self.n_decode_steps += 1
-        nxt = np.asarray(nxt)
         for s in self.slots.active():
-            t = int(nxt[s.index, 0])
-            s.data["pos"] += 1
-            s.data["last"] = t
-            s.data["out"].append(t)
-            self.n_tokens_out += 1
-            self._maybe_retire(s.index, results)
+            s.data["n_out"] += 1
 
-    def _maybe_retire(self, i: int, results: Dict[int, np.ndarray]) -> None:
-        s = self.slots[i]
-        out = s.data["out"]
-        if out[-1] == self.eos_id or len(out) >= s.request.max_new:
-            results[s.request.rid] = np.asarray(out, np.int32)
-            self.slots.release(i)
+    def _poll(self, results: Dict[int, np.ndarray]) -> int:
+        busy = self.slots.active()
+        if not busy:
+            return 0
+        # the one steady-state device fetch: the done/progress mask
+        active, n_out = jax.device_get((self.state.active, self.state.n_out))
+        finished = [s for s in busy if not active[s.index]]
+        if finished:
+            out = jax.device_get(self.state.out)
+            for s in finished:
+                n = int(n_out[s.index])
+                results[s.request.rid] = out[s.index, :n].astype(np.int32)
+                self.n_tokens_out += n
+                self.slots.release(s.index)
+        for s in self.slots.active():
+            s.data["n_out"] = int(n_out[s.index])
+        return len(finished)
+
+    def _remaining_lb(self, slot) -> int:
+        return slot.data["budget"] - slot.data["n_out"]
 
 
 # ===========================================================================
 # gDDIM sampling service
 # ===========================================================================
-class DiffusionEngine:
+class DiffusionEngine(ServeLoop):
     """Continuous-batching gDDIM sampling over a *heterogeneous* sampler
     family: slots are samples, the per-slot position is the sampler step
     index k, and every slot additionally carries its own sampler config —
@@ -278,12 +374,18 @@ class DiffusionEngine:
     recompile, then the doubled bucket absorbs further growth).  The
     corrector needs a second model evaluation per step, so the step has two
     jit variants (static `with_corrector`); each round dispatches on
-    whether any *active* slot wants the corrector.  The scheduler keeps
-    admission waves homogeneous in that cost class, which biases runs of
-    same-class traffic into sharing rounds — it cannot prevent classes
+    whether any *active* slot wants the corrector — known host-side from
+    the admission shadow, so dispatch costs no device fetch.  The scheduler
+    keeps admission waves homogeneous in that cost class, which biases runs
+    of same-class traffic into sharing rounds — it cannot prevent classes
     from co-residing after retire-and-refill, so a predictor-only slot
     admitted next to a mid-flight corrector render still rides the 2-eval
     program (correct, just not cheaper) until the render retires.
+
+    A sampler slot's retirement round is *exactly* predictable (a slot
+    admitted at k=0 with NFE n retires after n rounds), so the loop's
+    host shadow paces polls with zero device fetches for metadata; the only
+    device->host traffic is the finished sample itself.
 
     Samples are a pure function of (request seed, sampler config): the
     stochastic branch keys its per-step noise by fold_in(seed-derived key,
@@ -292,13 +394,15 @@ class DiffusionEngine:
     """
 
     _NOISE_SALT = 0x5EED              # separates step noise from the prior
+    greedy_admit = False              # one cost-class wave per admission
+                                      # cycle (see ServeLoop.greedy_admit)
 
     def __init__(self, spec: Any, params: Any, batch_size: int,
                  nfe: Optional[int] = None, grid: Optional[str] = None,
-                 default_config: Optional[SamplerConfig] = None):
-        self.spec = spec
-        self.params = params
-        self.batch_size = batch_size
+                 default_config: Optional[SamplerConfig] = None,
+                 mesh: Any = None,
+                 shard_cfg: Optional[shd.ShardCfg] = None,
+                 sync_every: int = 8):
         if default_config is None:
             default_config = SamplerConfig(
                 nfe=20 if nfe is None else nfe,
@@ -308,50 +412,48 @@ class DiffusionEngine:
                              "not both")
         self.default_config = default_config
         self.nfe = default_config.nfe
+        super().__init__(
+            batch_size,
+            Scheduler(group_key=lambda r: self.config_of(r).corrector),
+            mesh=mesh, shard_cfg=shard_cfg, sync_every=sync_every)
+        self.spec = spec
 
         self.cache = CoeffCache(spec.sde, kt=spec.kt)
         self.cache.index_of(default_config)
         # single-config Stage-I bank of the default config (reference /
         # introspection surface; the serve loop reads the stacked bank)
         self.coeffs = self.cache.get(default_config)
-        self._step = jax.jit(steps_lib.make_diffusion_serve_step(spec),
-                             static_argnames=("with_corrector",))
 
-        state = spec.sde.state_shape(tuple(spec.data_shape))
-        self._state = state
-        self.u = jnp.zeros((batch_size,) + state, jnp.float32)
-        self.hist = jnp.zeros(
-            (batch_size, self.cache.bank.pC.shape[2]) + state, jnp.float32)
-        self.keys = np.zeros((batch_size, 2), np.uint32)
-        self.slots = SlotTable(batch_size)
-        # admission waves group by corrector cost class (see class docs)
-        self.scheduler = Scheduler(
-            group_key=lambda r: self.config_of(r).corrector)
+        state_shape = spec.sde.state_shape(tuple(spec.data_shape))
+        self._state_shape = tuple(state_shape)
+        state = diffusion_state_init(batch_size, state_shape,
+                                     self.cache.bank.pC.shape[2])
+        state_sh = None
+        if mesh is not None:
+            params = jax.device_put(
+                params, shd.param_shardings(params, mesh, self.shard_cfg))
+            state_sh = shd.serve_state_shardings(state, mesh, self.shard_cfg)
+            state = jax.device_put(state, state_sh)
+        self.params = params
+        self.state = state
+        self._state_sh = state_sh       # NamedShardings are shape-free:
+                                        # still valid after hist regrowth
+        self._bank_src = None
+        self._bank = None
+        self._refresh_bank()
 
+        # the round step is donated on the state: u/hist update in place
+        self._step = _jit_state_update(
+            steps_lib.make_diffusion_round_step(spec), (1,), state_sh,
+            static_argnames=("with_corrector",))
+        self._admit_state = _make_diffusion_admit(out_shardings=state_sh)
         self._prior1 = jax.jit(
             lambda key: spec.sde.prior_sample(key, 1, tuple(spec.data_shape)))
-        self._set_row = jax.jit(lambda u, row, i: u.at[i].set(row[0]))
-        self._zero_row = jax.jit(lambda h, i: h.at[i].set(0.0))
         self._project_row = jax.jit(
             lambda u, i: spec.sde.project_data(u[i][None])[0])
 
         self.n_steps = 0
         self.n_samples_out = 0
-
-    def serve(self, requests: List[SampleRequest]) -> Dict[int, np.ndarray]:
-        _check_unique_rids(requests)
-        for r in requests:
-            try:
-                self.config_of(r)       # fail fast, before any device work
-            except ValueError as e:
-                raise ValueError(f"request {r.rid}: {e}") from None
-        self.scheduler.submit_all(requests)
-        results: Dict[int, np.ndarray] = {}
-        while self.scheduler.has_pending() or self.slots.active_ids():
-            self._admit()
-            if self.slots.active_ids():
-                self._step_round(results)
-        return results
 
     def compile_stats(self) -> Dict[str, int]:
         # step counts both jit variants (predictor-only / with-corrector);
@@ -368,58 +470,76 @@ class DiffusionEngine:
             corrector=pick(req.corrector, d.corrector),
             lam=pick(req.lam, d.lam), grid=pick(req.grid, d.grid))
 
-    def _admit(self) -> None:
-        # one head-of-line group per round: an admission wave is
-        # homogeneous in corrector cost class (the next class waits for
-        # the next round rather than being reordered around)
-        free = self.slots.free_ids()
-        group = self.scheduler.take_group(len(free))
-        if not group:
+    # ---- coefficient-bank placement ----------------------------------------
+    def _refresh_bank(self) -> None:
+        """Re-place the stacked bank on device when the CoeffCache restacked
+        it (a new config was registered), and grow the state's eps-history
+        bucket if the bank's Qb bucket grew (one-time warmup shape change)."""
+        bank = self.cache.bank
+        if bank is self._bank_src:
             return
-        # register the whole wave's configs before touching the bank, so
-        # it restacks at most once per wave (not once per new config)
+        self._bank_src = bank
+        if self.mesh is not None:
+            bank = jax.device_put(
+                bank, jax.tree.map(lambda _: shd.replicated(self.mesh), bank))
+        self._bank = bank
+        qb = bank.pC.shape[2]
+        hist = self.state.hist
+        if hist.shape[1] < qb:
+            pad = jnp.zeros((self.batch_size, qb - hist.shape[1])
+                            + self._state_shape, jnp.float32)
+            hist = jnp.concatenate([hist, pad], axis=1)
+            if self._state_sh is not None:
+                hist = jax.device_put(hist, self._state_sh.hist)
+            self.state = self.state._replace(hist=hist)
+
+    # ---- ServeLoop hooks ----------------------------------------------------
+    def _validate(self, r: SampleRequest) -> None:
+        try:
+            self.config_of(r)           # fail fast, before any device work
+        except ValueError as e:
+            raise ValueError(f"request {r.rid}: {e}") from None
+
+    def _admit_wave(self, group: List[SampleRequest], free: List[int]) -> None:
+        # register the whole wave's configs before touching the bank, so it
+        # restacks at most once per wave (not once per new config)
         cfgs = [self.config_of(req) for req in group]
         idx = [self.cache.index_of(cfg) for cfg in cfgs]
-        self._sync_hist_bucket()
+        self._refresh_bank()
         for req, cfg, ci in zip(group, cfgs, idx):
             i = free.pop(0)
             base = jax.random.PRNGKey(req.seed)
-            row = self._prior1(base)
-            self.u = self._set_row(self.u, row, i)
-            self.hist = self._zero_row(self.hist, i)
-            self.keys[i] = np.asarray(
-                jax.random.fold_in(base, self._NOISE_SALT))
+            with self._ctx():
+                row = self._prior1(base)
+                key_row = jax.random.fold_in(base, self._NOISE_SALT)
+                self.state = self._admit_state(self.state, row, key_row,
+                                               np.int32(i), np.int32(ci))
             self.slots.assign(i, req, k=0, cfg=ci, nfe=cfg.nfe,
                               pc=cfg.corrector)
 
-    def _sync_hist_bucket(self) -> None:
-        """Grow the per-slot eps-history buffer when the bank's multistep
-        bucket Qb grows (a shape change — i.e. one-time warmup cost)."""
-        qb = self.cache.bank.pC.shape[2]
-        if self.hist.shape[1] < qb:
-            pad = np.zeros((self.batch_size, qb - self.hist.shape[1])
-                           + self._state, np.float32)
-            self.hist = jnp.concatenate([self.hist, jnp.asarray(pad)], axis=1)
-
-    def _step_round(self, results: Dict[int, np.ndarray]) -> None:
-        # inactive slots step at a clipped index on garbage rows; their
-        # result is never read and the row is overwritten at admission
-        k = np.zeros((self.batch_size,), np.int32)
-        c = np.zeros((self.batch_size,), np.int32)
-        with_corr = False
-        for s in self.slots.active():
-            k[s.index] = s.data["k"]
-            c[s.index] = s.data["cfg"]
-            with_corr = with_corr or s.data["pc"]
-        self.u, self.hist = self._step(
-            self.params, self.u, self.hist, jnp.asarray(k), jnp.asarray(c),
-            jnp.asarray(self.keys), self.cache.bank,
-            with_corrector=with_corr)
+    def _round(self) -> None:
+        # corrector dispatch is a host-shadow read — no device fetch
+        with_corr = any(s.data["pc"] for s in self.slots.active())
+        with self._ctx():
+            self.state = self._step(self.params, self.state, self._bank,
+                                    with_corrector=with_corr)
         self.n_steps += 1
         for s in self.slots.active():
             s.data["k"] += 1
-            if s.data["k"] >= s.data["nfe"]:
-                results[s.request.rid] = np.asarray(
-                    self._project_row(self.u, s.index))
-                self.n_samples_out += 1
-                self.slots.release(s.index)
+
+    def _poll(self, results: Dict[int, np.ndarray]) -> int:
+        # retirement is exactly predictable from the host shadow (k reaches
+        # the config's NFE after exactly NFE rounds): no device fetch at
+        # all for metadata, only the finished samples themselves
+        done = [s for s in self.slots.active()
+                if s.data["k"] >= s.data["nfe"]]
+        for s in done:
+            with self._ctx():
+                row = self._project_row(self.state.u, s.index)
+            results[s.request.rid] = np.asarray(row)
+            self.n_samples_out += 1
+            self.slots.release(s.index)
+        return len(done)
+
+    def _remaining_lb(self, slot) -> int:
+        return slot.data["nfe"] - slot.data["k"]

@@ -1,18 +1,21 @@
-"""Slot table: per-slot bookkeeping for the continuous-batching engines.
+"""Slot table: host-side bookkeeping for the continuous-batching engines.
 
 A slot is one row of the device batch.  The engine pre-allocates `n` slots
 (the decode batch size) once; requests are admitted into free slots, run to
 completion at their own per-slot position, retire, and the slot is refilled
 — no reallocation, no recompilation, no cross-slot state.
 
-The two correctness bugs this table exists to prevent (both present in the
-old demo loop):
+Since the `EngineState` refactor the table holds only the host's *shadow*
+of a slot: which request occupies it (results are keyed by rid) and the
+cheap progress counters the `ServeLoop` uses to pace polls (`n_out` for
+token slots, `k` for sampler slots).  The authoritative per-slot state —
+positions, output rings, sampler state — lives on device in the engine's
+`EngineState` pytree and never round-trips through here.
 
-  * cache clobbering — prefilling one slot must write only that slot's
-    cache rows.  The engine scatters prefill results slot-wise (see
-    `TokenEngine._merge`), keyed by `Slot.index`.
-  * shared positions — each slot decodes at its own `pos`; the engine
-    passes the per-slot vector to the model, never a batch-wide max.
+Mesh mode: slots map to data shards contiguously (slot i lives on shard
+i // (n // n_shards)), and `free_ids` returns free slots round-robin
+*across* shards, so an admission wave scatters its rows evenly over the
+mesh instead of piling onto shard 0.
 """
 from __future__ import annotations
 
@@ -23,7 +26,7 @@ from typing import Any, Dict, List, Optional
 @dataclasses.dataclass
 class Slot:
     """One batch row.  `request` is None while free; `data` holds the
-    engine's per-slot state (position, last token, sampler step index...)."""
+    host shadow of the slot's progress (see module docstring)."""
     index: int
     request: Optional[Any] = None
     data: Dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -34,8 +37,13 @@ class Slot:
 
 
 class SlotTable:
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, n_shards: int = 1):
+        if n_shards < 1 or n_slots % n_shards:
+            raise ValueError(f"n_slots {n_slots} not divisible by "
+                             f"n_shards {n_shards}")
         self.slots: List[Slot] = [Slot(i) for i in range(n_slots)]
+        self.n_shards = n_shards
+        self._per_shard = n_slots // n_shards
 
     def __len__(self) -> int:
         return len(self.slots)
@@ -44,7 +52,12 @@ class SlotTable:
         return self.slots[i]
 
     def free_ids(self) -> List[int]:
-        return [s.index for s in self.slots if s.free]
+        """Free slot indices, round-robin across shards (see module docs)."""
+        free = [s.index for s in self.slots if s.free]
+        if self.n_shards == 1:
+            return free
+        ps = self._per_shard
+        return sorted(free, key=lambda i: (i % ps, i // ps))
 
     def active_ids(self) -> List[int]:
         return [s.index for s in self.slots if not s.free]

@@ -1,0 +1,108 @@
+"""`EngineState`: the device-resident half of a continuous-batching engine.
+
+Everything the jitted round step *consumes or updates* per slot lives here,
+as one batch-leading pytree per engine kind:
+
+  * `TokenState`     — last emitted token, absolute cache position, the
+                       per-slot output ring (`out`/`n_out`), the generation
+                       budget, and the active mask.
+  * `DiffusionState` — the sampler state `u`, the multistep eps history,
+                       the step index `k`, the config slot `cfg`, the
+                       per-slot PRNG key, and the active mask.
+
+The point of making these explicit pytrees (instead of host-side dicts
+rebuilt into fresh numpy arrays every round, which is what PR 1–2 did) is
+threefold:
+
+  * **No per-round host round-trip.**  The round step reads and writes the
+    state on device; the host loop only fetches a small done/progress mask
+    every R rounds (`ServeLoop` in loop.py).  After warmup the steady-state
+    loop performs zero host→device transfers per round — locked in by a
+    `jax.transfer_guard` test.
+  * **Donation.**  The state (and the KV caches next to it) is donated into
+    the round step (`donate_argnums`), so the update is in-place at the XLA
+    level: no per-step copy of the caches / `u` / `hist` buffers, and peak
+    device memory stays at one copy of each.
+  * **Sharding.**  Every leaf is slot-batch-leading, so one rule shards the
+    whole engine over the `data` mesh axis
+    (`distributed.sharding.serve_state_shardings`); the same pytree works
+    single-device (no mesh) and mesh-sharded without code changes.
+
+Retired slots are *frozen*, not cleared: the round step masks every update
+with `active`, so a finished slot's `out` rows / sampler state survive
+verbatim until the host fetches them and re-admits into the row.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class TokenState(NamedTuple):
+    """Per-slot decode state for `TokenEngine` (all leaves batch-leading).
+
+      last    (B, 1) int32   last emitted token (next step's input)
+      pos     (B,)   int32   absolute cache position of the slot
+      n_out   (B,)   int32   tokens emitted so far (incl. the prefill token)
+      budget  (B,)   int32   the request's max_new
+      out     (B, max_len) int32  per-slot output ring; row b holds
+                                  out[b, :n_out[b]]
+      active  (B,)   bool    False once retired (eos / budget) — every
+                             update in the round step is masked by this
+    """
+    last: Array
+    pos: Array
+    n_out: Array
+    budget: Array
+    out: Array
+    active: Array
+
+
+class DiffusionState(NamedTuple):
+    """Per-slot sampler state for `DiffusionEngine` (batch-leading).
+
+      u       (B, *state) f32   the gDDIM iterate (e.g. (B, 2, d) for CLD)
+      hist    (B, Qb, *state)   multistep eps history, hist[:, j] ~ eps(t_{i+j})
+      k       (B,) int32        per-slot sampler step index
+      cfg     (B,) int32        per-slot config row in the CoeffBank
+      keys    (B, 2) uint32     per-slot PRNG key (Eq. 22 stochastic branch)
+      active  (B,) bool         False once k reached the config's NFE
+    """
+    u: Array
+    hist: Array
+    k: Array
+    cfg: Array
+    keys: Array
+    active: Array
+
+
+def token_state_init(batch_size: int, max_len: int) -> TokenState:
+    """All-free token state (every slot inactive, zeroed)."""
+    B = batch_size
+    return TokenState(
+        last=jnp.zeros((B, 1), jnp.int32),
+        pos=jnp.zeros((B,), jnp.int32),
+        n_out=jnp.zeros((B,), jnp.int32),
+        budget=jnp.ones((B,), jnp.int32),
+        out=jnp.zeros((B, max_len), jnp.int32),
+        active=jnp.zeros((B,), bool),
+    )
+
+
+def diffusion_state_init(batch_size: int, state_shape: Tuple[int, ...],
+                         q_bucket: int) -> DiffusionState:
+    """All-free diffusion state for a given SDE state shape and multistep
+    history bucket Qb (grows with the CoeffBank's q bucket)."""
+    B = batch_size
+    return DiffusionState(
+        u=jnp.zeros((B,) + tuple(state_shape), jnp.float32),
+        hist=jnp.zeros((B, q_bucket) + tuple(state_shape), jnp.float32),
+        k=jnp.zeros((B,), jnp.int32),
+        cfg=jnp.zeros((B,), jnp.int32),
+        keys=jnp.zeros((B, 2), jnp.uint32),
+        active=jnp.zeros((B,), bool),
+    )

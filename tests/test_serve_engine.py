@@ -1,5 +1,6 @@
 """Continuous-batching engine: slot isolation, retire-and-refill compile
-stability, batched prefill, and the gDDIM sampling service.
+stability, batched (width-bucketed) prefill, the device-resident round loop,
+and the gDDIM sampling service.
 
 The load-bearing property is *slot isolation*: a request's output stream
 must be token-for-token (bitwise) identical whether it runs alone or
@@ -13,15 +14,22 @@ where isolation extends to the *sampler config*: a request's sample may not
 depend on the NFE/q/corrector/lambda of its neighbours, and serving a new
 config after warmup may not recompile (the coefficient bank is a bucketed
 argument of the step, see repro.core.coeffs.CoeffCache).
+
+Since the `EngineState` refactor the loop itself is a property under test:
+the steady-state round must move *no* per-slot metadata host->device (the
+state lives on device and is updated inside the donated round step), which
+`test_steady_state_rounds_are_transfer_free` locks in with a
+`jax.transfer_guard`.  The mesh-sharded counterparts of these properties
+live in tests/test_serve_mesh.py.
 """
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_arch, get_diffusion
 from repro.models.registry import Arch
-from repro.serve import DiffusionEngine, Request, SampleRequest, TokenEngine
+from repro.serve import (DiffusionEngine, Request, SampleRequest, Scheduler,
+                         SlotTable, TokenEngine)
 
 MAX_LEN = 48
 
@@ -67,6 +75,20 @@ def test_slot_isolation_interleaved_equals_solo(name):
             err_msg=f"{name}: request {r.rid} output depends on neighbours")
 
 
+def test_single_token_request_retires_at_admission():
+    """max_new=1 is satisfied by the prefill token alone: the slot is born
+    inactive on device and the first poll retires it without a decode."""
+    arch, params = _arch_and_params("gemma3-1b")
+    engine = TokenEngine(arch, params, batch_size=2, max_len=MAX_LEN)
+    reqs = _requests(arch.cfg.vocab, lens=[8, 8], max_news=[1, 3])
+    results = engine.serve(reqs)
+    assert len(results[0]) == 1
+    assert len(results[1]) == 3
+    solo = TokenEngine(arch, params, batch_size=2, max_len=MAX_LEN).serve(
+        [reqs[0]])
+    np.testing.assert_array_equal(results[0], solo[0])
+
+
 # ---------------------------------------------------------------------------
 # retire-and-refill reuses the warmed compiles
 # ---------------------------------------------------------------------------
@@ -92,6 +114,74 @@ def test_prefill_is_batched():
     reqs = _requests(arch.cfg.vocab, lens=[10] * 4, max_news=[4] * 4)
     engine.serve(reqs)
     assert engine.n_prefill_calls == 1
+    assert list(engine.prefill_widths) == [4]
+
+
+def test_prefill_width_bucketed():
+    """Prefill width is the admission wave's power-of-two bucket, not the
+    full batch: a 3-request wave on an 8-slot engine pays 4 rows of FLOPs,
+    a 1-request refill pays 1 — small waves stop paying full-batch cost."""
+    arch, params = _arch_and_params("gemma3-1b")
+    engine = TokenEngine(arch, params, batch_size=8, max_len=MAX_LEN)
+    reqs = _requests(arch.cfg.vocab, lens=[8] * 3, max_news=[3] * 3)
+    engine.serve(reqs)
+    assert list(engine.prefill_widths) == [4]
+    engine.serve(_requests(arch.cfg.vocab, lens=[8], max_news=[3], seed=1))
+    assert list(engine.prefill_widths) == [4, 1]
+
+
+# ---------------------------------------------------------------------------
+# the steady-state loop is device-resident
+# ---------------------------------------------------------------------------
+def test_steady_state_rounds_are_transfer_free():
+    """After warmup, a serving round moves NOTHING host->device: slot
+    metadata (positions, step indices, active masks, PRNG keys) lives in
+    the donated EngineState and is updated inside the jitted step.  The
+    transfer guard turns any host->device transfer into an error."""
+    # diffusion engine
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    eng = DiffusionEngine(spec, params, batch_size=2, nfe=8)
+    eng.scheduler.submit_all([SampleRequest(rid=0, seed=0),
+                              SampleRequest(rid=1, seed=1)])
+    eng._admit()
+    eng._round()                                   # warm the round program
+    with jax.transfer_guard_host_to_device("disallow"):
+        for _ in range(3):
+            eng._round()
+    results = {}
+    while eng.slots.active_ids():
+        eng._round()
+        eng._poll(results)
+    assert sorted(results) == [0, 1]
+
+    # token engine
+    arch, aparams = _arch_and_params("gemma3-1b")
+    t = TokenEngine(arch, aparams, batch_size=2, max_len=MAX_LEN)
+    t.scheduler.submit_all(_requests(arch.cfg.vocab, lens=[8, 8],
+                                     max_news=[16, 16]))
+    t._admit()
+    t._round()                                     # warm
+    with jax.transfer_guard_host_to_device("disallow"):
+        for _ in range(5):
+            t._round()
+    results = {}
+    while t.slots.active_ids():
+        t._round()
+        t._poll(results)
+    assert sorted(results) == [0, 1]
+
+
+def test_poll_cadence_bounded_by_sync_every():
+    """The host polls at most every `sync_every` rounds, and exactly at the
+    predicted retirement when the bound is tight (diffusion progress is
+    exactly predictable): an NFE-8 batch at sync_every=4 costs 2 polls."""
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    eng = DiffusionEngine(spec, params, batch_size=2, nfe=8, sync_every=4)
+    eng.serve([SampleRequest(rid=0, seed=0), SampleRequest(rid=1, seed=1)])
+    assert eng.n_steps == 8
+    assert eng.n_polls == 2
 
 
 # ---------------------------------------------------------------------------
@@ -185,23 +275,6 @@ def test_diffusion_engine_zero_recompiles_across_nfe():
     assert len(engine.cache) == 4
 
 
-def test_diffusion_engine_admission_groups_by_corrector_class():
-    """The scheduler keys admission on the corrector cost class, so a
-    predictor-only wave never runs the 2-eval program just because a
-    corrector request sits behind it in the queue."""
-    spec = get_diffusion("cifar10-ddpm", reduced=True)
-    params = spec.init(jax.random.PRNGKey(0))
-    engine = DiffusionEngine(spec, params, batch_size=4, nfe=4)
-    reqs = [SampleRequest(rid=0, seed=0),
-            SampleRequest(rid=1, seed=1, nfe=4, corrector=True),
-            SampleRequest(rid=2, seed=2)]
-    engine.scheduler.submit_all(reqs)
-    engine._admit()
-    # head-of-line grouping: only rid 0 admitted (rid 1 breaks the class,
-    # rid 2 waits behind it rather than being reordered around)
-    assert [s.request.rid for s in engine.slots.active()] == [0]
-
-
 def test_diffusion_engine_staggered_step_indices():
     """Slots at different sampler step indices k in the same batch: admit a
     second request mid-flight and check both still match their solo runs."""
@@ -214,16 +287,91 @@ def test_diffusion_engine_staggered_step_indices():
     engine.scheduler.submit(SampleRequest(rid=0, seed=0))
     engine._admit()
     for _ in range(3):                          # slot 0 advances to k=3
-        engine._step_round(results)
+        engine._round()
     engine.scheduler.submit(SampleRequest(rid=1, seed=1))
     engine._admit()                             # slot 1 enters at k=0
     ks = sorted(s.data["k"] for s in engine.slots.active())
     assert ks == [0, 3], ks
     while engine.slots.active_ids():
-        engine._step_round(results)
+        engine._round()
+        engine._poll(results)
 
     for rid, seed in ((0, 0), (1, 1)):
         solo = DiffusionEngine(spec, params, batch_size=B,
                                nfe=nfe).serve([SampleRequest(rid=rid,
                                                              seed=seed)])
         np.testing.assert_array_equal(results[rid], solo[rid])
+
+
+# ---------------------------------------------------------------------------
+# scheduler: admission-wave grouping under mixed cost classes
+# ---------------------------------------------------------------------------
+class TestSchedulerGrouping:
+    def _sched(self):
+        # group by corrector cost class, like the DiffusionEngine does
+        return Scheduler(group_key=lambda r: bool(r.corrector))
+
+    def test_waves_are_class_homogeneous(self):
+        s = self._sched()
+        s.submit_all([SampleRequest(rid=0),
+                      SampleRequest(rid=1, corrector=True),
+                      SampleRequest(rid=2),
+                      SampleRequest(rid=3)])
+        waves = []
+        while s.has_pending():
+            waves.append([r.rid for r in s.take_group(8)])
+        # FIFO with head-of-line grouping: rid 2/3 queue behind the
+        # corrector request rather than being reordered around it
+        assert waves == [[0], [1], [2, 3]]
+
+    def test_wave_size_capped_by_free_slots(self):
+        s = self._sched()
+        s.submit_all([SampleRequest(rid=i) for i in range(5)])
+        assert [r.rid for r in s.take_group(2)] == [0, 1]
+        assert [r.rid for r in s.take_group(2)] == [2, 3]
+        assert [r.rid for r in s.take_group(2)] == [4]
+        assert s.take_group(2) == []
+
+    def test_zero_free_slots_takes_nothing(self):
+        s = self._sched()
+        s.submit(SampleRequest(rid=0))
+        assert s.take_group(0) == []
+        assert s.n_pending == 1
+
+    def test_engine_admits_one_cost_class_wave_per_cycle(self):
+        """The diffusion engine admits ONE class-homogeneous wave per
+        admission cycle: a queued corrector render does not land next to
+        the predictor-only wave just admitted (which would drag it
+        through the 2-eval program for its whole lifetime) — it waits for
+        the next poll cycle."""
+        spec = get_diffusion("cifar10-ddpm", reduced=True)
+        params = spec.init(jax.random.PRNGKey(0))
+        engine = DiffusionEngine(spec, params, batch_size=4, nfe=4)
+        engine.scheduler.submit_all([
+            SampleRequest(rid=0, seed=0),
+            SampleRequest(rid=1, seed=1, nfe=4, corrector=True),
+            SampleRequest(rid=2, seed=2)])
+        engine._admit()
+        # head-of-line grouping: only rid 0 admitted (rid 1 breaks the
+        # class; rid 2 waits behind it rather than being reordered around)
+        assert [s.request.rid for s in engine.slots.active()] == [0]
+        engine._admit()                 # next cycle: the corrector wave
+        assert sorted(s.request.rid
+                      for s in engine.slots.active()) == [0, 1]
+        results = engine.serve([])      # drain everything (rid 2 admits
+        assert sorted(results) == [0, 1, 2]   # on the next cycle inside)
+
+
+# ---------------------------------------------------------------------------
+# slot table: shard-aware free-slot ordering
+# ---------------------------------------------------------------------------
+def test_slot_table_round_robin_across_shards():
+    t = SlotTable(8, n_shards=2)
+    assert t.free_ids() == [0, 4, 1, 5, 2, 6, 3, 7]
+    t.assign(0, object())
+    t.assign(4, object())
+    assert t.free_ids() == [1, 5, 2, 6, 3, 7]
+    t.release(4)
+    assert t.free_ids() == [4, 1, 5, 2, 6, 3, 7]
+    with pytest.raises(ValueError):
+        SlotTable(6, n_shards=4)
