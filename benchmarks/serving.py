@@ -6,18 +6,33 @@ for serving rows the quality columns carry throughput instead:
   * token rows     — config "<arch>_B<batch>", us_per_call = us per decode
                      round, sw2 column = tokens/s
   * diffusion rows — config "gddim_B<batch>" for homogeneous traffic
-                     (every request at the default NFE) and
-                     "gddim_mix_B<batch>" for heterogeneous traffic (a mix
-                     of NFE budgets, multistep orders, and the corrector
-                     cycling through one engine/one compiled step);
+                     (every request at the default NFE),
+                     "gddim_mix_B<batch>" for heterogeneous sampler-config
+                     traffic (a mix of NFE budgets, multistep orders, the
+                     corrector and a stochastic lambda through ONE engine),
+                     and "gddim_fam_mix_B<batch>" for heterogeneous *SDE
+                     family* traffic (VPSDE + CLD + BDM co-resident on one
+                     engine, each with its own score net);
                      nfe = the default sampler NFE, us_per_call = us per
-                     batch step, sw2 column = samples/s
+                     serving round, sw2 column = samples/s
 
 Besides the CSV rows, a machine-readable `BENCH_serving.json` is written at
 the repo root every time the table runs (via `python -m benchmarks.run
 serving`), so the serving perf trajectory is tracked PR-over-PR: one record
-per CSV row with explicit field names plus engine counters (rounds, polls,
-prefill widths) and the host/device context.
+per CSV row with explicit field names plus engine counters and the
+host/device context.  Every record carries the *deterministic* counters the
+CI perf-guard job (`tools/perf_guard.py`) compares against the committed
+baseline — timing-free, so the guard is stable on shared runners:
+
+  * `recompiles_after_warmup` — jit cache growth across the measured serve
+    (0 for the diffusion engines: the coefficient bank is an argument and
+    every (family, corrector) variant is warmed; small fixed values for
+    token engines, which meet new width buckets)
+  * `rounds` / `polls`        — serving rounds and host polls for the
+                                measured request schedule
+  * `dispatches`              — step-program dispatches (diffusion; >
+                                rounds exactly when families co-reside)
+  * `n_prefills` / `prefill_widths` — admission-wave prefill count/widths
 
 Reduced CPU configs: the numbers are for *relative* tracking (batch scaling,
 homogeneous vs mixed traffic, regression against the per-request loop), not
@@ -64,6 +79,10 @@ def _write_json(records: List[dict]) -> None:
     os.replace(tmp, BENCH_JSON)
 
 
+def _stats_total(engine) -> int:
+    return sum(engine.compile_stats().values())
+
+
 def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
                        max_new=16, max_len=64, nfe=10) -> Iterator[str]:
     records: List[dict] = []
@@ -80,6 +99,7 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
             reqs = _token_requests(arch.cfg.vocab, n_requests, prompt_len,
                                    max_new)
             engine.serve(reqs[:B])                     # warmup + compile
+            warm_stats = _stats_total(engine)
             n0, s0 = engine.n_tokens_out, engine.n_decode_steps
             p0, w0 = engine.n_polls, len(engine.prefill_widths)
             t0 = time.perf_counter()
@@ -88,13 +108,16 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
             toks = engine.n_tokens_out - n0
             rounds = max(engine.n_decode_steps - s0, 1)
             us_round = 1e6 * dt / rounds
+            widths = list(engine.prefill_widths)[w0:]
             records.append({
                 "workload": "token", "config": f"{arch_name}_B{B}",
                 "arch": arch_name, "batch": B,
                 "us_per_round": round(us_round, 1),
                 "tokens_per_s": round(toks / dt, 2),
                 "rounds": rounds, "polls": engine.n_polls - p0,
-                "prefill_widths": list(engine.prefill_widths)[w0:],
+                "recompiles_after_warmup": _stats_total(engine) - warm_stats,
+                "n_prefills": len(widths),
+                "prefill_widths": widths,
                 "n_requests": n_requests - B,
             })
             yield (f"serving,{arch_name}_B{B},0,{us_round:.0f},"
@@ -104,8 +127,8 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
     spec = get_diffusion("cifar10-ddpm", reduced=True)
     params = spec.init(jax.random.PRNGKey(0))
     # mixed traffic cycles a preview, a multistep render, a corrector
-    # render, and a stochastic sample through ONE engine (one compiled
-    # step, per-slot configs)
+    # render, and a stochastic sample through ONE engine (one warmed set of
+    # compiled step variants, per-slot configs)
     mix = [dict(nfe=max(nfe // 2, 2)),
            dict(nfe=nfe, q=2),
            dict(nfe=nfe, q=2, corrector=True),
@@ -115,13 +138,14 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
             engine = DiffusionEngine(spec, params, batch_size=B, nfe=nfe)
             engine.serve([SampleRequest(rid=-1 - i, seed=0, **kw)
                           for i, kw in enumerate(kinds)])   # warmup + compile
-            s0, p0 = engine.n_steps, engine.n_polls
+            warm_stats = _stats_total(engine)
+            s0, r0, p0 = engine.n_steps, engine.n_rounds, engine.n_polls
             t0 = time.perf_counter()
             engine.serve([SampleRequest(rid=i, seed=i,
                                         **kinds[i % len(kinds)])
                           for i in range(n_requests)])
             dt = time.perf_counter() - t0
-            rounds = max(engine.n_steps - s0, 1)
+            rounds = max(engine.n_rounds - r0, 1)
             us_step = 1e6 * dt / rounds
             records.append({
                 "workload": "diffusion",
@@ -129,11 +153,53 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
                 "traffic": "mixed" if tag else "homogeneous",
                 "us_per_round": round(us_step, 1),
                 "samples_per_s": round(n_requests / dt, 3),
-                "rounds": rounds, "polls": engine.n_polls - p0,
+                "rounds": rounds, "dispatches": engine.n_steps - s0,
+                "polls": engine.n_polls - p0,
+                "recompiles_after_warmup": _stats_total(engine) - warm_stats,
                 "n_requests": n_requests,
                 "n_configs": len(engine.cache),
             })
             yield (f"serving,gddim_{tag}B{B},{nfe},{us_step:.0f},"
                    f"{n_requests / dt:.2f},0")
+
+    # ---- multi-family gDDIM: VPSDE + CLD + BDM co-resident on ONE engine ----
+    fam_specs, fam_params = {}, {}
+    for i, (fam, name) in enumerate((("vpsde", "cifar10-ddpm"),
+                                     ("cld", "cifar10-cld"),
+                                     ("bdm", "cifar10-bdm"))):
+        fam_specs[fam] = get_diffusion(name, reduced=True)
+        fam_params[fam] = fam_specs[fam].init(jax.random.PRNGKey(i))
+    fam_mix = [dict(family="vpsde", nfe=max(nfe // 2, 2)),
+               dict(family="cld", nfe=nfe),
+               dict(family="bdm", nfe=nfe),
+               dict(family="cld", nfe=nfe, corrector=True)]
+    B = 4
+    n_fam_requests = 8
+    engine = DiffusionEngine(fam_specs, fam_params, batch_size=B, nfe=nfe)
+    engine.serve([SampleRequest(rid=-1 - i, seed=0, **kw)
+                  for i, kw in enumerate(fam_mix)])         # warm every
+    warm_stats = _stats_total(engine)                       # (fam, corr)
+    s0, r0, p0 = engine.n_steps, engine.n_rounds, engine.n_polls
+    t0 = time.perf_counter()
+    engine.serve([SampleRequest(rid=i, seed=i, **fam_mix[i % len(fam_mix)])
+                  for i in range(n_fam_requests)])
+    dt = time.perf_counter() - t0
+    rounds = max(engine.n_rounds - r0, 1)
+    us_step = 1e6 * dt / rounds
+    records.append({
+        "workload": "diffusion",
+        "config": f"gddim_fam_mix_B{B}", "batch": B, "nfe": nfe,
+        "traffic": "multi-family",
+        "families": list(engine.families),
+        "us_per_round": round(us_step, 1),
+        "samples_per_s": round(n_fam_requests / dt, 3),
+        "rounds": rounds, "dispatches": engine.n_steps - s0,
+        "polls": engine.n_polls - p0,
+        "recompiles_after_warmup": _stats_total(engine) - warm_stats,
+        "n_requests": n_fam_requests,
+        "n_configs": len(engine.cache),
+    })
+    yield (f"serving,gddim_fam_mix_B{B},{nfe},{us_step:.0f},"
+           f"{n_fam_requests / dt:.2f},0")
 
     _write_json(records)

@@ -42,6 +42,26 @@ Two workloads ride the same scheduler/slot-table machinery:
    The paper's point — one trained score network supports the whole
    sampler family (Eqs. 19/22/45) — behind one hot, batched program.
 
+3. Multi-family serving: the same `DiffusionEngine` built with ordered
+   `{family: spec}` / `{family: params}` mappings serves VPSDE + CLD + BDM
+   traffic from ONE slot pool — every slot lives in the canonical packed
+   (K, D) layout (CLD's (x, v) channels set K=2; BDM slots are DCT
+   coefficients riding the dct2 kernel path), each family's score net
+   stays device-resident, and a round dispatches one compiled variant per
+   (family, corrector) class present in the batch:
+
+       engine = DiffusionEngine({"vpsde": sv, "cld": sc, "bdm": sb},
+                                {"vpsde": pv, "cld": pc, "bdm": pb},
+                                batch_size=4, nfe=10)
+       results = engine.serve([
+           SampleRequest(rid=0, seed=0),                   # default: vpsde
+           SampleRequest(rid=1, seed=1, family="cld", nfe=8),
+           SampleRequest(rid=2, seed=2, family="bdm", nfe=6),
+       ])
+
+   Every request is bitwise identical to a solo single-family engine run
+   (tests/test_serve_engine.py).
+
 Both engines also take `mesh=` (repro.launch.mesh.make_local_mesh) to
 shard the slot batch over a data-parallel device mesh with bitwise-
 identical results — see docs/serving.md and tests/test_serve_mesh.py.
@@ -111,10 +131,39 @@ def serve_samples() -> None:
           f"compile={engine.compile_stats()}")
 
 
+def serve_families() -> None:
+    print("== diffusion engine: VPSDE + CLD + BDM multi-family traffic")
+    specs, params = {}, {}
+    for i, (fam, name) in enumerate((("vpsde", "cifar10-ddpm"),
+                                     ("cld", "cifar10-cld"),
+                                     ("bdm", "cifar10-bdm"))):
+        specs[fam] = get_diffusion(name, reduced=True)
+        params[fam] = specs[fam].init(jax.random.PRNGKey(i))
+    engine = DiffusionEngine(specs, params, batch_size=4, nfe=10)
+    requests = [
+        SampleRequest(rid=0, seed=0),                       # default: vpsde
+        SampleRequest(rid=1, seed=1, family="cld", nfe=8),
+        SampleRequest(rid=2, seed=2, family="bdm", nfe=6),
+        SampleRequest(rid=3, seed=3, family="cld", nfe=8, corrector=True),
+        SampleRequest(rid=4, seed=4, family="vpsde", nfe=5),
+    ]
+    results = engine.serve(requests)
+    for rid in sorted(results):
+        cfg = engine.config_of(requests[rid])
+        x = results[rid]
+        print(f"  sample{rid}: family={cfg.family} nfe={cfg.nfe} "
+              f"corrector={cfg.corrector} shape={x.shape} "
+              f"mean={x.mean():+.3f} std={x.std():.3f}")
+    print(f"  {engine.n_rounds} rounds / {engine.n_steps} step dispatches, "
+          f"families {engine.families}, "
+          f"compile={engine.compile_stats()}")
+
+
 def main():
     for arch in ("rwkv6-7b", "gemma3-1b"):
         serve_tokens(arch)
     serve_samples()
+    serve_families()
     return 0
 
 

@@ -24,12 +24,13 @@ loop is branch-free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, NamedTuple, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, NamedTuple, Optional, \
+    Sequence, Tuple, Union
 
 import numpy as np
 import jax.numpy as jnp
 
-from ..sde.base import LinearSDE
+from ..sde.base import LinearSDE, family_name
 from ..sde import solve
 
 
@@ -217,12 +218,18 @@ class SamplerConfig:
                the last (Alg. 1)
     lam        stochasticity level lambda of Eq. 22 (0 = deterministic)
     grid       time-grid kind ('quadratic' | 'uniform', see `time_grid`)
+    family     SDE family to sample from ('vpsde' | 'cld' | 'bdm', the
+               `repro.sde.base.family_name` keys of the engine's resident
+               families).  None means "the engine/cache default family";
+               the name itself is validated where families are known
+               (`CoeffCache.resolve`)
     """
     nfe: int
     q: int = 1
     corrector: bool = False
     lam: float = 0.0
     grid: str = "quadratic"
+    family: Optional[str] = None
 
     def __post_init__(self):
         if self.nfe < 1:
@@ -277,6 +284,88 @@ class CoeffBank(NamedTuple):
         return (self.psi.shape[0], self.psi.shape[1], self.pC.shape[2])
 
 
+# ---------------------------------------------------------------------------
+# Canonical packed coefficients: one bank for EVERY SDE family.
+# ---------------------------------------------------------------------------
+def pack_coeff(ops, coeff, data_shape: Tuple[int, ...],
+               k_max: int) -> np.ndarray:
+    """Embed a family coefficient into the dense canonical (k_max, k_max, D)
+    form that acts on the packed (B, k, D) slot state
+    (`repro.kernels.ei_update.ops.apply_packed`):
+
+      scalar   c        ->  c at [0, 0, :]            (c * u, k = 1)
+      block    M (k,k)  ->  M broadcast over D        (M ⊗ I_D, k rows)
+      freqdiag d        ->  diag over D at [0, 0, :]  (elementwise in the
+                            DCT basis the BDM state is resident in)
+
+    Entries outside the family's own k x k block are zero; the padded state
+    rows they would act on are identically zero too, so the embedding is
+    exact (same arithmetic as the family-native `sde.apply`).
+    """
+    D = int(np.prod(data_shape))
+    out = np.zeros((k_max, k_max, D), np.float64)
+    coeff = np.asarray(coeff, np.float64)
+    if ops.family == "scalar":
+        out[0, 0, :] = float(coeff)
+    elif ops.family == "block":
+        k = coeff.shape[-1]
+        out[:k, :k, :] = coeff[..., None]
+    elif ops.family == "freqdiag":
+        out[0, 0, :] = np.broadcast_to(coeff, data_shape).reshape(-1)
+    else:
+        raise ValueError(f"unknown coeff family {ops.family!r}")
+    return out
+
+
+class PackedBank(NamedTuple):
+    """Multi-family `CoeffBank`: same per-config rows, but every coefficient
+    is embedded into the canonical packed form (`pack_coeff`), so one bank
+    stacks VPSDE, CLD and BDM configs side by side and the serve step's
+    linear algebra is family-agnostic (`apply_packed` on (B, k, D) states).
+
+    The embedding is deliberately *dense* over D: scalar and block
+    coefficients are tiled D-fold, which keeps the step a single einsum and
+    every family bit-exact, at K*K*D floats per coefficient row.  That adds
+    up: at full CIFAR scale (D=3072, K=2) with large warmed buckets (Cb=8,
+    Nb=64, Qb=4) the bank is hundreds of MB device-resident, and each
+    first-seen config registration rebuilds it host-side in float64
+    (`_build_packed_bank`) on the admission path — acceptable for a
+    curated config menu registered up front (`ServeLoop._prepare`), not
+    for unbounded config churn.  The exact factored form — a (K, K) block
+    factor times a (D,) diagonal factor, applied as two contractions, cut
+    ~D-fold in size — is the known follow-up if bank residency, restack
+    stalls, or gather bandwidth show up in profiles (ROADMAP).
+
+      t_cur/t_nxt (C, Nb)                 as in `CoeffBank`
+      psi/B/P_chol(C, Nb, K, K, D)        K = k_max over resident families
+      pC/cC       (C, Nb, Qb, K, K, D)
+      n_steps     (C,) int32
+      stochastic  (C,) bool
+      corrector   (C,) bool
+      fam         (C,) int32              family index of each config row
+                                          (the engine's per-slot `state.fam`
+                                          gathers this at admission)
+    """
+    t_cur: jnp.ndarray
+    t_nxt: jnp.ndarray
+    psi: jnp.ndarray
+    pC: jnp.ndarray
+    cC: jnp.ndarray
+    B: jnp.ndarray
+    P_chol: jnp.ndarray
+    n_steps: jnp.ndarray
+    stochastic: jnp.ndarray
+    corrector: jnp.ndarray
+    fam: jnp.ndarray
+
+    @property
+    def shape_key(self) -> Tuple[int, int, int, int, int]:
+        """(Cb, Nb, Qb, K, D) — banks with equal shape_key share compiled
+        step programs."""
+        return (self.psi.shape[0], self.psi.shape[1], self.pC.shape[2],
+                self.psi.shape[2], self.psi.shape[4])
+
+
 class CoeffCache:
     """Host-side Stage-I coefficient cache keyed by
     (sde family, grid kind, NFE, q, corrector, lambda).
@@ -290,6 +379,14 @@ class CoeffCache:
     cached configs — heterogeneous NFE/q/corrector/lambda traffic in one
     batch (repro.serve.DiffusionEngine).
 
+    Multi-family mode: construct with a mapping of `family_name -> LinearSDE`
+    (and optionally per-family `kt`) and a shared `data_shape`, and the
+    cache stacks configs from *different SDE families* into one
+    `packed_bank` — every coefficient embedded into the canonical
+    (k_max, k_max, D) form of `pack_coeff`, with `bank.fam` recording each
+    config row's family.  The family-native `bank` stays available in
+    single-family mode (the historical surface).
+
     Growth model, deliberately simple: slots are never evicted (stability
     of `index_of` is what lets in-flight requests keep their index), and
     registering a new config re-stacks the whole bank host-side.  That is
@@ -300,27 +397,79 @@ class CoeffCache:
     bucket overflow recompiles the step.
     """
 
-    def __init__(self, sde: LinearSDE, kt: str = "R", quad_points: int = 48,
-                 rk_substeps: int = 32):
-        self.sde = sde
+    def __init__(self, sdes: Union[LinearSDE, Mapping[str, LinearSDE]],
+                 kt: Union[str, Mapping[str, str]] = "R",
+                 quad_points: int = 48, rk_substeps: int = 32,
+                 data_shape: Optional[Tuple[int, ...]] = None):
+        if isinstance(sdes, LinearSDE):
+            sdes = {family_name(sdes): sdes}
+        self.sdes: Dict[str, LinearSDE] = dict(sdes)
+        if not self.sdes:
+            raise ValueError("CoeffCache needs at least one SDE family")
+        if not isinstance(kt, str):
+            kt = dict(kt)
+            missing = set(self.sdes) - set(kt)
+            if missing:
+                raise ValueError(f"kt mapping missing families {sorted(missing)}")
         self.kt = kt
+        self.data_shape = None if data_shape is None else tuple(data_shape)
         self.quad_points = quad_points
         self.rk_substeps = rk_substeps
         self._coeffs: Dict[tuple, SamplerCoeffs] = {}
         self._configs: List[SamplerConfig] = []
         self._slots: Dict[tuple, int] = {}
         self._bank: CoeffBank | None = None
+        self._packed: PackedBank | None = None
 
+    # ---- family plumbing ----------------------------------------------------
+    @property
+    def families(self) -> List[str]:
+        """Resident family names, in registration order (index = the
+        engine-visible family id, `PackedBank.fam`)."""
+        return list(self.sdes)
+
+    @property
+    def default_family(self) -> str:
+        return next(iter(self.sdes))
+
+    @property
+    def sde(self) -> LinearSDE:
+        """Single-family convenience accessor (the historical surface)."""
+        return next(iter(self.sdes.values()))
+
+    @property
+    def k_max(self) -> int:
+        """Canonical packed channel width over the resident families."""
+        return max(s.packed_k for s in self.sdes.values())
+
+    def fam_index(self, name: str) -> int:
+        return self.families.index(name)
+
+    def resolve(self, cfg: SamplerConfig) -> str:
+        """Concrete family name of `cfg` (validates against the residents)."""
+        name = cfg.family if cfg.family is not None else self.default_family
+        if name not in self.sdes:
+            raise ValueError(f"unknown SDE family {name!r}; resident "
+                             f"families: {self.families}")
+        return name
+
+    def sde_of(self, cfg: SamplerConfig) -> LinearSDE:
+        return self.sdes[self.resolve(cfg)]
+
+    def _kt_of(self, name: str) -> str:
+        return self.kt if isinstance(self.kt, str) else self.kt[name]
+
+    # ---- Stage-I memoization ------------------------------------------------
     def key_of(self, cfg: SamplerConfig) -> tuple:
         """Full config key (the bank-slot identity)."""
-        return (type(self.sde).__name__, cfg.grid, cfg.nfe, cfg.q,
+        return (self.resolve(cfg), cfg.grid, cfg.nfe, cfg.q,
                 cfg.corrector, cfg.lam)
 
     def _coeff_key(self, cfg: SamplerConfig) -> tuple:
         """Stage-I memo key: `build_sampler_coeffs` always computes both
         predictor and corrector rows, so the corrector toggle shares one
         coefficient computation."""
-        return (type(self.sde).__name__, cfg.grid, cfg.nfe, cfg.q, cfg.lam)
+        return (self.resolve(cfg), cfg.grid, cfg.nfe, cfg.q, cfg.lam)
 
     def __len__(self) -> int:
         return len(self._configs)
@@ -333,36 +482,62 @@ class CoeffCache:
         """Stage-I coefficients for `cfg`; computed once per key."""
         key = self._coeff_key(cfg)
         if key not in self._coeffs:
-            ts = time_grid(self.sde, cfg.nfe, cfg.grid)
+            name = self.resolve(cfg)
+            sde = self.sdes[name]
+            ts = time_grid(sde, cfg.nfe, cfg.grid)
             self._coeffs[key] = build_sampler_coeffs(
-                self.sde, ts, q=cfg.q, lam=cfg.lam, kt=self.kt,
+                sde, ts, q=cfg.q, lam=cfg.lam, kt=self._kt_of(name),
                 quad_points=self.quad_points, rk_substeps=self.rk_substeps)
         return self._coeffs[key]
 
     def index_of(self, cfg: SamplerConfig) -> int:
-        """Config slot of `cfg` in `bank` (registers the config if new)."""
+        """Config slot of `cfg` in the bank (registers the config if new).
+        Configs that differ only in an unresolved-vs-explicit default
+        family share one slot (the key stores the resolved name)."""
         key = self.key_of(cfg)
         if key not in self._slots:
             self.get(cfg)                       # build coefficients eagerly
             self._slots[key] = len(self._configs)
             self._configs.append(cfg)
-            self._bank = None                   # bank is stale
+            self._bank = None                   # banks are stale
+            self._packed = None
         return self._slots[key]
 
+    # ---- stacked banks ------------------------------------------------------
     @property
     def bank(self) -> CoeffBank:
+        if len(self.sdes) > 1:
+            raise ValueError(
+                "CoeffCache.bank is single-family (family-native coeff "
+                "shapes); a multi-family cache stacks into `packed_bank`")
         if self._bank is None:
             self._bank = self._build_bank()
         return self._bank
 
-    def _build_bank(self) -> CoeffBank:
+    @property
+    def packed_bank(self) -> PackedBank:
+        """The canonical multi-family bank (requires `data_shape`)."""
+        if self._packed is None:
+            self._packed = self._build_packed_bank()
+        return self._packed
+
+    def _bucket_shapes(self) -> Tuple[int, int, int]:
         if not self._configs:
-            raise ValueError("CoeffCache.bank: no configs registered "
+            raise ValueError("CoeffCache bank: no configs registered "
                              "(call index_of first)")
-        coeff_shape = np.shape(np.asarray(self.sde.ops.eye()))
         Cb = bucket_size(len(self._configs), C_BUCKET_MIN)
         Nb = bucket_size(max(c.nfe for c in self._configs), N_BUCKET_MIN)
         Qb = bucket_size(max(c.q for c in self._configs), Q_BUCKET_MIN)
+        return Cb, Nb, Qb
+
+    def _bank_rows(self):
+        """Per-config (slot, cfg, coeffs) in registration order."""
+        for c, cfg in enumerate(self._configs):
+            yield c, cfg, self.get(cfg)
+
+    def _build_bank(self) -> CoeffBank:
+        coeff_shape = np.shape(np.asarray(self.sde.ops.eye()))
+        Cb, Nb, Qb = self._bucket_shapes()
 
         t_cur = np.zeros((Cb, Nb), np.float64)
         t_nxt = np.zeros((Cb, Nb), np.float64)
@@ -375,8 +550,7 @@ class CoeffCache:
         stoch = np.zeros((Cb,), bool)
         corr = np.zeros((Cb,), bool)
 
-        for c, cfg in enumerate(self._configs):
-            co = self.get(cfg)
+        for c, cfg, co in self._bank_rows():
             N, q = cfg.nfe, cfg.q
             ts = np.asarray(co.ts)
             # step k advances i = N - k -> i - 1
@@ -399,6 +573,57 @@ class CoeffCache:
             cC=f32(cC), B=f32(B), P_chol=f32(P_chol),
             n_steps=jnp.asarray(n_steps),
             stochastic=jnp.asarray(stoch), corrector=jnp.asarray(corr))
+
+    def _build_packed_bank(self) -> PackedBank:
+        if self.data_shape is None:
+            raise ValueError("CoeffCache.packed_bank needs data_shape= "
+                             "(the shared per-sample data shape)")
+        Cb, Nb, Qb = self._bucket_shapes()
+        K = self.k_max
+        D = int(np.prod(self.data_shape))
+        kk = (K, K, D)
+
+        t_cur = np.zeros((Cb, Nb), np.float64)
+        t_nxt = np.zeros((Cb, Nb), np.float64)
+        psi = np.zeros((Cb, Nb) + kk, np.float64)
+        pC = np.zeros((Cb, Nb, Qb) + kk, np.float64)
+        cC = np.zeros((Cb, Nb, Qb) + kk, np.float64)
+        B = np.zeros((Cb, Nb) + kk, np.float64)
+        P_chol = np.zeros((Cb, Nb) + kk, np.float64)
+        n_steps = np.ones((Cb,), np.int32)
+        stoch = np.zeros((Cb,), bool)
+        corr = np.zeros((Cb,), bool)
+        fam = np.zeros((Cb,), np.int32)
+
+        for c, cfg, co in self._bank_rows():
+            name = self.resolve(cfg)
+            ops = self.sdes[name].ops
+            pk = lambda x: pack_coeff(ops, x, self.data_shape, K)
+            N, q = cfg.nfe, cfg.q
+            ts = np.asarray(co.ts)
+            t_cur[c, :N] = ts[N - np.arange(N)]
+            t_cur[c, N:] = ts[1]
+            t_nxt[c, :N] = ts[N - 1 - np.arange(N)]
+            t_nxt[c, N:] = ts[0]
+            for k in range(N):
+                psi[c, k] = pk(np.asarray(co.psi)[k])
+                B[c, k] = pk(np.asarray(co.B)[k])
+                P_chol[c, k] = pk(np.asarray(co.P_chol)[k])
+                for j in range(q):
+                    pC[c, k, j] = pk(np.asarray(co.pC)[k, j])
+                    cC[c, k, j] = pk(np.asarray(co.cC)[k, j])
+            n_steps[c] = N
+            stoch[c] = cfg.lam > 0.0
+            corr[c] = cfg.corrector
+            fam[c] = self.fam_index(name)
+
+        f32 = lambda x: jnp.asarray(x, jnp.float32)
+        return PackedBank(
+            t_cur=f32(t_cur), t_nxt=f32(t_nxt), psi=f32(psi), pC=f32(pC),
+            cC=f32(cC), B=f32(B), P_chol=f32(P_chol),
+            n_steps=jnp.asarray(n_steps),
+            stochastic=jnp.asarray(stoch), corrector=jnp.asarray(corr),
+            fam=jnp.asarray(fam))
 
 
 def ddim_closed_form_check(sde, ts) -> np.ndarray:

@@ -1,13 +1,27 @@
-"""Dispatch wrapper for the fused EI-update kernel.
+"""Dispatch wrapper for the fused EI-update kernel + the canonical packing
+layer.
 
-`ei_update(u, eps_hist, psi, C)` with state (B, k, D).  The SDE samplers
-flatten their state into this canonical layout via `pack_state`/`unpack_state`
-(VPSDE: k=1; CLD: k=2 channel axis).  BDM routes through the dct2 kernel
-instead (frequency-diagonal coefficients).
+`ei_update(u, eps_hist, psi, C)` with state (B, k, D).  The SDE samplers —
+and, since the multi-family serving refactor, the `DiffusionEngine`'s whole
+slot pool — flatten their state into this canonical layout via
+`pack_state`/`unpack_state` (VPSDE: k=1; CLD: k=2 channel axis; BDM routes
+its DCT-frequency state through the dct2 path and lands here with k=1).
+
+The packing layer is family-generic:
+
+  * `pack_state(u, k, k_pad=None)` flattens (B, [k,] *data) to (B, k, D)
+    and optionally zero-pads the channel axis to `k_pad` rows, so one slot
+    pool can host families of different structural width (k_max = max over
+    resident families; padding rows stay identically zero).
+  * `unpack_state(z, shape, k=None)` inverts it, dropping padding rows.
+  * `apply_packed(coeff, z)` applies a per-example canonical coefficient
+    (B, k, k, D) — the dense block-diagonal-per-entry form every family's
+    structured coefficient embeds into (scalar: c I, CLD block: M ⊗ 1_D,
+    BDM freq-diag: diag over D) — to a packed state (B, k, D).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 import jax
@@ -19,17 +33,46 @@ from .kernel import ei_update as ei_update_pallas
 Array = jax.Array
 
 
-def pack_state(u: Array, k: int) -> Tuple[Array, Tuple[int, ...]]:
-    """(B, [k,] *data) -> (B, k, D) plus the original shape for unpack."""
+def pad_channels(z: Array, k_pad: int) -> Array:
+    """Zero-pad a packed (B, k, D) state's channel axis to k_pad rows.
+    The single shared implementation of canonical-layout padding (used by
+    `pack_state`, the serve step's eps/noise packing, and the engine's
+    prior admission)."""
+    k = z.shape[1]
+    if k_pad < k:
+        raise ValueError(f"k_pad {k_pad} < k {k}")
+    if k_pad == k:
+        return z
+    return jnp.concatenate(
+        [z, jnp.zeros((z.shape[0], k_pad - k) + z.shape[2:], z.dtype)],
+        axis=1)
+
+
+def pack_state(u: Array, k: int, k_pad: Optional[int] = None,
+               ) -> Tuple[Array, Tuple[int, ...]]:
+    """(B, [k,] *data) -> (B, k_pad or k, D) plus the original shape for
+    unpack.  Padding rows (k..k_pad) are zeros."""
     shape = u.shape
     B = shape[0]
-    if k == 1:
-        return u.reshape(B, 1, -1), shape
-    return u.reshape(B, k, -1), shape
+    z = u.reshape(B, k, -1)
+    if k_pad is not None:
+        z = pad_channels(z, k_pad)
+    return z, shape
 
 
-def unpack_state(u: Array, shape: Tuple[int, ...]) -> Array:
+def unpack_state(u: Array, shape: Tuple[int, ...],
+                 k: Optional[int] = None) -> Array:
+    """Invert `pack_state`: drop padding rows (when the packed `u` is wider
+    than the original k rows) and restore `shape`."""
+    if k is not None and u.shape[1] > k:
+        u = u[:, :k]
     return u.reshape(shape)
+
+
+def apply_packed(coeff: Array, z: Array) -> Array:
+    """Per-example canonical coefficient application:
+    coeff (B, k, k, D) x z (B, k, D) -> (B, k, D)."""
+    return jnp.einsum("bijd,bjd->bid", coeff, z)
 
 
 def ei_update(u: Array, eps_hist: Array, psi: Array, C: Array,

@@ -21,8 +21,15 @@ Two workloads share the same scheduler/slot machinery:
             --requests 9 --batch 3 \\
             --mix nfe=10 nfe=50,q=2,corrector nfe=20,lam=0.5
 
-    One engine serves the whole mix from one compiled step program
-    (`compile_stats` is printed so you can see it).
+    One engine serves the whole mix from one warmed set of compiled step
+    programs (`compile_stats` is printed so you can see it).  Passing a
+    comma-separated list to --diffusion builds a *multi-family* engine
+    (first entry = default family) and --mix specs may then pick their
+    SDE family per request:
+
+        python -m repro.launch.serve --reduced --requests 9 --batch 3 \\
+            --diffusion cifar10-ddpm,cifar10-cld,cifar10-bdm \\
+            --mix family=vpsde,nfe=10 family=cld,nfe=8 family=bdm,nfe=8
 
 Both workloads take `--mesh` to shard the engine over a (data, model)
 device mesh (slot batch and caches over `data`, params via the repo's
@@ -52,7 +59,8 @@ from .mesh import make_serve_mesh
 
 
 def parse_sampler_spec(spec: str) -> dict:
-    """Parse one --mix item: 'nfe=50,q=2,corrector,lam=0.5,grid=uniform'.
+    """Parse one --mix item:
+    'family=cld,nfe=50,q=2,corrector,lam=0.5,grid=uniform'.
 
     Bare flags ('corrector') mean True; 'lambda' is accepted for 'lam'.
     Returns a kwargs dict for `SampleRequest`; `main()` validates the
@@ -66,7 +74,7 @@ def parse_sampler_spec(spec: str) -> dict:
         raise ValueError(v)
 
     convert = {"nfe": int, "q": int, "lam": float, "grid": str.strip,
-               "corrector": parse_bool}
+               "corrector": parse_bool, "family": str.strip}
     out: dict = {}
     for part in spec.split(","):
         part = part.strip()
@@ -130,10 +138,29 @@ def _serve_tokens(args) -> int:
 
 
 def _serve_samples(args) -> int:
-    spec = get_diffusion(args.diffusion, reduced=args.reduced)
-    params = spec.init(jax.random.PRNGKey(args.seed))
+    from ..sde.base import family_name
+
+    names = [n.strip() for n in args.diffusion.split(",") if n.strip()]
+    specs = {}
+    for n in names:
+        spec = get_diffusion(n, reduced=args.reduced)
+        fam = family_name(spec.sde)
+        if fam in specs:
+            raise SystemExit(f"--diffusion lists family {fam!r} twice")
+        specs[fam] = spec
     default, mix = args.default_config, args.mix_parsed
-    engine = DiffusionEngine(spec, params, batch_size=args.batch,
+    # reject --mix family typos while startup is still cheap (before any
+    # score-net init / device work)
+    for kw in mix:
+        if kw.get("family") not in (None, *specs):
+            raise SystemExit(
+                f"--mix family {kw['family']!r} is not served; "
+                f"--diffusion provides {list(specs)}")
+    params = {fam: spec.init(jax.random.PRNGKey(args.seed))
+              for fam, spec in specs.items()}
+    if len(specs) == 1:
+        specs, params = next(iter(specs.values())), next(iter(params.values()))
+    engine = DiffusionEngine(specs, params, batch_size=args.batch,
                              default_config=default,
                              mesh=make_serve_mesh(args.mesh),
                              sync_every=args.sync_every)
@@ -146,16 +173,18 @@ def _serve_samples(args) -> int:
     dt = time.time() - t0
     sps = engine.n_samples_out / max(dt, 1e-9)
     kinds = ("mixed traffic, "
-             f"{len(engine.cache)} sampler configs") if mix else \
+             f"{len(engine.cache)} sampler configs, "
+             f"families {engine.families}") if mix else \
         f"homogeneous @ NFE {default.nfe}"
     print(f"sampled {len(results)} requests in {dt:.1f}s "
-          f"({engine.n_steps} gDDIM rounds, {kinds}, "
+          f"({engine.n_rounds} gDDIM rounds / {engine.n_steps} step "
+          f"dispatches, {kinds}, "
           f"batch {args.batch}, {_mesh_banner(engine)}, "
           f"{sps:.2f} samples/s)  "
           f"compile={engine.compile_stats()}")
     if mix:
         for cfg in engine.cache.configs:
-            print(f"  config: nfe={cfg.nfe} q={cfg.q} "
+            print(f"  config: family={cfg.family} nfe={cfg.nfe} q={cfg.q} "
                   f"corrector={cfg.corrector} lam={cfg.lam} grid={cfg.grid}")
     return 0
 
@@ -163,7 +192,11 @@ def _serve_samples(args) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
-    ap.add_argument("--diffusion", choices=list(DIFFUSION_MODULES))
+    ap.add_argument("--diffusion", metavar="NAME[,NAME...]",
+                    help="diffusion config(s) to serve, from "
+                         f"{list(DIFFUSION_MODULES)}; a comma-separated "
+                         "list builds one multi-family engine (first entry "
+                         "= default family)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
@@ -183,8 +216,9 @@ def main(argv=None) -> int:
     ap.add_argument("--mix", nargs="+", metavar="SPEC",
                     help="per-request sampler configs to cycle through, "
                          "e.g. --mix nfe=10 nfe=50,q=2,corrector "
-                         "nfe=20,lam=0.5 (keys not named fall back to the "
-                         "defaults above)")
+                         "nfe=20,lam=0.5 family=cld,nfe=8 (keys not named "
+                         "fall back to the defaults above; family= needs a "
+                         "multi-family --diffusion list)")
     ap.add_argument("--mesh", default=None, metavar="SPEC",
                     help="shard the engine over a (data, model) device mesh:"
                          " 'data=2', 'data=2,model=1', '2x1', or 'auto' "
@@ -202,6 +236,10 @@ def main(argv=None) -> int:
     if args.mix and args.diffusion is None:
         ap.error("--mix only applies to --diffusion serving")
     if args.diffusion:
+        for n in args.diffusion.split(","):
+            if n.strip() not in DIFFUSION_MODULES:
+                ap.error(f"unknown diffusion config {n.strip()!r}; known: "
+                         f"{list(DIFFUSION_MODULES)}")
         # validate the full merged configs (defaults + every --mix spec)
         # here, before any model init / device work
         try:

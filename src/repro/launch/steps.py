@@ -24,18 +24,21 @@
                                    body — what a sampling service executes
                                    NFE times); single-config mode closes
                                    over one Stage-I bank (scalar or (B,)
-                                   step index k), bank mode takes a stacked
-                                   CoeffBank argument plus per-slot
+                                   step index k), bank mode operates on the
+                                   canonical packed (B, K, D) slot state
+                                   and takes a stacked multi-family
+                                   PackedBank argument plus per-slot
                                    (k, cfg) indices so one compiled program
-                                   serves mixed NFE/q/corrector/lambda
-                                   traffic
-  make_diffusion_round_step(spec)  bank-mode gDDIM step over a
-                                   DiffusionState pytree: the update is
-                                   masked by the active mask (retired rows
-                                   freeze until the host fetches them) and
-                                   k advances on device.  The engine jits
-                                   it with the state donated, so u/hist
-                                   update in place
+                                   per family serves mixed family/NFE/q/
+                                   corrector/lambda traffic
+  make_diffusion_round_step(spec,  bank-mode gDDIM step over a
+                            fam)   DiffusionState pytree: the update is
+                                   masked by active & (fam == this family)
+                                   (retired and foreign-family rows freeze)
+                                   and k advances on device.  The engine
+                                   jits one variant per (family, corrector)
+                                   cost class with the state donated, so
+                                   u/hist update in place
 
 `shardings_for(...)` produces (params, opt, inputs) NamedShardings for any
 (arch x shape x mesh) cell from the rules in distributed/sharding.py.
@@ -135,14 +138,22 @@ def make_token_round_step(arch: Arch):
     return round_step
 
 
-def make_diffusion_round_step(spec):
+def make_diffusion_round_step(spec, fam_index: int = 0):
     """Bank-mode gDDIM step over a device-resident `DiffusionState`: the
     Eq. 19/22/45 update of `make_diffusion_serve_step` plus the per-slot
     bookkeeping — advance `k`, retire (clear `active`) when a slot reaches
     its config's NFE, and freeze retired rows so the finished sample `u`
     survives until the host fetches it.  The engine jits this with `state`
     donated (`u`/`hist` update in place) and the bank as a non-donated
-    argument (it is reused every round)."""
+    argument (it is reused every round).
+
+    `fam_index` is this variant's family id (a closure constant, so it
+    costs no per-round transfer): the step evaluates *this* spec's score
+    net over the packed batch and commits the update only to active slots
+    whose `state.fam` matches — co-resident slots of other families are
+    left frozen for their own family's variant, which the engine dispatches
+    in the same round.  One compiled variant per (family, corrector) cost
+    class serves any traffic mix."""
     bank_step = make_diffusion_serve_step(spec)
 
     def round_step(params, state, bank, with_corrector=False):
@@ -150,14 +161,15 @@ def make_diffusion_round_step(spec):
         u_next, hist_next = bank_step(
             params, state.u, state.hist, state.k, state.cfg, state.keys,
             bank, with_corrector=with_corrector)
-        act = state.active
-        rmask = lambda x: act.reshape((-1,) + (1,) * (x.ndim - 1))
-        k = jnp.where(act, state.k + 1, state.k)
+        mine = state.active & (state.fam == fam_index)
+        rmask = lambda x: mine.reshape((-1,) + (1,) * (x.ndim - 1))
+        k = jnp.where(mine, state.k + 1, state.k)
         return DiffusionState(
             u=jnp.where(rmask(state.u), u_next, state.u),
             hist=jnp.where(rmask(state.hist), hist_next, state.hist),
-            k=k, cfg=state.cfg, keys=state.keys,
-            active=act & (k < bank.n_steps[state.cfg]))
+            k=k, cfg=state.cfg, fam=state.fam, keys=state.keys,
+            active=jnp.where(mine, k < bank.n_steps[state.cfg],
+                             state.active))
 
     return round_step
 
@@ -190,28 +202,34 @@ def make_diffusion_serve_step(spec, coeffs=None):
       this form), or a (B,) vector of per-slot indices.
 
     * **bank mode** (`coeffs=None`): the heterogeneous-config step used by
-      `repro.serve.DiffusionEngine`.  The stacked `CoeffBank` is an
-      *argument* (not a closure constant), so refreshing the bank with new
-      configs never recompiles as long as its bucketed shapes are stable.
-      Every slot b gathers its own psi/pC/cC/B/P_chol rows by (cfg[b], k[b])
-      and the per-example coefficients go through `sde.apply_batched`:
+      `repro.serve.DiffusionEngine`, over the *canonical packed* slot
+      layout (`kernels/ei_update/ops.py`): `u` (B, K, D) with K = k_max
+      over the engine's resident families (VPSDE/BDM occupy row 0, CLD
+      rows 0-1; BDM rows hold DCT coefficients — the dct2 path), `hist`
+      (B, Qb, K, D).  The stacked `PackedBank` is an *argument* (not a
+      closure constant), so refreshing the bank with new configs never
+      recompiles as long as its bucketed shapes are stable.  Every slot b
+      gathers its own psi/pC/cC/B/P_chol rows by (cfg[b], k[b]); this
+      family's k x k block is statically sliced out and applied via
+      `apply_packed`, so the arithmetic per slot is identical whatever
+      K the co-resident families force:
 
           u, hist = step(params, u, hist, k, cfg, keys, bank,
                          with_corrector=...)
 
-      with `u` (B, *state) the slot states, `hist` (B, Qb, *state) the
-      per-slot eps history (hist[:, j] ~ eps(t_{i+j}); zeroed at admission
-      — the Alg. 1 warm start lives in the bank's zero-padded low-order
-      pC rows), `k`/`cfg` (B,) int32, and `keys` (B, 2) uint32 per-slot
+      with `k`/`cfg` (B,) int32, and `keys` (B, 2) uint32 per-slot
       PRNG keys for the Eq. 22 stochastic branch (noise is keyed by
-      fold_in(key, k), so a slot's trajectory is a pure function of its
-      request seed).  `with_corrector` must be static under jit: the False
-      variant is the 1-eval predictor program, the True variant adds the
-      Eq. 45 corrector re-evaluation and applies it only to slots whose
-      config asks for it (and never on a slot's final step, matching
-      Alg. 1's NFE accounting).  Deterministic/stochastic configs mix
-      freely per-slot; inactive slots may carry any k — indices are
-      clipped and their rows ignored by the engine."""
+      fold_in(key, k) and drawn in state space, so a slot's trajectory is
+      a pure function of its request seed).  `with_corrector` must be
+      static under jit: the False variant is the 1-eval predictor program,
+      the True variant adds the Eq. 45 corrector re-evaluation and applies
+      it only to slots whose config asks for it (and never on a slot's
+      final step, matching Alg. 1's NFE accounting).  Deterministic /
+      stochastic configs mix freely per-slot; slots of *other* families
+      ride along (their rows compute garbage under this family's model and
+      coefficients) and are discarded by the round step's family mask.
+      Inactive slots may carry any k — indices are clipped and their rows
+      ignored by the engine."""
     if coeffs is not None:
         N = coeffs.psi.shape[0]
 
@@ -231,44 +249,64 @@ def make_diffusion_serve_step(spec, coeffs=None):
 
         return serve_step
 
+    from ..kernels.ei_update.ops import apply_packed, pad_channels
+
     sde = spec.sde
+    kf = sde.packed_k                       # this family's channel rows
+    data_shape = tuple(spec.data_shape)
+    state_shape = sde.state_shape(data_shape)
 
     def bank_step(params, u, hist, k, cfg, keys, bank, with_corrector=False):
+        K = u.shape[1]
         kc = jnp.clip(jnp.asarray(k), 0, bank.n_steps[cfg] - 1)
         t = bank.t_cur[cfg, kc]
-        eps = spec.eps_model(params, u, t)
-        hist = jnp.concatenate([eps[:, None], hist[:, :-1]], axis=1)
+        # this family's slice of the packed state / gathered coefficients:
+        # static k x k sub-block, so the per-slot arithmetic (and its
+        # bitwise result) does not depend on the co-resident K
+        ub = u[:, :kf]                                        # (B, kf, D)
+        gat = lambda leaf: leaf[cfg, kc][:, :kf, :kf, :]      # (B,kf,kf,D)
+        gatq = lambda leaf, j: leaf[cfg, kc, j][:, :kf, :kf, :]
+        pad = lambda z: pad_channels(z, K)
+
+        eps = spec.eps_model(params, sde.decanonicalize(ub, data_shape), t)
+        eps_c = sde.canonicalize(eps)                         # (B, kf, D)
+        hist = jnp.concatenate([pad(eps_c)[:, None], hist[:, :-1]], axis=1)
         Qb = hist.shape[1]
 
-        u_lin = sde.apply_batched(bank.psi[cfg, kc], u)
+        u_lin = apply_packed(gat(bank.psi), ub)
         # predictor (Eq. 19a): slots with q_c < Qb hit zero-padded pC rows,
         # so the extra terms vanish identically
         u_pred = u_lin
         for j in range(Qb):
-            u_pred = u_pred + sde.apply_batched(bank.pC[cfg, kc, j],
-                                                hist[:, j])
+            u_pred = u_pred + apply_packed(gatq(bank.pC, j),
+                                           hist[:, j, :kf])
         # stochastic branch (Eq. 22/23); for deterministic configs P_chol
         # is zero but the branch is still computed so every traffic mix
         # runs the identical program (bitwise solo == interleaved)
-        state_shape = u.shape[1:]
         noise = jax.vmap(
             lambda key, kk: sde.noise_like(jax.random.fold_in(key, kk),
                                            state_shape, u.dtype))(keys, kc)
-        u_sto = u_lin + sde.apply_batched(bank.B[cfg, kc], eps) \
-            + sde.apply_batched(bank.P_chol[cfg, kc], noise)
-        bmask = lambda m: m.reshape((-1,) + (1,) * (u.ndim - 1))
+        u_sto = u_lin + apply_packed(gat(bank.B), eps_c) \
+            + apply_packed(gat(bank.P_chol), sde.canonicalize(noise))
+        bmask = lambda m: m.reshape((-1, 1, 1))
         u_next = jnp.where(bmask(bank.stochastic[cfg]), u_sto, u_pred)
 
         if with_corrector:
-            eps_n = spec.eps_model(params, u_pred, bank.t_nxt[cfg, kc])
-            u_corr = u_lin + sde.apply_batched(bank.cC[cfg, kc, 0], eps_n)
+            eps_n = spec.eps_model(
+                params, sde.decanonicalize(u_pred, data_shape),
+                bank.t_nxt[cfg, kc])
+            u_corr = u_lin + apply_packed(gatq(bank.cC, 0),
+                                          sde.canonicalize(eps_n))
             for j in range(1, Qb):
-                u_corr = u_corr + sde.apply_batched(bank.cC[cfg, kc, j],
-                                                    hist[:, j - 1])
+                u_corr = u_corr + apply_packed(gatq(bank.cC, j),
+                                               hist[:, j - 1, :kf])
             # Alg. 1: no corrector on the final step (k == N_c - 1)
             use_c = bank.corrector[cfg] & (kc < bank.n_steps[cfg] - 1)
             u_next = jnp.where(bmask(use_c), u_corr, u_next)
-        return u_next, hist
+        # re-attach the padding rows (zero for this family's slots;
+        # co-resident families' live rows pass through frozen — the round
+        # step discards non-matching rows wholesale anyway)
+        return jnp.concatenate([u_next, u[:, kf:]], axis=1), hist
 
     return bank_step
 

@@ -185,6 +185,13 @@ class FreqDiagOps(CoeffOps):
         return np.zeros(self.freq_shape)
 
 
+def family_name(sde) -> str:
+    """Canonical short name of an SDE family instance ('vpsde' | 'cld' |
+    'bdm' | ...): the request-surface key of multi-family serving
+    (`SampleRequest.family`, `SamplerConfig.family`)."""
+    return type(sde).__name__.lower()
+
+
 # ---------------------------------------------------------------------------
 # Orthonormal DCT-II helpers (BDM basis).  V^T = DCT, V = IDCT, V^T V = I.
 # ---------------------------------------------------------------------------
@@ -243,6 +250,28 @@ class LinearSDE:
 
     def state_shape(self, data_shape: Tuple[int, ...]) -> Tuple[int, ...]:
         return data_shape
+
+    # ---- canonical packed layout --------------------------------------------
+    # The multi-family serving engine keeps every slot's state in ONE layout,
+    # the (B, k, D) canonical form of kernels/ei_update: k structural channel
+    # rows (VPSDE/BDM 1, CLD 2) by D = prod(data_shape) flattened data
+    # entries, expressed in the family's *linear* basis — the basis in which
+    # the family's coefficients act diagonally/blockwise (pixel space for
+    # VPSDE/CLD, the DCT frequency basis for BDM, which overrides these
+    # hooks to route through the dct2 kernel path).
+
+    @property
+    def packed_k(self) -> int:
+        """Channel rows of the canonical (B, k, D) packed state."""
+        return getattr(self.ops, "k", 1)
+
+    def canonicalize(self, u: Array) -> Array:
+        """(B, *state_shape) -> (B, packed_k, D) in the linear basis."""
+        return u.reshape(u.shape[0], self.packed_k, -1)
+
+    def decanonicalize(self, z: Array, data_shape: Tuple[int, ...]) -> Array:
+        """(B, packed_k, D) -> (B, *state_shape) back in state space."""
+        return z.reshape((z.shape[0],) + self.state_shape(tuple(data_shape)))
 
     # ---- host-side coefficient functions (numpy float64) -------------------
     def F_np(self, t: float):

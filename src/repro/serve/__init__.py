@@ -18,15 +18,18 @@ host only paces the loop.
     placement across mesh shards
   * `Scheduler` (scheduler.py) — FIFO admission with head-of-line grouping
     so prefill waves share one shape (no padding into recurrent state) and
-    sampling waves share a corrector cost class
+    sampling waves share a (family, corrector) cost class
   * `TokenEngine` — continuous-batching greedy decode over any Arch family
     (KV-cache transformers, RWKV/Mamba recurrent state, encoder-decoder
     with cross-attention memory), width-bucketed batched prefill
   * `DiffusionEngine` — the same discipline applied to batched gDDIM
     sampling: slots are samples, the per-slot position is the sampler step
-    index k, and every request carries its own sampler config (NFE /
+    index k, and every request carries its own sampler config (SDE family
+    — VPSDE, CLD and BDM co-resident in one packed slot pool — NFE /
     multistep order q / corrector / stochasticity lambda), fed by the
     host-side Stage-I coefficient cache (`repro.core.coeffs.CoeffCache`)
+    whose multi-family `PackedBank` stacks every family's coefficients in
+    the canonical (k, D) layout of `repro.kernels.ei_update`
 
 Both engines accept `mesh=` (see `repro.launch.mesh`) and then shard the
 slot batch over the mesh's data axes via the serve rules in

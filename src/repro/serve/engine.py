@@ -15,9 +15,12 @@ jitted round step (state.py, `make_token_round_step` /
     `state.pos`, appends to the per-slot output ring, and retires on
     eos/budget — all on device.
   * `DiffusionEngine` — one gDDIM update for every active slot, each at its
-    own step index k *and* its own sampler config (NFE, multistep order q,
-    corrector, stochasticity lambda); per-slot Psi/pC/cC/B/P_chol rows are
-    gathered from a stacked `CoeffBank` by (state.cfg[b], state.k[b]).
+    own step index k *and* its own sampler config (SDE family, NFE,
+    multistep order q, corrector, stochasticity lambda); per-slot
+    Psi/pC/cC/B/P_chol rows are gathered from a stacked multi-family
+    `PackedBank` by (state.cfg[b], state.k[b]), slots live in the canonical
+    packed (K, D) layout shared by every family, and a round dispatches one
+    compiled variant per (family, corrector) class present in the batch.
 
 Steady-state data flow: the round step consumes and returns the EngineState
 (donated, so u/hist/caches update in place with no per-step copy) and the
@@ -49,6 +52,7 @@ identical whether it runs alone or interleaved with arbitrary neighbours.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 from typing import Any, Dict, List, Optional
 
@@ -59,6 +63,7 @@ import jax.numpy as jnp
 from ..launch import steps as steps_lib
 from ..models.registry import Arch
 from ..core import CoeffCache, SamplerConfig
+from ..sde.base import family_name
 from ..distributed import sharding as shd
 from .loop import ServeLoop, bucket_pow2
 from .scheduler import Request, SampleRequest, Scheduler
@@ -133,15 +138,16 @@ def _make_token_admit(out_shardings=None):
 
 def _make_diffusion_admit(out_shardings=None):
     """jitted admission scatter into a DiffusionState: one slot row —
-    prior sample, zeroed eps history, k=0, config index, PRNG key.  The
-    state is donated."""
+    packed prior sample, zeroed eps history, k=0, config index, family id,
+    PRNG key.  The state is donated."""
 
-    def admit(state, u_row, key_row, i, ci):
+    def admit(state, u_row, key_row, i, ci, fi):
         return DiffusionState(
             u=state.u.at[i].set(u_row[0]),
             hist=state.hist.at[i].set(0.0),
             k=state.k.at[i].set(0),
             cfg=state.cfg.at[i].set(ci),
+            fam=state.fam.at[i].set(fi),
             keys=state.keys.at[i].set(key_row),
             active=state.active.at[i].set(True))
 
@@ -350,12 +356,12 @@ class DiffusionEngine(ServeLoop):
     """Continuous-batching gDDIM sampling over a *heterogeneous* sampler
     family: slots are samples, the per-slot position is the sampler step
     index k, and every slot additionally carries its own sampler config —
-    NFE budget, multistep order q, Eq. 45 corrector toggle, and Eq. 22
-    stochasticity lambda.  One trained score network, one compiled step,
-    many scenarios: a 10-NFE preview batches with a 50-NFE
-    predictor-corrector render.
+    SDE family, NFE budget, multistep order q, Eq. 45 corrector toggle,
+    and Eq. 22 stochasticity lambda.  One resident engine, a handful of
+    compiled step variants, many scenarios: a 10-NFE VPSDE preview batches
+    with a 50-NFE CLD predictor-corrector render and a BDM sample.
 
-    Usage:
+    Usage (single family — the historical surface):
         engine = DiffusionEngine(spec, params, batch_size=16, nfe=50)
         results = engine.serve([
             SampleRequest(rid=0, seed=0),                    # engine default
@@ -365,22 +371,48 @@ class DiffusionEngine(ServeLoop):
         ])
         # results[rid] -> np.ndarray sample in data space
 
+    Multi-family: pass ordered mappings `{family_name: spec}` /
+    `{family_name: params}` (names per `repro.sde.base.family_name`; the
+    first entry is the default family) and requests pick their family:
+
+        engine = DiffusionEngine({"vpsde": spec_v, "cld": spec_c,
+                                  "bdm": spec_b},
+                                 {"vpsde": pv, "cld": pc, "bdm": pb},
+                                 batch_size=16, nfe=20)
+        engine.serve([SampleRequest(rid=0, seed=0),              # vpsde
+                      SampleRequest(rid=1, seed=1, family="cld"),
+                      SampleRequest(rid=2, seed=2, family="bdm", nfe=10)])
+
+    All families must share one `data_shape`; every slot lives in the
+    canonical packed (K, D) layout of `kernels/ei_update/ops.py`
+    (K = max family channel width: VPSDE/BDM 1, CLD 2; BDM slots hold DCT
+    coefficients and ride the dct2 kernel path), so one slot pool, one
+    mesh, one `DiffusionState` serve the whole mix.  Each family's
+    score-net params are placed on device once at construction and stay
+    resident; a serving round dispatches one jitted round-step variant per
+    (family, corrector) cost class *present among active slots* — each
+    variant evaluates its family's score net over the packed batch and
+    commits updates only to its own slots — so homogeneous traffic pays
+    exactly the single-family cost and a mixed batch pays one model
+    evaluation per resident family per round.
+
     Coefficients come from a host-side `CoeffCache` (Stage-I quadrature run
-    once per distinct config) whose stacked `CoeffBank` is padded to
-    bucketed shapes and passed to the jitted step as an argument — so
-    admitting a config the engine has never seen refreshes the bank
+    once per distinct config) whose stacked multi-family `PackedBank` is
+    padded to bucketed shapes and passed to the jitted step as an argument
+    — so admitting a config the engine has never seen refreshes the bank
     *contents* without recompiling, as long as the new config fits the
-    warmed buckets (`CoeffBank.shape_key`; a bucket overflow costs one
+    warmed buckets (`PackedBank.shape_key`; a bucket overflow costs one
     recompile, then the doubled bucket absorbs further growth).  The
-    corrector needs a second model evaluation per step, so the step has two
-    jit variants (static `with_corrector`); each round dispatches on
-    whether any *active* slot wants the corrector — known host-side from
-    the admission shadow, so dispatch costs no device fetch.  The scheduler
-    keeps admission waves homogeneous in that cost class, which biases runs
-    of same-class traffic into sharing rounds — it cannot prevent classes
-    from co-residing after retire-and-refill, so a predictor-only slot
-    admitted next to a mid-flight corrector render still rides the 2-eval
-    program (correct, just not cheaper) until the render retires.
+    corrector needs a second model evaluation per step, so each family has
+    two jit variants (static `with_corrector`); each round dispatches per
+    family on whether any of *its* active slots wants the corrector —
+    known host-side from the admission shadow, so dispatch costs no device
+    fetch.  The scheduler keeps admission waves homogeneous in the
+    (family, corrector) cost class, which biases runs of same-class
+    traffic into sharing rounds — it cannot prevent classes from
+    co-residing after retire-and-refill, so a VPSDE slot admitted next to
+    a mid-flight CLD render shares its rounds with both models' dispatches
+    (correct, just not cheaper) until the render retires.
 
     A sampler slot's retirement round is *exactly* predictable (a slot
     admitted at k=0 with NFE n retires after n rounds), so the loop's
@@ -389,8 +421,9 @@ class DiffusionEngine(ServeLoop):
 
     Samples are a pure function of (request seed, sampler config): the
     stochastic branch keys its per-step noise by fold_in(seed-derived key,
-    k), so admission order and neighbouring slots cannot change a result
-    (per-row independence, locked in bitwise by tests/test_serve_engine.py).
+    k), so admission order and neighbouring slots — whatever their family —
+    cannot change a result (per-row independence plus static per-family
+    sub-block arithmetic, locked in bitwise by tests/test_serve_engine.py).
     """
 
     _NOISE_SALT = 0x5EED              # separates step noise from the prior
@@ -403,6 +436,21 @@ class DiffusionEngine(ServeLoop):
                  mesh: Any = None,
                  shard_cfg: Optional[shd.ShardCfg] = None,
                  sync_every: int = 8):
+        if isinstance(spec, dict):
+            specs = dict(spec)
+            if not isinstance(params, dict) or set(params) != set(specs):
+                raise ValueError("multi-family DiffusionEngine needs params "
+                                 "as a dict with the same family names as "
+                                 "spec")
+            params = {n: params[n] for n in specs}     # align orders
+        else:
+            name = family_name(spec.sde)
+            specs, params = {name: spec}, {name: params}
+        shapes = {n: tuple(s.data_shape) for n, s in specs.items()}
+        if len(set(shapes.values())) != 1:
+            raise ValueError("all families of one engine must share a "
+                             f"data_shape; got {shapes}")
+
         if default_config is None:
             default_config = SamplerConfig(
                 nfe=20 if nfe is None else nfe,
@@ -414,24 +462,38 @@ class DiffusionEngine(ServeLoop):
         self.nfe = default_config.nfe
         super().__init__(
             batch_size,
-            Scheduler(group_key=lambda r: self.config_of(r).corrector),
+            Scheduler(group_key=lambda r: self._class_of(r)),
             mesh=mesh, shard_cfg=shard_cfg, sync_every=sync_every)
-        self.spec = spec
+        self.specs = specs
+        self.spec = next(iter(specs.values()))         # default family spec
+        self._data_shape = next(iter(shapes.values()))
 
-        self.cache = CoeffCache(spec.sde, kt=spec.kt)
+        self.cache = CoeffCache({n: s.sde for n, s in specs.items()},
+                                kt={n: s.kt for n, s in specs.items()},
+                                data_shape=self._data_shape)
+        if default_config.family is not None \
+                and default_config.family not in specs:
+            raise ValueError(f"default_config.family "
+                             f"{default_config.family!r} is not resident; "
+                             f"families: {list(specs)}")
+        if default_config.family is None:
+            default_config = dataclasses.replace(
+                default_config, family=self.cache.default_family)
+            self.default_config = default_config
         self.cache.index_of(default_config)
         # single-config Stage-I bank of the default config (reference /
         # introspection surface; the serve loop reads the stacked bank)
         self.coeffs = self.cache.get(default_config)
 
-        state_shape = spec.sde.state_shape(tuple(spec.data_shape))
-        self._state_shape = tuple(state_shape)
-        state = diffusion_state_init(batch_size, state_shape,
-                                     self.cache.bank.pC.shape[2])
+        k_max = self.cache.k_max
+        data_dim = int(np.prod(self._data_shape))
+        state = diffusion_state_init(batch_size, k_max, data_dim,
+                                     self.cache.packed_bank.pC.shape[2])
         state_sh = None
         if mesh is not None:
-            params = jax.device_put(
-                params, shd.param_shardings(params, mesh, self.shard_cfg))
+            params = {n: jax.device_put(
+                p, shd.param_shardings(p, mesh, self.shard_cfg))
+                for n, p in params.items()}
             state_sh = shd.serve_state_shardings(state, mesh, self.shard_cfg)
             state = jax.device_put(state, state_sh)
         self.params = params
@@ -442,40 +504,76 @@ class DiffusionEngine(ServeLoop):
         self._bank = None
         self._refresh_bank()
 
-        # the round step is donated on the state: u/hist update in place
-        self._step = _jit_state_update(
-            steps_lib.make_diffusion_round_step(spec), (1,), state_sh,
-            static_argnames=("with_corrector",))
+        # one round-step program per family (x2 with_corrector variants),
+        # donated on the state: u/hist update in place.  The family index
+        # baked into each variant is the closure constant that keeps the
+        # steady-state round transfer-free
+        self._steps = {
+            n: _jit_state_update(
+                steps_lib.make_diffusion_round_step(
+                    s, fam_index=self.cache.fam_index(n)),
+                (1,), state_sh, static_argnames=("with_corrector",))
+            for n, s in specs.items()}
         self._admit_state = _make_diffusion_admit(out_shardings=state_sh)
-        self._prior1 = jax.jit(
-            lambda key: spec.sde.prior_sample(key, 1, tuple(spec.data_shape)))
-        self._project_row = jax.jit(
-            lambda u, i: spec.sde.project_data(u[i][None])[0])
 
-        self.n_steps = 0
+        def make_prior(s):
+            from ..kernels.ei_update.ops import pad_channels
+            sde, dshape = s.sde, tuple(s.data_shape)
+            kf = sde.packed_k
+
+            def prior(key):                       # (1, K, D) packed row
+                u = sde.canonicalize(sde.prior_sample(key, 1, dshape))
+                return pad_channels(u, k_max)
+
+            def project(u, i):                    # packed row -> data space
+                return sde.project_data(
+                    sde.decanonicalize(u[i][None, :kf], dshape))[0]
+
+            return jax.jit(prior), jax.jit(project)
+
+        self._prior1, self._project_row = {}, {}
+        for n, s in specs.items():
+            self._prior1[n], self._project_row[n] = make_prior(s)
+
+        self.n_steps = 0                # step-program dispatches
+        self.n_rounds = 0               # serving rounds (>= 1 dispatch each)
         self.n_samples_out = 0
 
+    @property
+    def families(self) -> List[str]:
+        return list(self.specs)
+
     def compile_stats(self) -> Dict[str, int]:
-        # step counts both jit variants (predictor-only / with-corrector);
-        # after warmup it stays put across any traffic mix whose configs
-        # fit the warmed coefficient buckets
-        return {"step": _cache_size(self._step),
-                "prior": _cache_size(self._prior1)}
+        # step counts every (family, corrector) jit variant; after warmup
+        # it stays put across any traffic mix whose configs fit the warmed
+        # coefficient buckets
+        return {"step": sum(_cache_size(s) for s in self._steps.values()),
+                "prior": sum(_cache_size(p) for p in self._prior1.values())}
 
     def config_of(self, req: SampleRequest) -> SamplerConfig:
         d = self.default_config
         pick = lambda v, dv: dv if v is None else v
+        fam = pick(req.family, pick(d.family, self.cache.default_family))
+        if fam not in self.specs:
+            raise ValueError(f"unknown SDE family {fam!r}; resident "
+                             f"families: {list(self.specs)}")
         return SamplerConfig(
             nfe=pick(req.nfe, d.nfe), q=pick(req.q, d.q),
             corrector=pick(req.corrector, d.corrector),
-            lam=pick(req.lam, d.lam), grid=pick(req.grid, d.grid))
+            lam=pick(req.lam, d.lam), grid=pick(req.grid, d.grid),
+            family=fam)
+
+    def _class_of(self, req: SampleRequest):
+        """The admission-wave cost class: (family, corrector)."""
+        cfg = self.config_of(req)
+        return (cfg.family, cfg.corrector)
 
     # ---- coefficient-bank placement ----------------------------------------
     def _refresh_bank(self) -> None:
         """Re-place the stacked bank on device when the CoeffCache restacked
         it (a new config was registered), and grow the state's eps-history
         bucket if the bank's Qb bucket grew (one-time warmup shape change)."""
-        bank = self.cache.bank
+        bank = self.cache.packed_bank
         if bank is self._bank_src:
             return
         self._bank_src = bank
@@ -487,7 +585,7 @@ class DiffusionEngine(ServeLoop):
         hist = self.state.hist
         if hist.shape[1] < qb:
             pad = jnp.zeros((self.batch_size, qb - hist.shape[1])
-                            + self._state_shape, jnp.float32)
+                            + hist.shape[2:], jnp.float32)
             hist = jnp.concatenate([hist, pad], axis=1)
             if self._state_sh is not None:
                 hist = jax.device_put(hist, self._state_sh.hist)
@@ -500,30 +598,55 @@ class DiffusionEngine(ServeLoop):
         except ValueError as e:
             raise ValueError(f"request {r.rid}: {e}") from None
 
+    def _prepare(self, requests: List[SampleRequest]) -> None:
+        """Register every request's config before anything is admitted, so
+        the bank restacks (and, if the call introduces a bucket overflow,
+        re-buckets) exactly once up front — a warmup call that covers the
+        deployment's config menu then compiles every (family, corrector)
+        variant at the final bank shapes, and later traffic inside those
+        buckets never recompiles."""
+        for r in requests:
+            self.cache.index_of(self.config_of(r))
+
     def _admit_wave(self, group: List[SampleRequest], free: List[int]) -> None:
         # register the whole wave's configs before touching the bank, so it
-        # restacks at most once per wave (not once per new config)
+        # restacks at most once per wave (not once per new config; mid-call
+        # this is a no-op after `_prepare`, but direct scheduler submits —
+        # tests, streaming admission — still land here first)
         cfgs = [self.config_of(req) for req in group]
         idx = [self.cache.index_of(cfg) for cfg in cfgs]
         self._refresh_bank()
         for req, cfg, ci in zip(group, cfgs, idx):
             i = free.pop(0)
+            fi = self.cache.fam_index(cfg.family)
             base = jax.random.PRNGKey(req.seed)
             with self._ctx():
-                row = self._prior1(base)
+                row = self._prior1[cfg.family](base)
                 key_row = jax.random.fold_in(base, self._NOISE_SALT)
                 self.state = self._admit_state(self.state, row, key_row,
-                                               np.int32(i), np.int32(ci))
+                                               np.int32(i), np.int32(ci),
+                                               np.int32(fi))
             self.slots.assign(i, req, k=0, cfg=ci, nfe=cfg.nfe,
-                              pc=cfg.corrector)
+                              family=cfg.family, pc=cfg.corrector)
 
     def _round(self) -> None:
-        # corrector dispatch is a host-shadow read — no device fetch
-        with_corr = any(s.data["pc"] for s in self.slots.active())
-        with self._ctx():
-            self.state = self._step(self.params, self.state, self._bank,
-                                    with_corrector=with_corr)
-        self.n_steps += 1
+        # dispatch one variant per (family, corrector) class present among
+        # active slots — a host-shadow read, no device fetch.  Iteration
+        # follows family registration order so a round's dispatch sequence
+        # is deterministic
+        want: Dict[str, bool] = {}
+        for s in self.slots.active():
+            fam = s.data["family"]
+            want[fam] = want.get(fam, False) or s.data["pc"]
+        for fam in self.families:
+            if fam not in want:
+                continue
+            with self._ctx():
+                self.state = self._steps[fam](
+                    self.params[fam], self.state, self._bank,
+                    with_corrector=want[fam])
+            self.n_steps += 1
+        self.n_rounds += 1
         for s in self.slots.active():
             s.data["k"] += 1
 
@@ -535,7 +658,8 @@ class DiffusionEngine(ServeLoop):
                 if s.data["k"] >= s.data["nfe"]]
         for s in done:
             with self._ctx():
-                row = self._project_row(self.state.u, s.index)
+                row = self._project_row[s.data["family"]](self.state.u,
+                                                          s.index)
             results[s.request.rid] = np.asarray(row)
             self.n_samples_out += 1
             self.slots.release(s.index)

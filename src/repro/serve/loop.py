@@ -130,6 +130,7 @@ class ServeLoop:
         check_unique_rids(requests)
         for r in requests:
             self._validate(r)
+        self._prepare(requests)
         self.scheduler.submit_all(requests)
         results: Dict[int, np.ndarray] = {}
         while self.scheduler.has_pending() or self.slots.active_ids():
@@ -174,6 +175,13 @@ class ServeLoop:
     # ---- engine hooks -------------------------------------------------------
     def _validate(self, req) -> None:
         raise NotImplementedError
+
+    def _prepare(self, requests) -> None:
+        """Batch-level hook before any request is queued: a place to size
+        shared resources for the whole call at once (the diffusion engine
+        registers every request's sampler config here, so the coefficient
+        bank restacks/buckets once up front instead of growing — and
+        recompiling warmed variants — wave by wave)."""
 
     def _admit_wave(self, group, free) -> None:
         raise NotImplementedError

@@ -4,11 +4,13 @@ The scheduler is workload-agnostic: the same instance admits token-decoding
 requests (grouped by prompt length so one `make_prefill_step` call serves
 the whole group with a single shape — essential for the recurrent-state
 archs, whose prefill cannot tolerate right-padding) and diffusion sampling
-requests (grouped by coefficient cost class: every sample shares one state
-shape, but the `DiffusionEngine` keys admission on whether a config needs
-the 2-eval corrector program, so admission waves are class-homogeneous and
-runs of cheap predictor-only traffic tend to share rounds; classes can
-still co-reside after retire-and-refill — see the engine docstring).
+requests (grouped by **family x corrector** cost class: every sample shares
+one packed state shape, but the `DiffusionEngine` keys admission on which
+(SDE family, corrector) round-step variant a config rides — each family is
+one score-net evaluation per round, the corrector doubles it — so admission
+waves are class-homogeneous and runs of same-class traffic tend to share
+rounds; classes can still co-reside after retire-and-refill — see the
+engine docstring).
 
 Admission is FIFO with head-of-line grouping: `take_group(n)` pops up to
 `n` requests from the front whose group key equals the head's key.  A
@@ -48,9 +50,10 @@ class SampleRequest:
 
     The sampler-config fields select a member of gDDIM's sampler family
     (see `repro.core.coeffs.SamplerConfig`); `None` means "use the
-    engine's default".  One `DiffusionEngine` serves any mix of configs
-    in the same batch — a 10-NFE preview can share slots with a 50-NFE
-    predictor-corrector render."""
+    engine's default".  One `DiffusionEngine` serves any mix of configs —
+    and, when built multi-family, any mix of SDE *families* — in the same
+    batch: a 10-NFE VPSDE preview can share slots with a 50-NFE CLD
+    predictor-corrector render and a BDM sample."""
     rid: int
     seed: int = 0
     nfe: Optional[int] = None           # grid steps N
@@ -58,6 +61,7 @@ class SampleRequest:
     corrector: Optional[bool] = None    # Eq. 45 / Alg. 1 corrector
     lam: Optional[float] = None         # stochasticity lambda (Eq. 22)
     grid: Optional[str] = None          # 'quadratic' | 'uniform'
+    family: Optional[str] = None        # SDE family ('vpsde'|'cld'|'bdm')
 
 
 class Scheduler:

@@ -63,19 +63,34 @@ class TokenState(NamedTuple):
 
 
 class DiffusionState(NamedTuple):
-    """Per-slot sampler state for `DiffusionEngine` (batch-leading).
+    """Per-slot sampler state for `DiffusionEngine` (batch-leading), in the
+    *canonical packed* layout of `kernels/ei_update/ops.py` so slots from
+    different SDE families share one pool:
 
-      u       (B, *state) f32   the gDDIM iterate (e.g. (B, 2, d) for CLD)
-      hist    (B, Qb, *state)   multistep eps history, hist[:, j] ~ eps(t_{i+j})
+      u       (B, K, D) f32     the gDDIM iterate, K = k_max over resident
+                                families (VPSDE/BDM row 0, CLD rows 0-1;
+                                BDM rows are DCT coefficients), D =
+                                prod(data_shape); padding rows stay zero
+      hist    (B, Qb, K, D)     multistep eps history, hist[:, j] ~ eps(t_{i+j})
       k       (B,) int32        per-slot sampler step index
-      cfg     (B,) int32        per-slot config row in the CoeffBank
+      cfg     (B,) int32        per-slot config row in the coefficient bank
+      fam     (B,) int32        per-slot SDE family id (`CoeffCache.families`
+                                order) — selects which (family, corrector)
+                                round-step variant commits the slot's update
       keys    (B, 2) uint32     per-slot PRNG key (Eq. 22 stochastic branch)
       active  (B,) bool         False once k reached the config's NFE
+
+    The per-family score-net params are *not* part of this pytree (they
+    must survive the round step's donation); the engine keeps them
+    device-resident next to it, one placed copy per family, and passes the
+    right family's params into each round-step variant — already on
+    device, so the steady-state loop still moves nothing host->device.
     """
     u: Array
     hist: Array
     k: Array
     cfg: Array
+    fam: Array
     keys: Array
     active: Array
 
@@ -93,16 +108,18 @@ def token_state_init(batch_size: int, max_len: int) -> TokenState:
     )
 
 
-def diffusion_state_init(batch_size: int, state_shape: Tuple[int, ...],
+def diffusion_state_init(batch_size: int, k_max: int, data_dim: int,
                          q_bucket: int) -> DiffusionState:
-    """All-free diffusion state for a given SDE state shape and multistep
-    history bucket Qb (grows with the CoeffBank's q bucket)."""
+    """All-free diffusion state in the canonical packed (B, K, D) layout
+    (K = k_max over the engine's resident families, D = prod(data_shape))
+    with multistep history bucket Qb (grows with the bank's q bucket)."""
     B = batch_size
     return DiffusionState(
-        u=jnp.zeros((B,) + tuple(state_shape), jnp.float32),
-        hist=jnp.zeros((B, q_bucket) + tuple(state_shape), jnp.float32),
+        u=jnp.zeros((B, k_max, data_dim), jnp.float32),
+        hist=jnp.zeros((B, q_bucket, k_max, data_dim), jnp.float32),
         k=jnp.zeros((B,), jnp.int32),
         cfg=jnp.zeros((B,), jnp.int32),
+        fam=jnp.zeros((B,), jnp.int32),
         keys=jnp.zeros((B, 2), jnp.uint32),
         active=jnp.zeros((B,), bool),
     )

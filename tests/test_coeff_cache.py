@@ -10,9 +10,9 @@ import numpy as np
 import pytest
 
 from repro.core import (CoeffCache, SamplerConfig, bucket_size,
-                        build_sampler_coeffs, time_grid)
+                        build_sampler_coeffs, pack_coeff, time_grid)
 from repro.core.coeffs import C_BUCKET_MIN, N_BUCKET_MIN, Q_BUCKET_MIN
-from repro.sde import VPSDE, CLD
+from repro.sde import VPSDE, CLD, BDM
 
 
 def test_cache_hit_returns_identical_bank_object():
@@ -125,3 +125,90 @@ def test_bank_works_for_block_family():
 def test_sampler_config_validation(bad):
     with pytest.raises(ValueError):
         SamplerConfig(**bad)
+
+
+# ---------------------------------------------------------------------------
+# multi-family cache: one PackedBank stacking VPSDE + CLD + BDM configs
+# ---------------------------------------------------------------------------
+DATA_SHAPE = (4, 4, 3)
+
+
+def _multi_cache():
+    return CoeffCache({"vpsde": VPSDE(), "cld": CLD(),
+                       "bdm": BDM(data_shape=DATA_SHAPE)},
+                      data_shape=DATA_SHAPE)
+
+
+def test_multi_family_keys_and_resolution():
+    cache = _multi_cache()
+    assert cache.families == ["vpsde", "cld", "bdm"]
+    assert cache.default_family == "vpsde"
+    assert cache.k_max == 2                        # CLD's (x, v) channels
+    # an unset family resolves to the default and shares its slot with the
+    # explicit spelling
+    a = cache.index_of(SamplerConfig(nfe=4))
+    b = cache.index_of(SamplerConfig(nfe=4, family="vpsde"))
+    c = cache.index_of(SamplerConfig(nfe=4, family="cld"))
+    assert a == b and a != c
+    with pytest.raises(ValueError, match="family"):
+        cache.resolve(SamplerConfig(nfe=4, family="edm"))
+
+
+def test_multi_family_bank_requires_packed():
+    cache = _multi_cache()
+    cache.index_of(SamplerConfig(nfe=4))
+    with pytest.raises(ValueError, match="packed_bank"):
+        cache.bank                                  # family-native shapes
+    bank = cache.packed_bank                        # canonical shapes work
+    D = int(np.prod(DATA_SHAPE))
+    assert bank.psi.shape[2:] == (2, 2, D)
+    Cb, Nb, Qb = bank.psi.shape[0], bank.psi.shape[1], bank.pC.shape[2]
+    assert bank.shape_key == (Cb, Nb, Qb, 2, D)
+
+
+def test_packed_bank_rows_embed_family_coeffs():
+    """Packed rows must be `pack_coeff` embeddings of the family-native
+    Stage-I arrays, with `fam` recording each config's family index."""
+    cache = _multi_cache()
+    cfgs = [SamplerConfig(nfe=4),
+            SamplerConfig(nfe=5, family="cld", q=2),
+            SamplerConfig(nfe=4, family="bdm"),
+            SamplerConfig(nfe=4, family="vpsde", lam=0.5)]
+    idx = [cache.index_of(c) for c in cfgs]
+    bank = cache.packed_bank
+    K = cache.k_max
+    for c, cfg in zip(idx, cfgs):
+        name = cache.resolve(cfg)
+        ops = cache.sdes[name].ops
+        co = cache.get(cfg)
+        assert int(bank.fam[c]) == cache.fam_index(name)
+        assert int(bank.n_steps[c]) == cfg.nfe
+        for k in range(cfg.nfe):
+            np.testing.assert_allclose(
+                np.asarray(bank.psi[c, k]),
+                pack_coeff(ops, np.asarray(co.psi, np.float64)[k],
+                           DATA_SHAPE, K).astype(np.float32))
+            for j in range(cfg.q):
+                np.testing.assert_allclose(
+                    np.asarray(bank.pC[c, k, j]),
+                    pack_coeff(ops, np.asarray(co.pC, np.float64)[k, j],
+                               DATA_SHAPE, K).astype(np.float32))
+        # padding beyond this config's rows is zero
+        assert not np.asarray(bank.pC[c, cfg.nfe:]).any()
+        assert not np.asarray(bank.pC[c, :cfg.nfe, cfg.q:]).any()
+
+
+def test_single_family_cache_keeps_native_bank():
+    """Back-compat: a single-family cache still exposes the family-native
+    CoeffBank AND (given data_shape) the packed bank."""
+    cache = CoeffCache(CLD(), data_shape=DATA_SHAPE)
+    cache.index_of(SamplerConfig(nfe=4))
+    assert cache.bank.psi.shape[2:] == (2, 2)
+    D = int(np.prod(DATA_SHAPE))
+    assert cache.packed_bank.psi.shape[2:] == (2, 2, D)
+    assert cache.sde is cache.sdes["cld"]
+
+
+def test_kt_mapping_must_cover_families():
+    with pytest.raises(ValueError, match="missing"):
+        CoeffCache({"vpsde": VPSDE(), "cld": CLD()}, kt={"vpsde": "R"})

@@ -123,6 +123,96 @@ class TestKernelProperties:
                                    rtol=1e-5, atol=1e-5)
 
 
+class TestPackingProperties:
+    """The family-generic packing layer behind multi-family serving
+    (kernels/ei_update/ops.py): canonical (B, k, D) layout + the dense
+    embedded coefficient application."""
+
+    @given(
+        B=st.integers(min_value=1, max_value=3),
+        k=st.sampled_from([1, 2]),
+        pad=st.integers(min_value=0, max_value=2),
+        data_shape=st.sampled_from([(4,), (8,), (3, 5), (4, 4, 3),
+                                    (2, 3, 2, 2)]),
+        seed=st.integers(min_value=0, max_value=2**30),
+    )
+    @settings(**SLOW)
+    def test_pack_unpack_round_trip(self, B, k, pad, data_shape, seed):
+        from repro.kernels.ei_update.ops import pack_state, unpack_state
+        shape = (B,) + ((k,) if k > 1 else ()) + data_shape
+        u = jax.random.normal(jax.random.PRNGKey(seed), shape)
+        k_pad = k + pad
+        z, orig = pack_state(u, k, k_pad=k_pad)
+        D = int(np.prod(data_shape))
+        assert z.shape == (B, k_pad, D)
+        # padding rows are identically zero
+        assert not np.asarray(z[:, k:]).any()
+        np.testing.assert_array_equal(np.asarray(unpack_state(z, orig, k=k)),
+                                      np.asarray(u))
+
+    @given(
+        B=st.integers(min_value=1, max_value=3),
+        seed=st.integers(min_value=0, max_value=2**30),
+        family=st.sampled_from(["scalar", "block", "freqdiag"]),
+    )
+    @settings(**SLOW)
+    def test_packed_coeff_matches_family_native_apply(self, B, seed, family):
+        """pack_coeff's dense (k_max, k_max, D) embedding applied via
+        apply_packed equals the family's native structured apply."""
+        from repro.core import pack_coeff
+        from repro.kernels.ei_update.ops import apply_packed, pad_channels
+        data_shape, k_max = (4, 4, 3), 2
+        rng = np.random.default_rng(seed)
+        if family == "scalar":
+            sde, coeff = VPSDE(), np.float64(rng.standard_normal())
+        elif family == "block":
+            sde, coeff = CLD(), rng.standard_normal((2, 2))
+        else:
+            sde = BDM(data_shape=data_shape)
+            coeff = rng.standard_normal((4, 4, 1))
+        u = jax.random.normal(jax.random.PRNGKey(seed),
+                              (B,) + sde.state_shape(data_shape))
+        ref = sde.apply(jnp.asarray(coeff, jnp.float32), u)
+        packed = jnp.asarray(pack_coeff(sde.ops, coeff, data_shape, k_max),
+                             jnp.float32)
+        # canonicalize (BDM: DCT basis), apply, decanonicalize
+        z = pad_channels(sde.canonicalize(u), k_max)
+        out = apply_packed(jnp.broadcast_to(packed, (B,) + packed.shape), z)
+        got = sde.decanonicalize(out[:, :sde.packed_k], data_shape)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestSchedulerProperties:
+    @given(
+        seq=st.lists(st.tuples(st.sampled_from(["vpsde", "cld", "bdm"]),
+                               st.booleans()),
+                     min_size=0, max_size=24),
+        free=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**30),
+    )
+    @settings(**SLOW)
+    def test_family_corrector_waves_never_mix_classes(self, seq, free, seed):
+        """For ANY request order and free-slot budget, admission waves are
+        homogeneous in the (family, corrector) cost class, FIFO order is
+        preserved, and nothing is dropped or duplicated."""
+        from repro.serve import SampleRequest, Scheduler
+        sched = Scheduler(group_key=lambda r: (r.family, bool(r.corrector)))
+        reqs = [SampleRequest(rid=i, family=f, corrector=c)
+                for i, (f, c) in enumerate(seq)]
+        sched.submit_all(reqs)
+        admitted = []
+        while sched.has_pending():
+            wave = sched.take_group(free)
+            assert wave, "pending queue must always yield a head wave"
+            classes = {(r.family, bool(r.corrector)) for r in wave}
+            assert len(classes) == 1, \
+                f"wave mixed cost classes: {sorted(classes)}"
+            assert len(wave) <= free
+            admitted.extend(r.rid for r in wave)
+        assert admitted == [r.rid for r in reqs]
+
+
 class TestDataProperties:
     @given(step=st.integers(min_value=0, max_value=10_000),
            seed=st.integers(min_value=0, max_value=2**30))

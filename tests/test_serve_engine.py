@@ -304,6 +304,170 @@ def test_diffusion_engine_staggered_step_indices():
 
 
 # ---------------------------------------------------------------------------
+# multi-family serving: VPSDE + CLD + BDM on ONE engine (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+FAMILY_CONFIGS = {"vpsde": "cifar10-ddpm", "cld": "cifar10-cld",
+                  "bdm": "cifar10-bdm"}
+
+
+@pytest.fixture(scope="module")
+def family_parts():
+    """Reduced specs + params for all three SDE families (shared across the
+    multi-family tests; params differ per family like real deployments)."""
+    specs, params = {}, {}
+    for i, (fam, name) in enumerate(FAMILY_CONFIGS.items()):
+        specs[fam] = get_diffusion(name, reduced=True)
+        params[fam] = specs[fam].init(jax.random.PRNGKey(100 + i))
+    return specs, params
+
+
+def _solo_request(r):
+    """The same request without the family tag (for a single-family solo
+    engine of that family)."""
+    import dataclasses
+    return dataclasses.replace(r, family=None)
+
+
+def test_multi_family_mixed_bitwise_equals_solo(family_parts):
+    """One engine, one slot pool, requests across all three SDE families
+    (plus corrector / stochastic variants): every request's sample must be
+    bitwise identical to a solo single-family engine of its family."""
+    specs, params = family_parts
+    reqs = [SampleRequest(rid=0, seed=0),                          # vpsde
+            SampleRequest(rid=1, seed=1, family="cld", nfe=5),
+            SampleRequest(rid=2, seed=2, family="bdm", nfe=4),
+            SampleRequest(rid=3, seed=3, family="cld", nfe=6, q=2,
+                          corrector=True),
+            SampleRequest(rid=4, seed=4, family="vpsde", nfe=8, lam=0.5)]
+    engine = DiffusionEngine(specs, params, batch_size=2, nfe=6)
+    assert engine.families == ["vpsde", "cld", "bdm"]
+    mixed = engine.serve(reqs)
+    assert set(mixed) == {r.rid for r in reqs}
+
+    for r in reqs:
+        fam = r.family or "vpsde"
+        solo = DiffusionEngine(specs[fam], params[fam], batch_size=2, nfe=6)
+        out = solo.serve([_solo_request(r)])
+        np.testing.assert_array_equal(
+            mixed[r.rid], out[r.rid],
+            err_msg=f"rid {r.rid} ({fam}): mixed-family engine != solo "
+                    f"single-family engine")
+
+
+def test_multi_family_matches_lockstep_reference(family_parts):
+    """Deterministic configs of every family must match the lockstep
+    Stage-II reference sampler (sample_gddim over the family-native coeff
+    shapes) — the packed canonical path computes the same update."""
+    from repro.core import sample_gddim
+    specs, params = family_parts
+    reqs = [SampleRequest(rid=0, seed=0, nfe=6),                   # vpsde
+            SampleRequest(rid=1, seed=1, family="cld", nfe=5),
+            SampleRequest(rid=2, seed=2, family="bdm", nfe=4),
+            SampleRequest(rid=3, seed=3, family="cld", nfe=6, q=2,
+                          corrector=True)]
+    engine = DiffusionEngine(specs, params, batch_size=2, nfe=6)
+    mixed = engine.serve(reqs)
+    for r in reqs:
+        fam = r.family or "vpsde"
+        spec = specs[fam]
+        cfg = engine.config_of(r)
+        co = engine.cache.get(cfg)
+        uT = spec.sde.prior_sample(jax.random.PRNGKey(r.seed), 1,
+                                   tuple(spec.data_shape))
+        eps_fn = spec.make_eps_fn(params[fam], np.asarray(co.ts))
+        ref = spec.sde.project_data(sample_gddim(
+            spec.sde, co, eps_fn, uT, q=cfg.q, corrector=cfg.corrector))
+        # BDM's engine path is frequency-resident (one dct/idct pair per
+        # model eval instead of per apply), so agreement is to f32
+        # round-trip accuracy rather than bitwise
+        np.testing.assert_allclose(mixed[r.rid], np.asarray(ref[0]),
+                                   rtol=5e-4, atol=5e-4,
+                                   err_msg=f"rid {r.rid} ({fam})")
+
+
+def test_multi_family_co_resident_slots(family_parts):
+    """Slots of different families co-resident in one batch: admit a vpsde
+    render, advance it, admit a cld request mid-flight.  Both must match
+    their solo runs (the per-family round-step variants only commit their
+    own family's rows), and the round must dispatch once per resident
+    family (n_steps > n_rounds)."""
+    specs, params = family_parts
+    engine = DiffusionEngine(specs, params, batch_size=2, nfe=6)
+    engine.scheduler.submit(SampleRequest(rid=0, seed=0))          # vpsde
+    engine._admit()
+    for _ in range(2):
+        engine._round()
+    engine.scheduler.submit(SampleRequest(rid=1, seed=1, family="cld",
+                                          nfe=5))
+    engine._admit()
+    fams = sorted(s.data["family"] for s in engine.slots.active())
+    assert fams == ["cld", "vpsde"], fams
+    results = {}
+    while engine.slots.active_ids():
+        engine._round()
+        engine._poll(results)
+    assert sorted(results) == [0, 1]
+    assert engine.n_steps > engine.n_rounds, \
+        "co-resident families must each dispatch their own step variant"
+
+    for rid, fam, kw in ((0, "vpsde", {}), (1, "cld", dict(nfe=5))):
+        solo = DiffusionEngine(specs[fam], params[fam], batch_size=2, nfe=6)
+        out = solo.serve([SampleRequest(rid=rid, seed=rid, **kw)])
+        np.testing.assert_array_equal(results[rid], out[rid],
+                                      err_msg=f"rid {rid} ({fam})")
+
+
+def test_multi_family_zero_recompiles_after_variant_warmup(family_parts):
+    """After a one-time warmup of the (family, corrector) variants — and of
+    the coefficient-bank buckets live traffic will occupy — fresh mixed
+    traffic with unseen NFE values and new config mixes must not compile
+    anything new."""
+    specs, params = family_parts
+    engine = DiffusionEngine(specs, params, batch_size=2, nfe=6)
+    # warmup: every (family, corrector) variant in traffic, and a 5th
+    # config to push the config bucket to 8 so live traffic can register
+    # new configs without overflowing it
+    engine.serve([SampleRequest(rid=-1, seed=0),
+                  SampleRequest(rid=-2, seed=1, family="cld"),
+                  SampleRequest(rid=-3, seed=2, family="bdm"),
+                  SampleRequest(rid=-4, seed=3, family="cld",
+                                corrector=True),
+                  SampleRequest(rid=-5, seed=4, nfe=4)])
+    warm = engine.compile_stats()
+    # exactly the 3 predictor-only variants + cld's with-corrector variant:
+    # serve() registers the whole call's configs up front (`_prepare`), so
+    # even though the 5th config overflows the C bucket, the bank is at its
+    # final shapes before any variant compiles
+    assert warm["step"] == 4, warm
+
+    engine.serve([SampleRequest(rid=0, seed=5, nfe=5),             # new cfg
+                  SampleRequest(rid=1, seed=6, family="bdm", nfe=5),
+                  SampleRequest(rid=2, seed=7, family="cld", nfe=4),
+                  SampleRequest(rid=3, seed=8, family="cld", nfe=6,
+                                corrector=True)])
+    assert engine.compile_stats() == warm, \
+        ("mixed-family traffic recompiled after warmup", warm,
+         engine.compile_stats())
+    assert len(engine.cache) == 8
+
+
+def test_multi_family_requires_shared_data_shape(family_parts):
+    specs, params = family_parts
+    other = get_diffusion("cifar10-ddpm", reduced=False)   # (32, 32, 3)
+    with pytest.raises(ValueError, match="data_shape"):
+        DiffusionEngine({"vpsde": other, "cld": specs["cld"]},
+                        {"vpsde": params["vpsde"], "cld": params["cld"]},
+                        batch_size=2, nfe=4)
+
+
+def test_unknown_family_rejected(family_parts):
+    specs, params = family_parts
+    engine = DiffusionEngine(specs, params, batch_size=2, nfe=4)
+    with pytest.raises(ValueError, match="family"):
+        engine.serve([SampleRequest(rid=0, seed=0, family="edm")])
+
+
+# ---------------------------------------------------------------------------
 # scheduler: admission-wave grouping under mixed cost classes
 # ---------------------------------------------------------------------------
 class TestSchedulerGrouping:
@@ -360,6 +524,32 @@ class TestSchedulerGrouping:
                       for s in engine.slots.active()) == [0, 1]
         results = engine.serve([])      # drain everything (rid 2 admits
         assert sorted(results) == [0, 1, 2]   # on the next cycle inside)
+
+
+def test_family_corrector_wave_grouping(family_parts):
+    """Admission waves are homogeneous in the generalized (family,
+    corrector) cost class: FIFO with head-of-line grouping, so a wave
+    never mixes classes (a cld render would otherwise drag vpsde
+    neighbours through its score net's rounds from round one)."""
+    specs, params = family_parts
+    engine = DiffusionEngine(specs, params, batch_size=8, nfe=4)
+    reqs = [SampleRequest(rid=0, seed=0),                      # (vpsde, F)
+            SampleRequest(rid=1, seed=1),                      # (vpsde, F)
+            SampleRequest(rid=2, seed=2, family="cld"),
+            SampleRequest(rid=3, seed=3, family="cld", corrector=True),
+            SampleRequest(rid=4, seed=4, family="cld"),
+            SampleRequest(rid=5, seed=5, family="bdm")]
+    engine.scheduler.submit_all(reqs)
+    waves = []
+    while engine.scheduler.has_pending():
+        waves.append([engine._class_of(r)
+                      for r in engine.scheduler.take_group(8)])
+    for w in waves:
+        assert len(set(w)) == 1, (waves,
+                                  "a wave mixed (family, corrector) classes")
+    assert [w[0] for w in waves] == [
+        ("vpsde", False), ("cld", False), ("cld", True), ("cld", False),
+        ("bdm", False)]
 
 
 # ---------------------------------------------------------------------------

@@ -134,6 +134,51 @@ def test_mesh_serve_bitwise_equals_single_device():
     assert "TOKEN_MESH_OK" in out
 
 
+def test_mesh_multi_family_bitwise_equals_single_device():
+    """The multi-family engine (VPSDE + CLD + BDM in one packed slot pool)
+    on a 2-device data mesh: bitwise-equal to the single-device engine and
+    recompile-free across a refill after warmup."""
+    out = run_with_devices(2, """
+        import numpy as np, jax
+        from repro.configs import get_diffusion
+        from repro.launch.mesh import make_local_mesh
+        from repro.serve import DiffusionEngine, SampleRequest
+
+        specs, params = {}, {}
+        for i, (fam, name) in enumerate((("vpsde", "cifar10-ddpm"),
+                                         ("cld", "cifar10-cld"),
+                                         ("bdm", "cifar10-bdm"))):
+            specs[fam] = get_diffusion(name, reduced=True)
+            params[fam] = specs[fam].init(jax.random.PRNGKey(100 + i))
+        reqs = [SampleRequest(rid=0, seed=0),
+                SampleRequest(rid=1, seed=1, family="cld", nfe=5),
+                SampleRequest(rid=2, seed=2, family="bdm", nfe=4),
+                SampleRequest(rid=3, seed=3, family="cld", nfe=6,
+                              corrector=True)]
+        single = DiffusionEngine(specs, params, batch_size=4, nfe=6)
+        ref = single.serve(reqs)
+        sharded = DiffusionEngine(specs, params, batch_size=4, nfe=6,
+                                  mesh=make_local_mesh(data=2))
+        assert sharded.n_shards == 2
+        got = sharded.serve(reqs)
+        for rid in ref:
+            np.testing.assert_array_equal(
+                ref[rid], got[rid],
+                err_msg=f"family-mix rid {rid}: sharded != single-device")
+        warm = sharded.compile_stats()
+        # refill with fresh seeds over the warmed config menu (a NEW config
+        # would be fine too as long as it fits the warmed buckets; these
+        # four sit at the C bucket boundary, so stay inside the menu)
+        sharded.serve([SampleRequest(rid=10, seed=7, family="bdm", nfe=4),
+                       SampleRequest(rid=11, seed=8)])
+        assert sharded.compile_stats() == warm, (
+            "multi-family mesh refill recompiled", warm,
+            sharded.compile_stats())
+        print("FAMILY_MESH_OK")
+    """)
+    assert "FAMILY_MESH_OK" in out
+
+
 def test_mesh_admission_spreads_across_shards():
     """Free-slot selection targets per-shard rows round-robin, so an
     admission wave lands evenly over the data shards instead of piling

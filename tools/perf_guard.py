@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""CI perf guard over the serving benchmark's *deterministic* counters.
+
+    python tools/perf_guard.py BASELINE.json FRESH.json
+
+Compares a fresh `BENCH_serving.json` (written by `python -m benchmarks.run
+serving`) against the committed baseline and fails on regressions in the
+counters that are pure functions of the request schedule — recompiles after
+warmup, serving rounds / step dispatches / polls per schedule, prefill-wave
+count — so the job is timing-free and stable on shared CI runners (wall
+times in the records are reported but never gated).
+
+Rules, per record matched by `config`:
+
+  * `recompiles_after_warmup`, `rounds`, `dispatches`, `polls`,
+    `n_prefills` — must not exceed the baseline (a decrease is an
+    improvement and passes; commit the fresh JSON to ratchet it in).
+  * `n_requests`, `n_configs`, `batch`, `nfe` — schedule identity; any
+    drift means the benchmark no longer measures the same thing and the
+    baseline must be regenerated deliberately, so a mismatch fails.
+  * a baseline config missing from the fresh run fails (a silently dropped
+    row is how perf coverage rots); fresh-only configs are reported but
+    pass (new rows land with their own baseline in the same PR).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+BOUNDED = ("recompiles_after_warmup", "rounds", "dispatches", "polls",
+           "n_prefills")
+EXACT = ("n_requests", "n_configs", "batch", "nfe")
+
+
+def _records(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for rec in doc.get("records", []):
+        out[rec["config"]] = rec
+    return out
+
+
+def compare(baseline: Dict[str, dict], fresh: Dict[str, dict]) -> List[str]:
+    errors = []
+    for config, base in sorted(baseline.items()):
+        got = fresh.get(config)
+        if got is None:
+            errors.append(f"{config}: present in baseline, missing from the "
+                          "fresh run")
+            continue
+        for key in EXACT:
+            if key in base and base.get(key) != got.get(key):
+                errors.append(f"{config}: schedule field {key} drifted "
+                              f"({base.get(key)} -> {got.get(key)}); "
+                              "regenerate the baseline deliberately")
+        for key in BOUNDED:
+            if key not in base:
+                continue
+            if key not in got:
+                errors.append(f"{config}: counter {key} missing from the "
+                              "fresh run")
+            elif got[key] > base[key]:
+                errors.append(f"{config}: {key} regressed "
+                              f"({base[key]} -> {got[key]})")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    baseline, fresh = _records(argv[0]), _records(argv[1])
+    errors = compare(baseline, fresh)
+    extra = sorted(set(fresh) - set(baseline))
+    if extra:
+        print(f"new configs (no baseline yet, not gated): {extra}")
+    for config in sorted(baseline):
+        if config in fresh and not any(e.startswith(config + ":")
+                                       for e in errors):
+            counters = {k: fresh[config][k] for k in BOUNDED
+                        if k in fresh[config]}
+            print(f"ok {config}: {counters}")
+    if errors:
+        print(f"\nPERF GUARD FAILED ({len(errors)} regression(s)):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"\nperf guard passed: {len(baseline)} configs, "
+          "deterministic counters no worse than baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
