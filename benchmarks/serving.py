@@ -33,6 +33,14 @@ baseline — timing-free, so the guard is stable on shared runners:
   * `dispatches`              — step-program dispatches (diffusion; >
                                 rounds exactly when families co-reside)
   * `n_prefills` / `prefill_widths` — admission-wave prefill count/widths
+  * `bank_bytes` / `bank_restack_rows` — device-resident bytes of the
+    engine's factored coefficient bank and the cumulative config-rows the
+    CoeffCache (re)packed (diffusion rows; `bank_bytes_dense` records what
+    the retired dense PackedBank layout would occupy for the same bank, so
+    a reintroduced dense path fails the guard's bank_bytes gate).  The
+    `gddim_bank_cifar10` record sizes the same menu at the paper's full
+    (32, 32, 3) data shape — pure host-side accounting, where the factored
+    form's >= 100x residency cut is the committed baseline.
 
 Reduced CPU configs: the numbers are for *relative* tracking (batch scaling,
 homogeneous vs mixed traffic, regression against the per-request loop), not
@@ -81,6 +89,40 @@ def _write_json(records: List[dict]) -> None:
 
 def _stats_total(engine) -> int:
     return sum(engine.compile_stats().values())
+
+
+def _bank_counters(cache) -> dict:
+    bank = cache.factored_bank
+    return {
+        "bank_bytes": bank.nbytes,
+        "bank_bytes_dense": bank.dense_equiv_nbytes,
+        "bank_restack_rows": cache.bank_restack_rows,
+    }
+
+
+def _bank_residency_record(nfe: int) -> dict:
+    """Coefficient-bank residency at the paper's full CIFAR data shape:
+    a representative multi-family config menu registered into one
+    CoeffCache, then pure byte accounting (no model, no serving) — every
+    field deterministic, so the perf guard can gate the factored bank's
+    >= 100x cut against the dense-equivalent bytes."""
+    from repro.core import CoeffCache, SamplerConfig
+    from repro.sde import BDM, CLD, VPSDE
+
+    shape = (32, 32, 3)
+    cache = CoeffCache({"vpsde": VPSDE(), "cld": CLD(),
+                        "bdm": BDM(data_shape=shape)}, data_shape=shape)
+    menu = [SamplerConfig(nfe=nfe),
+            SamplerConfig(nfe=max(nfe // 2, 2)),
+            SamplerConfig(nfe=nfe, family="cld"),
+            SamplerConfig(nfe=nfe, family="cld", corrector=True),
+            SamplerConfig(nfe=nfe, family="bdm")]
+    for cfg in menu:
+        cache.index_of(cfg)
+    rec = {"workload": "bank", "config": "gddim_bank_cifar10",
+           "data_shape": list(shape), "nfe": nfe, "n_configs": len(cache)}
+    rec.update(_bank_counters(cache))
+    return rec
 
 
 def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
@@ -158,6 +200,7 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
                 "recompiles_after_warmup": _stats_total(engine) - warm_stats,
                 "n_requests": n_requests,
                 "n_configs": len(engine.cache),
+                **_bank_counters(engine.cache),
             })
             yield (f"serving,gddim_{tag}B{B},{nfe},{us_step:.0f},"
                    f"{n_requests / dt:.2f},0")
@@ -198,8 +241,15 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
         "recompiles_after_warmup": _stats_total(engine) - warm_stats,
         "n_requests": n_fam_requests,
         "n_configs": len(engine.cache),
+        **_bank_counters(engine.cache),
     })
     yield (f"serving,gddim_fam_mix_B{B},{nfe},{us_step:.0f},"
            f"{n_fam_requests / dt:.2f},0")
+
+    # ---- coefficient-bank residency at the paper's data shape ----
+    rec = _bank_residency_record(nfe)
+    records.append(rec)
+    yield (f"serving,{rec['config']},{nfe},0,"
+           f"{rec['bank_bytes_dense'] / max(rec['bank_bytes'], 1):.1f},0")
 
     _write_json(records)

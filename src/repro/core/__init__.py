@@ -1,6 +1,6 @@
 """gDDIM core: Stage-I coefficient pipeline + Stage-II samplers."""
 from .coeffs import (SamplerCoeffs, SamplerConfig, CoeffBank, CoeffCache,
-                     PackedBank, pack_coeff,
+                     FactoredBank, factor_coeff,
                      build_sampler_coeffs, bucket_size, time_grid,
                      ddim_closed_form_check)
 from .gddim import (sample_gddim, sample_gddim_stochastic, sample_em,
@@ -8,7 +8,7 @@ from .gddim import (sample_gddim, sample_gddim_stochastic, sample_em,
 
 __all__ = [
     "SamplerCoeffs", "SamplerConfig", "CoeffBank", "CoeffCache",
-    "PackedBank", "pack_coeff",
+    "FactoredBank", "factor_coeff",
     "build_sampler_coeffs", "bucket_size", "time_grid", "ddim_closed_form_check",
     "sample_gddim", "sample_gddim_stochastic", "sample_em", "sample_heun",
     "sample_ancestral_bdm", "sample_rk45_np",

@@ -271,6 +271,29 @@ def cache_shardings(cache_like: Any, batch_axes: Any, mesh: Mesh,
     return jax.tree.map(one, cache_like, batch_axes)
 
 
+def bank_shardings(mesh: Mesh, cfg: ShardCfg, bank: Any,
+                   shard_diag: bool = False) -> Any:
+    """Mesh placement for a serve coefficient bank (`FactoredBank`).
+
+    Every block-factor / index / time / flag leaf is tiny (O(K^2) or O(1)
+    per row) and replicates.  The (P, D) diagonal pool — the only
+    D-scaled leaf left after the factored refactor — replicates by
+    default too; `shard_diag=True` shards its D axis over the tp axis
+    when divisible (pool-row gathers are along P, so each shard keeps its
+    D-slice local), which only pays once D is large enough for pool
+    residency to matter and costs re-gathering the rows against the
+    replicated slot state.
+    """
+    named = {}
+    for f in bank._fields:
+        spec = P()
+        if f == "diag" and shard_diag and cfg.tp_axis in mesh.axis_names \
+                and getattr(bank, f).shape[-1] % mesh.shape[cfg.tp_axis] == 0:
+            spec = P(None, cfg.tp_axis)
+        named[f] = NamedSharding(mesh, spec)
+    return type(bank)(**named)
+
+
 # ---------------------------------------------------------------------------
 # in-model activation constraints (Megatron-style SP residual stream)
 # ---------------------------------------------------------------------------

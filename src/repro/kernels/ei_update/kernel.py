@@ -40,6 +40,58 @@ def _ei_kernel(psi_ref, C_ref, u_ref, eps_ref, o_ref, *, q: int, k: int):
     o_ref[0] = acc.astype(o_ref.dtype)
 
 
+def _factored_kernel(blk_ref, u_ref, diag_ref, o_ref, *, k: int):
+    u = u_ref[0].astype(jnp.float32)                    # (k, bd)
+    d = diag_ref[0].astype(jnp.float32)                 # (bd,)
+    acc = jnp.zeros_like(u)
+    for c in range(k):
+        row = jnp.zeros_like(u[0])
+        for c2 in range(k):
+            row = row + blk_ref[0, c, c2] * u[c2]
+        acc = acc.at[c].set(row * d)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def apply_factored(blk: Array, diag: Array, z: Array,
+                   *, block_d: int = 2048, interpret: bool = False) -> Array:
+    """Factored-coefficient application: blk (B, k, k); diag (B, D);
+    z (B, k, D) -> (B, k, D).
+
+    Same fusion story as `ei_update`: the gathered per-example block
+    factors are a handful of scalars (SMEM), so each grid step loads one
+    (k, block_d) state tile plus the matching diagonal tile, applies the
+    k x k block in VREGs, scales by the diagonal, and stores once — the
+    two contractions of the factored bank cost ONE pass over the state
+    instead of the dense path's (K, K, D)-coefficient stream (which read
+    K times the state volume in coefficients alone).
+    """
+    B, k, D = z.shape
+    block_d = min(block_d, D)
+    if D % block_d:
+        pad = block_d - D % block_d
+        z = jnp.pad(z, ((0, 0), (0, 0), (0, pad)))
+        diag = jnp.pad(diag, ((0, 0), (0, pad)))
+    Dp = z.shape[-1]
+    grid = (B, Dp // block_d)
+
+    kernel = functools.partial(_factored_kernel, k=k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k, k), lambda b, d: (b, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, k, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, block_d), lambda b, d: (b, d)),
+        ],
+        out_specs=pl.BlockSpec((1, k, block_d), lambda b, d: (b, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((B, k, Dp), z.dtype),
+        interpret=interpret,
+    )(blk.astype(jnp.float32), z, diag)
+    return out[..., :D]
+
+
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def ei_update(u: Array, eps_hist: Array, psi: Array, C: Array,
               *, block_d: int = 2048, interpret: bool = False) -> Array:

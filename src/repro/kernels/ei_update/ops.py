@@ -14,10 +14,18 @@ The packing layer is family-generic:
     pool can host families of different structural width (k_max = max over
     resident families; padding rows stay identically zero).
   * `unpack_state(z, shape, k=None)` inverts it, dropping padding rows.
-  * `apply_packed(coeff, z)` applies a per-example canonical coefficient
-    (B, k, k, D) — the dense block-diagonal-per-entry form every family's
-    structured coefficient embeds into (scalar: c I, CLD block: M ⊗ 1_D,
-    BDM freq-diag: diag over D) — to a packed state (B, k, D).
+  * `apply_factored(blk, diag, z)` applies a per-example *factored*
+    canonical coefficient — a (B, k, k) block factor times a (B, D)
+    diagonal factor, together the dense coeff[b,i,j,d] = blk[b,i,j] *
+    diag[b,d] every family's structured coefficient factors into exactly
+    (scalar: c e00 x 1, CLD block: M x 1, BDM freq-diag: e00 x d; see
+    `repro.core.coeffs.factor_coeff`) — to a packed state (B, k, D) as
+    two contractions.  This is the serving step's bank-gather form
+    (`FactoredBank`); ref + Pallas paths.
+  * `apply_packed(coeff, z)` applies a per-example *dense* canonical
+    coefficient (B, k, k, D) — the embedded form the factored bank
+    replaced.  Kept as the one-einsum oracle the differential tests
+    (tests/test_factored_bank.py) compare `apply_factored` against.
 """
 from __future__ import annotations
 
@@ -27,7 +35,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .ref import ei_update_ref
+from .ref import apply_factored_ref, ei_update_ref
+from .kernel import apply_factored as apply_factored_pallas
 from .kernel import ei_update as ei_update_pallas
 
 Array = jax.Array
@@ -70,9 +79,35 @@ def unpack_state(u: Array, shape: Tuple[int, ...],
 
 
 def apply_packed(coeff: Array, z: Array) -> Array:
-    """Per-example canonical coefficient application:
-    coeff (B, k, k, D) x z (B, k, D) -> (B, k, D)."""
+    """Per-example DENSE canonical coefficient application:
+    coeff (B, k, k, D) x z (B, k, D) -> (B, k, D).  Differential-test
+    oracle for `apply_factored`; the serve path gathers factor pairs."""
     return jnp.einsum("bijd,bjd->bid", coeff, z)
+
+
+def apply_factored(blk: Array, diag: Array, z: Array,
+                   impl: str = "auto") -> Array:
+    """Per-example FACTORED canonical coefficient application (the bank-
+    gather form of the serve step): blk (B, k, k), diag (B, D),
+    z (B, k, D) -> (B, k, D), as two contractions.
+
+    The ref path is *bitwise* equal to the dense `apply_packed` einsum it
+    replaced (same multiply-reduce graph — see apply_factored_ref); the
+    TPU Pallas kernel computes the same two contractions fused in VREGs
+    and is pinned to ref at tight tolerance (its accumulation order may
+    differ in the last ulp).  Engine determinism guarantees (solo ==
+    mixed, mesh == single-device) compare identical programs and so hold
+    on every backend; the factored == dense differential tier runs on
+    the ref path."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return apply_factored_pallas(blk, diag, z)
+    if impl == "pallas_interpret":
+        return apply_factored_pallas(blk, diag, z, interpret=True)
+    if impl == "ref":
+        return apply_factored_ref(blk, diag, z)
+    raise ValueError(impl)
 
 
 def ei_update(u: Array, eps_hist: Array, psi: Array, C: Array,

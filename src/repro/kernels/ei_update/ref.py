@@ -22,3 +22,25 @@ def ei_update_ref(u: Array, eps_hist: Array, psi: Array, C: Array) -> Array:
     out = out + jnp.einsum("jck,jbkd->bcd", C.astype(jnp.float32),
                            eps_hist.astype(jnp.float32))
     return out.astype(u.dtype)
+
+
+def apply_factored_ref(blk: Array, diag: Array, z: Array) -> Array:
+    """Factored per-example coefficient application: blk (B, k, k) against
+    z (B, k, D), then the (B, D) diagonal factor elementwise.
+
+    `blk[b] (x) diag[b]` is the dense coefficient, and this deliberately
+    runs as the SAME program as the dense `apply_packed` einsum: the
+    dense coefficient is reassembled as mul(broadcast(blk), broadcast(
+    diag)) — exact, because one factor is always trivial (0/1/ones, see
+    core.coeffs.factor_coeff) — and fed to the identical multiply-reduce.
+    XLA keeps the broadcasts virtual inside the fusion (the k*k*D
+    coefficient never exists in memory; that is the factored bank's
+    point), and because the reduce sees the identical graph shape the
+    result is *bitwise* equal to the dense path under jit.  The tempting
+    alternatives are not: `einsum("bij,bjd->bid")` lowers to a
+    dot_general whose FMA contraction differs in the last ulp for k=2
+    (CLD) blocks, and scaling by the diagonal *after* the reduce invites
+    the fuser to contract the surrounding multiply-adds differently."""
+    coeff = jnp.broadcast_to(blk[..., None], blk.shape + (z.shape[-1],)) \
+        * diag[:, None, None, :]
+    return jnp.einsum("bijd,bjd->bid", coeff, z)

@@ -27,7 +27,7 @@
                                    step index k), bank mode operates on the
                                    canonical packed (B, K, D) slot state
                                    and takes a stacked multi-family
-                                   PackedBank argument plus per-slot
+                                   FactoredBank argument plus per-slot
                                    (k, cfg) indices so one compiled program
                                    per family serves mixed family/NFE/q/
                                    corrector/lambda traffic
@@ -206,13 +206,17 @@ def make_diffusion_serve_step(spec, coeffs=None):
       layout (`kernels/ei_update/ops.py`): `u` (B, K, D) with K = k_max
       over the engine's resident families (VPSDE/BDM occupy row 0, CLD
       rows 0-1; BDM rows hold DCT coefficients — the dct2 path), `hist`
-      (B, Qb, K, D).  The stacked `PackedBank` is an *argument* (not a
+      (B, Qb, K, D).  The stacked `FactoredBank` is an *argument* (not a
       closure constant), so refreshing the bank with new configs never
       recompiles as long as its bucketed shapes are stable.  Every slot b
-      gathers its own psi/pC/cC/B/P_chol rows by (cfg[b], k[b]); this
-      family's k x k block is statically sliced out and applied via
-      `apply_packed`, so the arithmetic per slot is identical whatever
-      K the co-resident families force:
+      gathers its psi/pC/cC/B/P_chol rows as *factor pairs* by
+      (cfg[b], k[b]) — a (kf, kf) block factor sliced statically to this
+      family's width plus a (D,) diagonal row fetched from the bank's
+      deduplicated pool — and applies them via `apply_factored` (two
+      contractions; the ref path is bitwise equal to the dense einsum it
+      replaced, the TPU Pallas kernel is pinned to ref), so the
+      arithmetic per slot is identical whatever K the co-resident
+      families force:
 
           u, hist = step(params, u, hist, k, cfg, keys, bank,
                          with_corrector=...)
@@ -249,7 +253,7 @@ def make_diffusion_serve_step(spec, coeffs=None):
 
         return serve_step
 
-    from ..kernels.ei_update.ops import apply_packed, pad_channels
+    from ..kernels.ei_update.ops import apply_factored, pad_channels
 
     sde = spec.sde
     kf = sde.packed_k                       # this family's channel rows
@@ -262,10 +266,15 @@ def make_diffusion_serve_step(spec, coeffs=None):
         t = bank.t_cur[cfg, kc]
         # this family's slice of the packed state / gathered coefficients:
         # static k x k sub-block, so the per-slot arithmetic (and its
-        # bitwise result) does not depend on the co-resident K
+        # bitwise result) does not depend on the co-resident K.  Each
+        # coefficient arrives as a factor pair: (B, kf, kf) block + the
+        # (B, D) diagonal row its pool id points at
         ub = u[:, :kf]                                        # (B, kf, D)
-        gat = lambda leaf: leaf[cfg, kc][:, :kf, :kf, :]      # (B,kf,kf,D)
-        gatq = lambda leaf, j: leaf[cfg, kc, j][:, :kf, :kf, :]
+        gat = lambda nm: (getattr(bank, nm + "_blk")[cfg, kc][:, :kf, :kf],
+                          bank.diag[getattr(bank, nm + "_di")[cfg, kc]])
+        gatq = lambda nm, j: (
+            getattr(bank, nm + "_blk")[cfg, kc, j][:, :kf, :kf],
+            bank.diag[getattr(bank, nm + "_di")[cfg, kc, j]])
         pad = lambda z: pad_channels(z, K)
 
         eps = spec.eps_model(params, sde.decanonicalize(ub, data_shape), t)
@@ -273,21 +282,22 @@ def make_diffusion_serve_step(spec, coeffs=None):
         hist = jnp.concatenate([pad(eps_c)[:, None], hist[:, :-1]], axis=1)
         Qb = hist.shape[1]
 
-        u_lin = apply_packed(gat(bank.psi), ub)
-        # predictor (Eq. 19a): slots with q_c < Qb hit zero-padded pC rows,
-        # so the extra terms vanish identically
+        u_lin = apply_factored(*gat("psi"), ub)
+        # predictor (Eq. 19a): slots with q_c < Qb hit zero-padded pC rows
+        # (zero block factor), so the extra terms vanish identically
         u_pred = u_lin
         for j in range(Qb):
-            u_pred = u_pred + apply_packed(gatq(bank.pC, j),
-                                           hist[:, j, :kf])
-        # stochastic branch (Eq. 22/23); for deterministic configs P_chol
-        # is zero but the branch is still computed so every traffic mix
-        # runs the identical program (bitwise solo == interleaved)
+            u_pred = u_pred + apply_factored(*gatq("pC", j),
+                                             hist[:, j, :kf])
+        # stochastic branch (Eq. 22/23); deterministic configs carry zero
+        # B/P_chol factors but the branch is still computed so every
+        # traffic mix runs the identical program (bitwise solo ==
+        # interleaved)
         noise = jax.vmap(
             lambda key, kk: sde.noise_like(jax.random.fold_in(key, kk),
                                            state_shape, u.dtype))(keys, kc)
-        u_sto = u_lin + apply_packed(gat(bank.B), eps_c) \
-            + apply_packed(gat(bank.P_chol), sde.canonicalize(noise))
+        u_sto = u_lin + apply_factored(*gat("B"), eps_c) \
+            + apply_factored(*gat("P_chol"), sde.canonicalize(noise))
         bmask = lambda m: m.reshape((-1, 1, 1))
         u_next = jnp.where(bmask(bank.stochastic[cfg]), u_sto, u_pred)
 
@@ -295,11 +305,11 @@ def make_diffusion_serve_step(spec, coeffs=None):
             eps_n = spec.eps_model(
                 params, sde.decanonicalize(u_pred, data_shape),
                 bank.t_nxt[cfg, kc])
-            u_corr = u_lin + apply_packed(gatq(bank.cC, 0),
-                                          sde.canonicalize(eps_n))
+            u_corr = u_lin + apply_factored(*gatq("cC", 0),
+                                            sde.canonicalize(eps_n))
             for j in range(1, Qb):
-                u_corr = u_corr + apply_packed(gatq(bank.cC, j),
-                                               hist[:, j - 1, :kf])
+                u_corr = u_corr + apply_factored(*gatq("cC", j),
+                                                 hist[:, j - 1, :kf])
             # Alg. 1: no corrector on the final step (k == N_c - 1)
             use_c = bank.corrector[cfg] & (kc < bank.n_steps[cfg] - 1)
             u_next = jnp.where(bmask(use_c), u_corr, u_next)

@@ -185,6 +185,22 @@ class FreqDiagOps(CoeffOps):
         return np.zeros(self.freq_shape)
 
 
+def _apply_factored_canonical(blk: Array, diag: Array, z: Array) -> Array:
+    """The factored-coefficient core on a canonical (B, kf, D) state: block
+    contraction as a multiply-reduce over a *virtual* broadcast of the
+    block factor, then the diagonal elementwise.  This exact graph shape
+    is load-bearing: it is the same program as the dense einsum it
+    replaced, which is what makes the factored path bitwise-equal to the
+    dense oracle (see kernels/ei_update/ref.py) — every family's
+    `apply_factored` must route through this one implementation."""
+    kf = z.shape[1]
+    blk = jnp.asarray(blk, z.dtype)[:kf, :kf]
+    coeff = jnp.broadcast_to(blk[None, :, :, None],
+                             (z.shape[0], kf, kf, z.shape[-1]))
+    out = jnp.einsum("bijd,bjd->bid", coeff, z)
+    return out * jnp.asarray(diag, z.dtype)[None, None, :]
+
+
 def family_name(sde) -> str:
     """Canonical short name of an SDE family instance ('vpsde' | 'cld' |
     'bdm' | ...): the request-surface key of multi-family serving
@@ -313,6 +329,28 @@ class LinearSDE:
         coeff: (B, *coeff_shape);  u: (B, *state_shape).
         """
         raise NotImplementedError
+
+    def apply_factored(self, blk: Array, diag: Array, u: Array) -> Array:
+        """Apply a *factored* canonical coefficient — a (k_max, k_max)
+        block factor and a (D,) diagonal factor, the exact decomposition
+        `repro.core.coeffs.factor_coeff` produces for this family — to a
+        native-basis state u (B, *state_shape), as two contractions.
+
+        This is the family-native oracle the differential test tier
+        (tests/test_factored_bank.py) pins the serving bank against: it
+        runs the block contraction as the same multiply-reduce program as
+        the bank path (kernels/ei_update, over a virtual broadcast of the
+        block factor), so it is *bitwise* equal to the dense embedding it
+        replaced, and — because one of the two factors is always trivial —
+        bitwise equal to `apply(c, u)` for scalar/freq-diagonal families
+        (block families' native dot_general differs in the last ulp, a
+        property the dense bank had too).  Scalar/block families act in
+        their native linear basis (canonicalize is a pure reshape); BDM
+        overrides to act in its DCT frequency basis via the reference
+        dct_nd path.
+        """
+        z = self.canonicalize(u)                         # (B, kf, D)
+        return _apply_factored_canonical(blk, diag, z).reshape(u.shape)
 
     def noise_like(self, key: Array, u_shape: Tuple[int, ...], dtype=jnp.float32) -> Array:
         return jax.random.normal(key, u_shape, dtype)

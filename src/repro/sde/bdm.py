@@ -125,6 +125,20 @@ class BDM(LinearSDE):
         # coeff: (B, *freq_shape) broadcasts against the per-example spectrum
         return self.apply(coeff, u)
 
+    def apply_factored(self, blk: Array, diag: Array, u: Array) -> Array:
+        """Factored-coefficient application in BDM's linear basis (DCT
+        frequency space): `factor_coeff` gives freq-diagonal coefficients
+        the trivial e00 block and the real (D,) diagonal, so this is
+        `idct(diag * dct(u))` up to the exact 1-multiplications — bitwise
+        equal to `apply` (both ride the reference dct_nd path; the serving
+        engine's frequency-resident dct2-kernel path is pinned against
+        this oracle by tests/test_factored_bank.py)."""
+        from .base import _apply_factored_canonical
+        y = self.to_freq(u)
+        z = y.reshape(y.shape[0], 1, -1)
+        out = _apply_factored_canonical(blk, diag, z)
+        return self.from_freq(out.reshape(y.shape))
+
     def to_freq(self, u: Array) -> Array:
         axes = tuple(a + 1 for a in self.spatial_axes_in_data)
         return dct_nd(u, axes)

@@ -28,7 +28,8 @@ host only paces the loop.
     — VPSDE, CLD and BDM co-resident in one packed slot pool — NFE /
     multistep order q / corrector / stochasticity lambda), fed by the
     host-side Stage-I coefficient cache (`repro.core.coeffs.CoeffCache`)
-    whose multi-family `PackedBank` stacks every family's coefficients in
+    whose multi-family `FactoredBank` stacks every family's coefficients
+    as exact (K, K)-block x pooled-(D,)-diagonal factor pairs applied in
     the canonical (k, D) layout of `repro.kernels.ei_update`
 
 Both engines accept `mesh=` (see `repro.launch.mesh`) and then shard the

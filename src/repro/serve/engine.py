@@ -17,10 +17,11 @@ jitted round step (state.py, `make_token_round_step` /
   * `DiffusionEngine` — one gDDIM update for every active slot, each at its
     own step index k *and* its own sampler config (SDE family, NFE,
     multistep order q, corrector, stochasticity lambda); per-slot
-    Psi/pC/cC/B/P_chol rows are gathered from a stacked multi-family
-    `PackedBank` by (state.cfg[b], state.k[b]), slots live in the canonical
-    packed (K, D) layout shared by every family, and a round dispatches one
-    compiled variant per (family, corrector) class present in the batch.
+    Psi/pC/cC/B/P_chol factor pairs are gathered from a stacked
+    multi-family `FactoredBank` by (state.cfg[b], state.k[b]), slots live
+    in the canonical packed (K, D) layout shared by every family, and a
+    round dispatches one compiled variant per (family, corrector) class
+    present in the batch.
 
 Steady-state data flow: the round step consumes and returns the EngineState
 (donated, so u/hist/caches update in place with no per-step copy) and the
@@ -397,12 +398,17 @@ class DiffusionEngine(ServeLoop):
     evaluation per resident family per round.
 
     Coefficients come from a host-side `CoeffCache` (Stage-I quadrature run
-    once per distinct config) whose stacked multi-family `PackedBank` is
-    padded to bucketed shapes and passed to the jitted step as an argument
-    — so admitting a config the engine has never seen refreshes the bank
+    once per distinct config) whose stacked multi-family `FactoredBank` —
+    (K, K) block factors plus a deduplicated (D,) diagonal pool, ~D-fold
+    smaller device-resident than the dense layout it replaced — is padded
+    to bucketed shapes and passed to the jitted step as an argument, so
+    admitting a config the engine has never seen refreshes the bank
     *contents* without recompiling, as long as the new config fits the
-    warmed buckets (`PackedBank.shape_key`; a bucket overflow costs one
-    recompile, then the doubled bucket absorbs further growth).  The
+    warmed buckets (`FactoredBank.shape_key`; a bucket overflow — incl.
+    the diag pool's, which only first-seen BDM-family configs can grow —
+    costs one recompile, then the doubled bucket absorbs further growth;
+    registration appends factored rows instead of restacking the bank).
+    The
     corrector needs a second model evaluation per step, so each family has
     two jit variants (static `with_corrector`); each round dispatches per
     family on whether any of *its* active slots wants the corrector —
@@ -488,7 +494,7 @@ class DiffusionEngine(ServeLoop):
         k_max = self.cache.k_max
         data_dim = int(np.prod(self._data_shape))
         state = diffusion_state_init(batch_size, k_max, data_dim,
-                                     self.cache.packed_bank.pC.shape[2])
+                                     self.cache.factored_bank.pC_blk.shape[2])
         state_sh = None
         if mesh is not None:
             params = {n: jax.device_put(
@@ -570,18 +576,19 @@ class DiffusionEngine(ServeLoop):
 
     # ---- coefficient-bank placement ----------------------------------------
     def _refresh_bank(self) -> None:
-        """Re-place the stacked bank on device when the CoeffCache restacked
-        it (a new config was registered), and grow the state's eps-history
-        bucket if the bank's Qb bucket grew (one-time warmup shape change)."""
-        bank = self.cache.packed_bank
+        """Re-place the factored bank on device when the CoeffCache grew it
+        (a new config appended rows / pool entries), and grow the state's
+        eps-history bucket if the bank's Qb bucket grew (one-time warmup
+        shape change)."""
+        bank = self.cache.factored_bank
         if bank is self._bank_src:
             return
         self._bank_src = bank
         if self.mesh is not None:
             bank = jax.device_put(
-                bank, jax.tree.map(lambda _: shd.replicated(self.mesh), bank))
+                bank, shd.bank_shardings(self.mesh, self.shard_cfg, bank))
         self._bank = bank
-        qb = bank.pC.shape[2]
+        qb = bank.pC_blk.shape[2]
         hist = self.state.hist
         if hist.shape[1] < qb:
             pad = jnp.zeros((self.batch_size, qb - hist.shape[1])

@@ -73,7 +73,8 @@ class DiffusionState(NamedTuple):
                                 prod(data_shape); padding rows stay zero
       hist    (B, Qb, K, D)     multistep eps history, hist[:, j] ~ eps(t_{i+j})
       k       (B,) int32        per-slot sampler step index
-      cfg     (B,) int32        per-slot config row in the coefficient bank
+      cfg     (B,) int32        per-slot config row in the factored
+                                coefficient bank (`FactoredBank`)
       fam     (B,) int32        per-slot SDE family id (`CoeffCache.families`
                                 order) — selects which (family, corrector)
                                 round-step variant commits the slot's update

@@ -1,0 +1,28 @@
+"""Shared test configuration: hypothesis example-budget profiles.
+
+The property/differential suites (test_properties.py,
+test_factored_bank.py) leave `max_examples` unset in their per-test
+`@settings(...)` so the *active profile* governs the budget:
+
+  * ``dev`` (default) — small budget, random seeds: the local tier-1 run.
+  * ``ci``            — pinned larger budget, **derandomized** (fixed
+                        example sequence, reproducible across runs): the
+                        CI hypothesis job selects it via
+                        ``HYPOTHESIS_PROFILE=ci``.
+
+hypothesis is an optional dev dependency (requirements-dev.txt); without
+it this module is a no-op and the suites skip themselves.
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:                                   # pragma: no cover
+    pass
+else:
+    _common = dict(deadline=None,
+                   suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile("dev", max_examples=12, **_common)
+    settings.register_profile("ci", max_examples=40, derandomize=True,
+                              print_blob=True, **_common)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))

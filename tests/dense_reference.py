@@ -1,0 +1,213 @@
+"""The PR-4 dense `PackedBank` layer, preserved verbatim as a test oracle.
+
+The production bank is the exact *factored* form
+(`repro.core.coeffs.FactoredBank`: a (K, K) block factor times a pooled
+(D,) diagonal factor per coefficient row, applied as two contractions).
+Its correctness story is differential — factored == dense == family-native,
+bit-exact — so the dense builder and the dense bank-mode serve step the
+engine used through PR 4 live on here, under tests/, as the comparison
+point (tests/test_factored_bank.py, tests/test_coeff_cache.py,
+tests/test_properties.py).  Nothing in src/ imports this module; if the
+production layer ever drifts from this oracle the differential tier fails,
+and a reintroduced dense path fails the perf guard's `bank_bytes` gate.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.coeffs import CoeffCache, SamplerConfig
+from repro.kernels.ei_update.ops import apply_packed, pad_channels
+
+Array = jax.Array
+
+
+def pack_coeff(ops, coeff, data_shape: Tuple[int, ...],
+               k_max: int) -> np.ndarray:
+    """Embed a family coefficient into the dense canonical (k_max, k_max, D)
+    form acting on the packed (B, k, D) slot state (PR-4 layout):
+
+      scalar   c        ->  c at [0, 0, :]            (c * u, k = 1)
+      block    M (k,k)  ->  M broadcast over D        (M (x) I_D, k rows)
+      freqdiag d        ->  diag over D at [0, 0, :]  (elementwise in the
+                            DCT basis the BDM state is resident in)
+    """
+    D = int(np.prod(data_shape))
+    out = np.zeros((k_max, k_max, D), np.float64)
+    coeff = np.asarray(coeff, np.float64)
+    if ops.family == "scalar":
+        out[0, 0, :] = float(coeff)
+    elif ops.family == "block":
+        k = coeff.shape[-1]
+        out[:k, :k, :] = coeff[..., None]
+    elif ops.family == "freqdiag":
+        out[0, 0, :] = np.broadcast_to(coeff, data_shape).reshape(-1)
+    else:
+        raise ValueError(f"unknown coeff family {ops.family!r}")
+    return out
+
+
+class DensePackedBank(NamedTuple):
+    """The PR-4 dense multi-family bank: every coefficient embedded into
+    (k_max, k_max, D) — K*K*D floats per row, the layout `FactoredBank`
+    replaced."""
+    t_cur: jnp.ndarray
+    t_nxt: jnp.ndarray
+    psi: jnp.ndarray
+    pC: jnp.ndarray
+    cC: jnp.ndarray
+    B: jnp.ndarray
+    P_chol: jnp.ndarray
+    n_steps: jnp.ndarray
+    stochastic: jnp.ndarray
+    corrector: jnp.ndarray
+    fam: jnp.ndarray
+
+
+def build_dense_bank(cache: CoeffCache) -> DensePackedBank:
+    """Stack every registered config of `cache` into the PR-4 dense layout
+    (verbatim port of the retired `CoeffCache._build_packed_bank`)."""
+    if cache.data_shape is None:
+        raise ValueError("dense reference bank needs data_shape=")
+    Cb, Nb, Qb = cache._bucket_shapes()
+    K = cache.k_max
+    D = int(np.prod(cache.data_shape))
+    kk = (K, K, D)
+
+    t_cur = np.zeros((Cb, Nb), np.float64)
+    t_nxt = np.zeros((Cb, Nb), np.float64)
+    psi = np.zeros((Cb, Nb) + kk, np.float64)
+    pC = np.zeros((Cb, Nb, Qb) + kk, np.float64)
+    cC = np.zeros((Cb, Nb, Qb) + kk, np.float64)
+    B = np.zeros((Cb, Nb) + kk, np.float64)
+    P_chol = np.zeros((Cb, Nb) + kk, np.float64)
+    n_steps = np.ones((Cb,), np.int32)
+    stoch = np.zeros((Cb,), bool)
+    corr = np.zeros((Cb,), bool)
+    fam = np.zeros((Cb,), np.int32)
+
+    for c, cfg in enumerate(cache.configs):
+        co = cache.get(cfg)
+        name = cache.resolve(cfg)
+        ops = cache.sdes[name].ops
+        pk = lambda x: pack_coeff(ops, x, cache.data_shape, K)
+        N, q = cfg.nfe, cfg.q
+        ts = np.asarray(co.ts)
+        t_cur[c, :N] = ts[N - np.arange(N)]
+        t_cur[c, N:] = ts[1]
+        t_nxt[c, :N] = ts[N - 1 - np.arange(N)]
+        t_nxt[c, N:] = ts[0]
+        for k in range(N):
+            psi[c, k] = pk(np.asarray(co.psi)[k])
+            B[c, k] = pk(np.asarray(co.B)[k])
+            P_chol[c, k] = pk(np.asarray(co.P_chol)[k])
+            for j in range(q):
+                pC[c, k, j] = pk(np.asarray(co.pC)[k, j])
+                cC[c, k, j] = pk(np.asarray(co.cC)[k, j])
+        n_steps[c] = N
+        stoch[c] = cfg.lam > 0.0
+        corr[c] = cfg.corrector
+        fam[c] = cache.fam_index(name)
+
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    return DensePackedBank(
+        t_cur=f32(t_cur), t_nxt=f32(t_nxt), psi=f32(psi), pC=f32(pC),
+        cC=f32(cC), B=f32(B), P_chol=f32(P_chol),
+        n_steps=jnp.asarray(n_steps),
+        stochastic=jnp.asarray(stoch), corrector=jnp.asarray(corr),
+        fam=jnp.asarray(fam))
+
+
+def make_dense_bank_step(spec):
+    """The PR-4 bank-mode gDDIM serve step: identical arithmetic to the
+    production `make_diffusion_serve_step` bank mode, but gathering dense
+    (B, kf, kf, D) coefficient rows and applying them via `apply_packed`'s
+    single einsum."""
+    sde = spec.sde
+    kf = sde.packed_k
+    data_shape = tuple(spec.data_shape)
+    state_shape = sde.state_shape(data_shape)
+
+    def bank_step(params, u, hist, k, cfg, keys, bank, with_corrector=False):
+        K = u.shape[1]
+        kc = jnp.clip(jnp.asarray(k), 0, bank.n_steps[cfg] - 1)
+        t = bank.t_cur[cfg, kc]
+        ub = u[:, :kf]
+        gat = lambda leaf: leaf[cfg, kc][:, :kf, :kf, :]
+        gatq = lambda leaf, j: leaf[cfg, kc, j][:, :kf, :kf, :]
+        pad = lambda z: pad_channels(z, K)
+
+        eps = spec.eps_model(params, sde.decanonicalize(ub, data_shape), t)
+        eps_c = sde.canonicalize(eps)
+        hist = jnp.concatenate([pad(eps_c)[:, None], hist[:, :-1]], axis=1)
+        Qb = hist.shape[1]
+
+        u_lin = apply_packed(gat(bank.psi), ub)
+        u_pred = u_lin
+        for j in range(Qb):
+            u_pred = u_pred + apply_packed(gatq(bank.pC, j),
+                                           hist[:, j, :kf])
+        noise = jax.vmap(
+            lambda key, kk: sde.noise_like(jax.random.fold_in(key, kk),
+                                           state_shape, u.dtype))(keys, kc)
+        u_sto = u_lin + apply_packed(gat(bank.B), eps_c) \
+            + apply_packed(gat(bank.P_chol), sde.canonicalize(noise))
+        bmask = lambda m: m.reshape((-1, 1, 1))
+        u_next = jnp.where(bmask(bank.stochastic[cfg]), u_sto, u_pred)
+
+        if with_corrector:
+            eps_n = spec.eps_model(
+                params, sde.decanonicalize(u_pred, data_shape),
+                bank.t_nxt[cfg, kc])
+            u_corr = u_lin + apply_packed(gatq(bank.cC, 0),
+                                          sde.canonicalize(eps_n))
+            for j in range(1, Qb):
+                u_corr = u_corr + apply_packed(gatq(bank.cC, j),
+                                               hist[:, j - 1, :kf])
+            use_c = bank.corrector[cfg] & (kc < bank.n_steps[cfg] - 1)
+            u_next = jnp.where(bmask(use_c), u_corr, u_next)
+        return jnp.concatenate([u_next, u[:, kf:]], axis=1), hist
+
+    return bank_step
+
+
+NOISE_SALT = 0x5EED          # DiffusionEngine._NOISE_SALT
+
+
+def dense_reference_sample(spec, params, cache: CoeffCache,
+                           bank: DensePackedBank, cfg: SamplerConfig,
+                           seed: int, batch: int = 1) -> np.ndarray:
+    """One request served by a PR-4 dense-bank 'engine': the exact per-slot
+    data flow of `DiffusionEngine` (prior from PRNGKey(seed), noise key
+    fold_in(seed, NOISE_SALT), one bank step per round, final projection)
+    against the dense bank.  `cfg` must already be registered in `cache`.
+    `batch` pads the step to the engine's slot-batch width (row 0 carries
+    the request, the rest are dead rows) so the comparison also covers any
+    batch-width dependence of the score net."""
+    sde = spec.sde
+    K = bank.psi.shape[2]
+    D = bank.psi.shape[4]
+    Qb = bank.pC.shape[2]
+    ci = cache.index_of(cfg)
+    dshape = tuple(spec.data_shape)
+
+    base = jax.random.PRNGKey(seed)
+    prior = jax.jit(lambda key: pad_channels(
+        sde.canonicalize(sde.prior_sample(key, 1, dshape)), K))
+    u = jnp.zeros((batch, K, D), jnp.float32).at[0].set(prior(base)[0])
+    hist = jnp.zeros((batch, Qb, K, D), jnp.float32)
+    keys = jnp.broadcast_to(jax.random.fold_in(base, NOISE_SALT),
+                            (batch, 2))
+    step = jax.jit(make_dense_bank_step(spec),
+                   static_argnames=("with_corrector",))
+    for k in range(cfg.nfe):
+        u, hist = step(params, u, hist,
+                       jnp.full((batch,), k, jnp.int32),
+                       jnp.full((batch,), ci, jnp.int32), keys, bank,
+                       with_corrector=cfg.corrector)
+    out = sde.project_data(
+        sde.decanonicalize(u[:1, :sde.packed_k], dshape))
+    return np.asarray(out[0])

@@ -9,9 +9,11 @@ mix (see tests/test_serve_engine.py for the engine-level lockdown).
 import numpy as np
 import pytest
 
+from dense_reference import pack_coeff
 from repro.core import (CoeffCache, SamplerConfig, bucket_size,
-                        build_sampler_coeffs, pack_coeff, time_grid)
-from repro.core.coeffs import C_BUCKET_MIN, N_BUCKET_MIN, Q_BUCKET_MIN
+                        build_sampler_coeffs, time_grid)
+from repro.core.coeffs import (C_BUCKET_MIN, DIAG_BUCKET_MIN, N_BUCKET_MIN,
+                               Q_BUCKET_MIN)
 from repro.sde import VPSDE, CLD, BDM
 
 
@@ -128,7 +130,7 @@ def test_sampler_config_validation(bad):
 
 
 # ---------------------------------------------------------------------------
-# multi-family cache: one PackedBank stacking VPSDE + CLD + BDM configs
+# multi-family cache: one FactoredBank stacking VPSDE + CLD + BDM configs
 # ---------------------------------------------------------------------------
 DATA_SHAPE = (4, 4, 3)
 
@@ -154,28 +156,32 @@ def test_multi_family_keys_and_resolution():
         cache.resolve(SamplerConfig(nfe=4, family="edm"))
 
 
-def test_multi_family_bank_requires_packed():
+def test_multi_family_bank_requires_factored():
     cache = _multi_cache()
     cache.index_of(SamplerConfig(nfe=4))
-    with pytest.raises(ValueError, match="packed_bank"):
+    with pytest.raises(ValueError, match="factored_bank"):
         cache.bank                                  # family-native shapes
-    bank = cache.packed_bank                        # canonical shapes work
+    bank = cache.factored_bank                      # canonical shapes work
     D = int(np.prod(DATA_SHAPE))
-    assert bank.psi.shape[2:] == (2, 2, D)
-    Cb, Nb, Qb = bank.psi.shape[0], bank.psi.shape[1], bank.pC.shape[2]
-    assert bank.shape_key == (Cb, Nb, Qb, 2, D)
+    assert bank.psi_blk.shape[2:] == (2, 2)
+    assert bank.diag.shape[1] == D
+    Cb, Nb = bank.psi_blk.shape[:2]
+    Qb, Pb = bank.pC_blk.shape[2], bank.diag.shape[0]
+    assert bank.shape_key == (Cb, Nb, Qb, 2, D, Pb)
 
 
-def test_packed_bank_rows_embed_family_coeffs():
-    """Packed rows must be `pack_coeff` embeddings of the family-native
-    Stage-I arrays, with `fam` recording each config's family index."""
+def test_factored_bank_rows_embed_family_coeffs():
+    """Materialized factored rows must be `pack_coeff` embeddings of the
+    family-native Stage-I arrays, with `fam` recording each config's
+    family index.  (The full bit-exact differential against the dense
+    PR-4 bank lives in tests/test_factored_bank.py.)"""
     cache = _multi_cache()
     cfgs = [SamplerConfig(nfe=4),
             SamplerConfig(nfe=5, family="cld", q=2),
             SamplerConfig(nfe=4, family="bdm"),
             SamplerConfig(nfe=4, family="vpsde", lam=0.5)]
     idx = [cache.index_of(c) for c in cfgs]
-    bank = cache.packed_bank
+    bank = cache.factored_bank
     K = cache.k_max
     for c, cfg in zip(idx, cfgs):
         name = cache.resolve(cfg)
@@ -185,28 +191,73 @@ def test_packed_bank_rows_embed_family_coeffs():
         assert int(bank.n_steps[c]) == cfg.nfe
         for k in range(cfg.nfe):
             np.testing.assert_allclose(
-                np.asarray(bank.psi[c, k]),
+                bank.materialize("psi", c, k),
                 pack_coeff(ops, np.asarray(co.psi, np.float64)[k],
                            DATA_SHAPE, K).astype(np.float32))
             for j in range(cfg.q):
                 np.testing.assert_allclose(
-                    np.asarray(bank.pC[c, k, j]),
+                    bank.materialize("pC", c, k, j),
                     pack_coeff(ops, np.asarray(co.pC, np.float64)[k, j],
                                DATA_SHAPE, K).astype(np.float32))
-        # padding beyond this config's rows is zero
-        assert not np.asarray(bank.pC[c, cfg.nfe:]).any()
-        assert not np.asarray(bank.pC[c, :cfg.nfe, cfg.q:]).any()
+            if cfg.lam > 0.0:                 # stochastic rows stay exact
+                np.testing.assert_allclose(
+                    bank.materialize("B", c, k),
+                    pack_coeff(ops, np.asarray(co.B, np.float64)[k],
+                               DATA_SHAPE, K).astype(np.float32))
+            else:                             # Eq. 22 branch masked off
+                assert not bank.materialize("B", c, k).any()
+        # padding beyond this config's rows is zero (block factor zero)
+        assert not np.asarray(bank.pC_blk[c, cfg.nfe:]).any()
+        assert not np.asarray(bank.pC_blk[c, :cfg.nfe, cfg.q:]).any()
 
 
 def test_single_family_cache_keeps_native_bank():
     """Back-compat: a single-family cache still exposes the family-native
-    CoeffBank AND (given data_shape) the packed bank."""
+    CoeffBank AND (given data_shape) the factored bank."""
     cache = CoeffCache(CLD(), data_shape=DATA_SHAPE)
     cache.index_of(SamplerConfig(nfe=4))
     assert cache.bank.psi.shape[2:] == (2, 2)
     D = int(np.prod(DATA_SHAPE))
-    assert cache.packed_bank.psi.shape[2:] == (2, 2, D)
+    bank = cache.factored_bank
+    assert bank.psi_blk.shape[2:] == (2, 2)
+    # a pure scalar/block cache needs only the shared all-ones pool row
+    assert bank.diag.shape == (DIAG_BUCKET_MIN, D)
     assert cache.sde is cache.sdes["cld"]
+
+
+def test_factored_bank_registration_is_incremental():
+    """Satellite lockdown: registration appends factored rows (memoized
+    per config) instead of restacking the whole bank; only a bucket
+    overflow re-pads every row.  `bank_restack_rows` counts the rows
+    (re)written — the deterministic counter the perf guard gates."""
+    cache = _multi_cache()
+    cache.index_of(SamplerConfig(nfe=4))
+    b1 = cache.factored_bank
+    assert cache.bank_restack_rows == 1
+    assert cache.factored_bank is b1          # no growth -> identical obj
+
+    # three more configs inside every bucket: pure appends (3 new rows),
+    # and the already-registered config is NOT rewritten
+    for cfg in (SamplerConfig(nfe=8), SamplerConfig(nfe=6, q=2),
+                SamplerConfig(nfe=5, family="cld")):
+        cache.index_of(cfg)
+    b2 = cache.factored_bank
+    assert b2 is not b1
+    assert cache.bank_restack_rows == 4
+    assert b2.shape_key == b1.shape_key
+
+    # C-bucket overflow (5th config): every row re-padded once
+    cache.index_of(SamplerConfig(nfe=3))
+    b3 = cache.factored_bank
+    assert cache.bank_restack_rows == 4 + 5
+    assert b3.shape_key != b2.shape_key
+
+    # a first-seen BDM config appends rows AND grows the diag pool; the
+    # block/index layout is untouched (no re-pad of existing rows)
+    cache.index_of(SamplerConfig(nfe=4, family="bdm"))
+    b4 = cache.factored_bank
+    assert cache.bank_restack_rows == 4 + 5 + 1
+    assert b4.diag.shape[0] > b3.diag.shape[0]
 
 
 def test_kt_mapping_must_cover_families():

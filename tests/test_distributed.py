@@ -12,8 +12,8 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
-from repro.distributed.sharding import (ShardCfg, param_spec, batch_spec,
-                                        kv_cache_spec)
+from repro.distributed.sharding import (ShardCfg, bank_shardings, param_spec,
+                                        batch_spec, kv_cache_spec)
 
 MESH = AbstractMesh((("data", 16), ("model", 16)))
 MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
@@ -71,6 +71,25 @@ class TestActivationRules:
     def test_batch_one_unsharded(self):
         s = batch_spec(MESH, CFG, 2, 1)
         assert s[0] is None
+
+    def test_bank_shardings_replicate_with_optional_diag_split(self):
+        """FactoredBank placement: every factor/index leaf replicates; the
+        (P, D) diag pool — the only D-scaled leaf — replicates by default
+        and D-shards over the tp axis only on opt-in when divisible."""
+        from repro.core import CoeffCache, SamplerConfig
+        from repro.sde import VPSDE
+        cache = CoeffCache(VPSDE(), data_shape=(8, 8, 3))   # D=192
+        cache.index_of(SamplerConfig(nfe=4))
+        bank = cache.factored_bank
+        sh = bank_shardings(MESH, CFG, bank)
+        assert all(getattr(sh, f).spec == P() for f in bank._fields)
+        sh = bank_shardings(MESH, CFG, bank, shard_diag=True)
+        assert sh.diag.spec == P(None, "model")             # 192 % 16 == 0
+        assert sh.psi_blk.spec == P()
+        # indivisible D falls back to replication
+        odd = bank._replace(diag=jnp.zeros((1, 7), jnp.float32))
+        sh = bank_shardings(MESH, CFG, odd, shard_diag=True)
+        assert sh.diag.spec == P()
 
     def test_kv_cache_heads_or_seq(self):
         # enough heads: shard heads over model

@@ -318,6 +318,69 @@ class TestExactRecovery:
 
 
 # ---------------------------------------------------------------------------
+# Golden values: closed forms / slow quadrature, independent of any bank
+# ---------------------------------------------------------------------------
+class TestGoldenValues:
+    """The sampler-coefficient layer's anchor tests: Stage-I output pinned
+    directly against the analytic DDIM update of Song et al. (2010.02502)
+    and against an independent slow float64 quadrature — no CoeffCache, no
+    bank (dense or factored) in the loop, so a defect in either bank
+    implementation cannot mask a defect in the coefficients themselves."""
+
+    def test_vpsde_lambda0_step_coefficients_match_song_ddim(self, vp):
+        """Per step t_i -> t_{i-1}, the gDDIM (lam=0, q=1) update on VPSDE
+        must be exactly Song et al.'s Eq. 12 deterministic DDIM update
+          u <- sqrt(a_{i-1}/a_i) u + (sqrt(1-a_{i-1})
+                                      - sqrt(1-a_i) sqrt(a_{i-1}/a_i)) eps
+        (paper Prop 2): psi is the closed-form signal ratio and the
+        quadrature eps coefficient reproduces the closed form."""
+        ts = time_grid(vp, 12)
+        co = build_sampler_coeffs(vp, ts, q=1)
+        N = len(ts) - 1
+        i = N - np.arange(N)
+        a_t, a_s = vp.alpha(ts[i]), vp.alpha(ts[i - 1])
+        psi_gold = np.sqrt(a_s / a_t)
+        eps_gold = np.sqrt(1 - a_s) - np.sqrt(1 - a_t) * np.sqrt(a_s / a_t)
+        np.testing.assert_allclose(np.asarray(co.psi), psi_gold, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(co.pC[:, 0]), eps_gold,
+                                   rtol=2e-5, atol=1e-7)
+
+    def test_eq45_corrector_rows_match_slow_float64_quadrature(self, vp):
+        """Eq. 46's corrector constants (the Eq. 45 update's weights) must
+        match an independent slow reference: dense-trapezoid float64
+        quadrature of 1/2 Psi(t_{i-1}, tau) G2(tau) R(tau)^{-T} ell_j(tau)
+        with an inline Lagrange basis — nothing shared with the production
+        quadrature (composite Simpson + solve.lagrange_basis)."""
+        nfe, q = 6, 2
+        ts = time_grid(vp, nfe)
+        co = build_sampler_coeffs(vp, ts, q=q)
+
+        def core(t_end, tau):                      # the Eq. 41/46 integrand
+            return (0.5 * vp.Psi_np(t_end, tau) * vp.G2_np(tau)
+                    * vp.R_np(tau) / vp.Sigma_np(tau))
+
+        for k in (0, 2, nfe - 1):
+            i = nfe - k
+            t_i, t_im1 = float(ts[i]), float(ts[i - 1])
+            q_corr = min(q, nfe - i + 2)
+            nodes = [t_im1] + [float(ts[min(i + j, nfe)])
+                               for j in range(q_corr - 1)]
+            tau = np.linspace(t_i, t_im1, 20001)
+            for j in range(q_corr):
+                ell = np.ones_like(tau)
+                for m, tm in enumerate(nodes):
+                    if m != j:
+                        ell *= (tau - tm) / (nodes[j] - tm)
+                vals = core(t_im1, tau) * ell
+                ref = 0.5 * float(np.sum((vals[1:] + vals[:-1])
+                                         * np.diff(tau)))
+                assert float(co.cC[k, j]) == pytest.approx(
+                    ref, rel=5e-5, abs=1e-7), (k, j)
+            # beyond the warm-start order the rows are zero-padded
+            assert not np.asarray(co.cC[k, q_corr:]).any()
+
+
+# ---------------------------------------------------------------------------
 # Baselines behave
 # ---------------------------------------------------------------------------
 class TestBaselines:

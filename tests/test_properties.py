@@ -15,7 +15,9 @@ from repro.models import rwkv6, common
 from repro.kernels.ei_update.ref import ei_update_ref
 from repro.kernels.ei_update.kernel import ei_update
 
-SLOW = dict(deadline=None, max_examples=12,
+# example budget comes from the active hypothesis profile (tests/conftest.py:
+# `dev` = small local budget, `ci` = the CI job's pinned derandomized budget)
+SLOW = dict(deadline=None,
             suppress_health_check=[HealthCheck.too_slow])
 
 ts_strategy = st.floats(min_value=1e-3, max_value=0.999)
@@ -122,6 +124,27 @@ class TestKernelProperties:
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=1e-5, atol=1e-5)
 
+    @given(
+        B=st.integers(min_value=1, max_value=3),
+        k=st.sampled_from([1, 2]),
+        D=st.sampled_from([64, 100, 256]),
+        seed=st.integers(min_value=0, max_value=2**30),
+    )
+    @settings(**SLOW)
+    def test_apply_factored_kernel(self, B, k, D, seed):
+        """The fused factored-coefficient Pallas kernel (block contraction
+        + diagonal scale in one VMEM pass) matches the reference path."""
+        from repro.kernels.ei_update.kernel import apply_factored
+        from repro.kernels.ei_update.ref import apply_factored_ref
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        z = jax.random.normal(ks[0], (B, k, D))
+        blk = jax.random.normal(ks[1], (B, k, k))
+        diag = jax.random.normal(ks[2], (B, D))
+        ref = apply_factored_ref(blk, diag, z)
+        out = apply_factored(blk, diag, z, block_d=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
 
 class TestPackingProperties:
     """The family-generic packing layer behind multi-family serving
@@ -156,12 +179,18 @@ class TestPackingProperties:
         family=st.sampled_from(["scalar", "block", "freqdiag"]),
     )
     @settings(**SLOW)
-    def test_packed_coeff_matches_family_native_apply(self, B, seed, family):
-        """pack_coeff's dense (k_max, k_max, D) embedding applied via
-        apply_packed equals the family's native structured apply."""
-        from repro.core import pack_coeff
-        from repro.kernels.ei_update.ops import apply_packed, pad_channels
+    def test_factored_coeff_matches_family_native_apply(self, B, seed,
+                                                        family):
+        """factor_coeff's (k_max, k_max)-block x pooled-(D,)-diagonal pair
+        applied via apply_factored equals the family's native structured
+        apply AND the dense embedding it replaced (the full bit-exact
+        differential tier lives in tests/test_factored_bank.py)."""
+        from dense_reference import pack_coeff
+        from repro.core import factor_coeff
+        from repro.kernels.ei_update.ops import (apply_factored,
+                                                 apply_packed, pad_channels)
         data_shape, k_max = (4, 4, 3), 2
+        D = int(np.prod(data_shape))
         rng = np.random.default_rng(seed)
         if family == "scalar":
             sde, coeff = VPSDE(), np.float64(rng.standard_normal())
@@ -173,14 +202,23 @@ class TestPackingProperties:
         u = jax.random.normal(jax.random.PRNGKey(seed),
                               (B,) + sde.state_shape(data_shape))
         ref = sde.apply(jnp.asarray(coeff, jnp.float32), u)
-        packed = jnp.asarray(pack_coeff(sde.ops, coeff, data_shape, k_max),
-                             jnp.float32)
-        # canonicalize (BDM: DCT basis), apply, decanonicalize
+        blk64, diag64 = factor_coeff(sde.ops, coeff, data_shape, k_max)
+        blk = jnp.broadcast_to(jnp.asarray(blk64, jnp.float32),
+                               (B, k_max, k_max))
+        diag = jnp.ones((D,), jnp.float32) if diag64 is None \
+            else jnp.asarray(diag64, jnp.float32)
+        diag = jnp.broadcast_to(diag, (B, D))
+        # canonicalize (BDM: DCT basis), apply the factor pair, decanonicalize
         z = pad_channels(sde.canonicalize(u), k_max)
-        out = apply_packed(jnp.broadcast_to(packed, (B,) + packed.shape), z)
+        out = apply_factored(blk, diag, z, impl="ref")
         got = sde.decanonicalize(out[:, :sde.packed_k], data_shape)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=1e-4, atol=1e-5)
+        # bitwise vs the dense oracle layout
+        packed = jnp.asarray(pack_coeff(sde.ops, coeff, data_shape, k_max),
+                             jnp.float32)
+        dense = apply_packed(jnp.broadcast_to(packed, (B,) + packed.shape), z)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(dense))
 
 
 class TestSchedulerProperties:

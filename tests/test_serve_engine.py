@@ -424,12 +424,15 @@ def test_multi_family_zero_recompiles_after_variant_warmup(family_parts):
     anything new."""
     specs, params = family_parts
     engine = DiffusionEngine(specs, params, batch_size=2, nfe=6)
-    # warmup: every (family, corrector) variant in traffic, and a 5th
-    # config to push the config bucket to 8 so live traffic can register
-    # new configs without overflowing it
+    # warmup: every (family, corrector) variant in traffic, a 5th config
+    # to push the config bucket to 8 so live traffic can register new
+    # configs without overflowing it, and a tall-NFE BDM config so the
+    # factored bank's diag-pool bucket has headroom for the unseen BDM
+    # NFE below (only freq-diagonal configs occupy pool rows; a pool
+    # bucket overflow recompiles like any other bucket overflow)
     engine.serve([SampleRequest(rid=-1, seed=0),
                   SampleRequest(rid=-2, seed=1, family="cld"),
-                  SampleRequest(rid=-3, seed=2, family="bdm"),
+                  SampleRequest(rid=-3, seed=2, family="bdm", nfe=16),
                   SampleRequest(rid=-4, seed=3, family="cld",
                                 corrector=True),
                   SampleRequest(rid=-5, seed=4, nfe=4)])

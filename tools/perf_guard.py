@@ -13,11 +13,17 @@ times in the records are reported but never gated).
 Rules, per record matched by `config`:
 
   * `recompiles_after_warmup`, `rounds`, `dispatches`, `polls`,
-    `n_prefills` — must not exceed the baseline (a decrease is an
-    improvement and passes; commit the fresh JSON to ratchet it in).
-  * `n_requests`, `n_configs`, `batch`, `nfe` — schedule identity; any
-    drift means the benchmark no longer measures the same thing and the
-    baseline must be regenerated deliberately, so a mismatch fails.
+    `n_prefills`, `bank_bytes`, `bank_restack_rows` — must not exceed the
+    baseline (a decrease is an improvement and passes; commit the fresh
+    JSON to ratchet it in).  `bank_bytes` is the device-resident size of
+    the factored coefficient bank — a reintroduced dense bank layout
+    blows it up ~D-fold and fails here.
+  * `n_requests`, `n_configs`, `batch`, `nfe`, `bank_bytes_dense` —
+    schedule/layout identity; any drift means the benchmark no longer
+    measures the same thing and the baseline must be regenerated
+    deliberately, so a mismatch fails.  (`bank_bytes_dense` is the
+    analytic dense-equivalent byte count — the denominator of the
+    factored bank's committed >= 100x residency win.)
   * a baseline config missing from the fresh run fails (a silently dropped
     row is how perf coverage rots); fresh-only configs are reported but
     pass (new rows land with their own baseline in the same PR).
@@ -29,8 +35,8 @@ import sys
 from typing import Dict, List
 
 BOUNDED = ("recompiles_after_warmup", "rounds", "dispatches", "polls",
-           "n_prefills")
-EXACT = ("n_requests", "n_configs", "batch", "nfe")
+           "n_prefills", "bank_bytes", "bank_restack_rows")
+EXACT = ("n_requests", "n_configs", "batch", "nfe", "bank_bytes_dense")
 
 
 def _records(path: str) -> Dict[str, dict]:
