@@ -14,9 +14,8 @@ from typing import Callable, Dict
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.sde import VPSDE, CLD, BDM, GaussianMixture, ExactScore
+from repro.sde import GaussianMixture, ExactScore
 from repro.core import build_sampler_coeffs, time_grid
 
 

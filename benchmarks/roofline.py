@@ -8,7 +8,6 @@ import os
 import sys
 from typing import Dict, List
 
-from repro.launch import hlo_analysis as ha
 
 
 def load(path: str) -> List[dict]:

@@ -41,6 +41,11 @@ baseline — timing-free, so the guard is stable on shared runners:
     `gddim_bank_cifar10` record sizes the same menu at the paper's full
     (32, 32, 3) data shape — pure host-side accounting, where the factored
     form's >= 100x residency cut is the committed baseline.
+  * `variant_hashes` / `n_variants` — on the fam_mix record: the jaxpr
+    structural hash of every (family, corrector) round-step compile bucket
+    (computed by `tools.staticcheck.jaxprcheck.jaxpr_hash`, the same hash
+    the `--sanitize` layer prints).  The guard gates the bucket count
+    exactly; the hashes let a reviewer see *which* bucket a PR re-traced.
 
 Reduced CPU configs: the numbers are for *relative* tracking (batch scaling,
 homogeneous vs mixed traffic, regression against the per-request loop), not
@@ -219,6 +224,25 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
     B = 4
     n_fam_requests = 8
     engine = DiffusionEngine(fam_specs, fam_params, batch_size=B, nfe=nfe)
+
+    # record one call per (family, corrector) step variant so the jaxpr
+    # structural hash of every compile bucket lands in the JSON — the
+    # perf guard gates the bucket *count* (n_variants), and the hashes
+    # let a reviewer diff exactly which bucket changed PR-over-PR (the
+    # same hash tools/staticcheck --sanitize prints; docs/static_analysis.md)
+    step_calls: dict = {}
+
+    def _recording(fam, fn):
+        def call(*args, **kwargs):
+            k = f"step:{fam},corr={kwargs.get('with_corrector', False)}"
+            if k not in step_calls:
+                step_calls[k] = (fn, args, kwargs)
+            return fn(*args, **kwargs)
+        return call
+
+    engine._steps = {fam: _recording(fam, fn)
+                     for fam, fn in engine._steps.items()}
+
     engine.serve([SampleRequest(rid=-1 - i, seed=0, **kw)
                   for i, kw in enumerate(fam_mix)])         # warm every
     warm_stats = _stats_total(engine)                       # (fam, corr)
@@ -229,9 +253,14 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
     dt = time.perf_counter() - t0
     rounds = max(engine.n_rounds - r0, 1)
     us_step = 1e6 * dt / rounds
+    from tools.staticcheck.jaxprcheck import jaxpr_hash
+    variant_hashes = {k: jaxpr_hash(fn.trace(*a, **kw).jaxpr)
+                      for k, (fn, a, kw) in sorted(step_calls.items())}
     records.append({
         "workload": "diffusion",
         "config": f"gddim_fam_mix_B{B}", "batch": B, "nfe": nfe,
+        "variant_hashes": variant_hashes,
+        "n_variants": len(variant_hashes),
         "traffic": "multi-family",
         "families": list(engine.families),
         "us_per_round": round(us_step, 1),

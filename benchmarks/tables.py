@@ -6,7 +6,7 @@ Sampler quality is scored by sliced-W2 / mode recovery against ground truth
 """
 from __future__ import annotations
 
-from typing import Iterator, List
+from typing import Iterator
 
 import numpy as np
 import jax
@@ -14,8 +14,7 @@ import jax.numpy as jnp
 
 from repro.sde import VPSDE, CLD, BDM
 from repro.core import (sample_gddim, sample_gddim_stochastic, sample_em,
-                        sample_heun, sample_ancestral_bdm, sample_rk45_np,
-                        time_grid)
+                        sample_heun, sample_ancestral_bdm, sample_rk45_np)
 from .common import Bench, paper_mixture, image_mixture, timed
 
 
@@ -57,11 +56,11 @@ def table2_lambda(nfe=50, lams=(0.0, 0.1, 0.3, 0.5, 1.0)) -> Iterator[str]:
         else:
             fn = jax.jit(lambda u, k: sample_gddim_stochastic(
                 bench.sde, co, eps_fn, u, k))
-            u0, us = timed(fn, uT, key)
+            u0, us = timed(fn, uT, key)  # staticcheck: disable=SC101 (same noise stream across compared samplers)
         yield _row("tab2", f"gDDIM_lam={lam}", nfe, us, bench.score(u0))
         fn = jax.jit(lambda u, k: sample_em(bench.sde, co, eps_fn, u, k,
                                             lam=max(lam, 1e-6)))
-        u0, us = timed(fn, uT, key)
+        u0, us = timed(fn, uT, key)  # staticcheck: disable=SC101 (same noise stream across compared samplers)
         yield _row("tab2", f"EM_lam={lam}", nfe, us, bench.score(u0))
 
 
@@ -87,7 +86,7 @@ def table3_accelerate(nfes=(10, 20, 50, 100)) -> Iterator[str]:
             ts1, co1 = bench.coeffs(nfe, q=1, lam=1.0)
             eps1 = bench.eps_fn(ts1)
             fn = jax.jit(lambda u, k: sample_em(bench.sde, co1, eps1, u, k, lam=1.0))
-            u0, us = timed(fn, uT, key)
+            u0, us = timed(fn, uT, key)  # staticcheck: disable=SC101 (same noise stream across compared samplers)
             yield _row("tab3", f"{dm_name}_EM", nfe, us, bench.score(u0))
             # 2nd-order Heun (Karras-style, NFE ~ 2N-1 -> use N=nfe//2)
             tsh, coh = bench.coeffs(max(nfe // 2, 2), q=1)
@@ -99,7 +98,7 @@ def table3_accelerate(nfes=(10, 20, 50, 100)) -> Iterator[str]:
             if dm_name == "BDM":
                 fn = jax.jit(lambda u, k: sample_ancestral_bdm(
                     bench.sde, eps_fn, u, np.asarray(ts), k))
-                u0, us = timed(fn, uT, key)
+                u0, us = timed(fn, uT, key)  # staticcheck: disable=SC101 (same noise stream across compared samplers)
                 yield _row("tab3", f"{dm_name}_ancestral", nfe, us, bench.score(u0))
         # RK45 probability flow (host, adaptive — NFE is whatever it takes)
         u0_np, nfe_rk = sample_rk45_np(bench.sde, bench.oracle.score_np,

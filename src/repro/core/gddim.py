@@ -21,8 +21,7 @@ Implemented:
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import numpy as np
 import jax

@@ -18,12 +18,11 @@ CPU mesh and is the documented scale-out path for llama3-405b beyond 2 pods.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 Array = jax.Array

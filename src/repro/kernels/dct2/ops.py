@@ -24,6 +24,26 @@ def dct2(x: Array, inverse: bool = False, impl: str = "auto") -> Array:
     return _ref.idct2_ref(x) if inverse else _ref.dct2_ref(x)
 
 
+def staticcheck_entries():
+    """Named Pallas traces at representative serve shapes for
+    tools/staticcheck's kernel checks.  Trace-only (jax.make_jaxpr of the
+    pallas impl): runs on any backend, nothing is lowered or executed."""
+    import jax.numpy as jnp
+    B, H, W, Ch, q = 4, 32, 32, 3, 2    # CIFAR frame, q=2 multistep
+    x = jnp.zeros((B, Ch, H, W), jnp.float32)
+    u = jnp.zeros((B, H, W, Ch), jnp.float32)
+    eps = jnp.zeros((q, B, H, W, Ch), jnp.float32)
+    psi = jnp.zeros((H, W, 1), jnp.float32)
+    C = jnp.zeros((q, H, W, 1), jnp.float32)
+    return [
+        ("kernels/dct2/dct2[B4,32x32x3]",
+         jax.make_jaxpr(lambda a: dct2(a, impl="pallas"))(x)),
+        ("kernels/dct2/bdm_ei_update[B4,q2,32x32x3]",
+         jax.make_jaxpr(lambda a, e, p, c: bdm_ei_update(
+             a, e, p, c, impl="pallas"))(u, eps, psi, C)),
+    ]
+
+
 def bdm_ei_update(u: Array, eps_hist: Array, psi: Array, C: Array,
                   impl: str = "auto") -> Array:
     impl = _resolve(impl)

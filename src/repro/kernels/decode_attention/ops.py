@@ -18,6 +18,27 @@ from .kernel import decode_attention as decode_attention_pallas
 Array = jax.Array
 
 
+def staticcheck_entries():
+    """Named Pallas traces at representative serve shapes for
+    tools/staticcheck's kernel checks.  Trace-only (jax.make_jaxpr of the
+    pallas impl): runs on any backend, nothing is lowered or executed."""
+    import jax.numpy as jnp
+    B, Hq, Hkv, S, Dh = 4, 8, 4, 512, 64
+    q = jnp.zeros((B, Hq, Dh), jnp.float32)
+    k = jnp.zeros((B, S, Hkv, Dh), jnp.float32)
+    v = jnp.zeros((B, S, Hkv, Dh), jnp.float32)
+    clen = jnp.zeros((B,), jnp.int32)
+    return [
+        ("kernels/decode_attention/decode[B4,Hq8,S512,Dh64]",
+         jax.make_jaxpr(lambda *a: decode_attention(*a, impl="pallas"))
+         (q, k, v, clen)),
+        ("kernels/decode_attention/decode_windowed[B4,Hq8,S512,Dh64]",
+         jax.make_jaxpr(lambda *a: decode_attention(*a, window=128,
+                                                    impl="pallas"))
+         (q, k, v, clen)),
+    ]
+
+
 def decode_attention(q: Array, k: Array, v: Array, cache_len,
                      window: Optional[int] = None,
                      impl: str = "auto") -> Array:

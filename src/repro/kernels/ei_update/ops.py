@@ -31,7 +31,6 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -108,6 +107,29 @@ def apply_factored(blk: Array, diag: Array, z: Array,
     if impl == "ref":
         return apply_factored_ref(blk, diag, z)
     raise ValueError(impl)
+
+
+def staticcheck_entries():
+    """Named Pallas traces at representative serve shapes for
+    tools/staticcheck's kernel checks.  Trace-only (jax.make_jaxpr of the
+    pallas impl): runs on any backend, nothing is lowered or executed."""
+    B, k, D, q = 4, 2, 3072, 2          # CIFAR row: D = 32*32*3, CLD k=2
+    z = jnp.zeros((B, k, D), jnp.float32)
+    blk = jnp.zeros((B, k, k), jnp.float32)
+    diag = jnp.zeros((B, D), jnp.float32)
+    eps = jnp.zeros((q, B, k, D), jnp.float32)
+    psi = jnp.zeros((k, k), jnp.float32)
+    C = jnp.zeros((q, k, k), jnp.float32)
+    return [
+        ("kernels/ei_update/apply_factored[B4,k2,D3072]",
+         jax.make_jaxpr(lambda b, d, s: apply_factored(b, d, s,
+                                                       impl="pallas"))
+         (blk, diag, z)),
+        ("kernels/ei_update/ei_update[B4,k2,q2,D3072]",
+         jax.make_jaxpr(lambda u, e, p, c: ei_update(u, e, p, c,
+                                                     impl="pallas"))
+         (z, eps, psi, C)),
+    ]
 
 
 def ei_update(u: Array, eps_hist: Array, psi: Array, C: Array,

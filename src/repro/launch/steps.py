@@ -45,15 +45,13 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..models.registry import Arch, ArchSpec, SHAPES
+from ..models.registry import Arch, SHAPES
 from ..optim.adamw import AdamWCfg, AdamWState, adamw_init, adamw_update
 from ..distributed import sharding as shd
 

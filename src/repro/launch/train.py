@@ -12,18 +12,17 @@ Examples (CPU-sized):
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from ..configs import get_arch, get_diffusion, ARCH_IDS
 from ..models.registry import Arch
 from ..optim.adamw import AdamWCfg, adamw_init
-from ..distributed.sharding import ShardCfg, param_shardings, batch_spec
+from ..distributed.sharding import ShardCfg, param_shardings
 from ..ckpt.store import CheckpointStore
 from ..data.pipeline import TokenPipeline, MixturePipeline
 from . import steps as steps_lib

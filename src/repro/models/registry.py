@@ -19,7 +19,6 @@ supplies precomputed frame/patch embeddings).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
@@ -27,8 +26,6 @@ import jax
 import jax.numpy as jnp
 
 from . import transformer, zoo
-from .transformer import TransformerCfg
-from .zoo import RWKV6LMCfg, Zamba2Cfg, EncDecCfg
 
 Array = jax.Array
 
@@ -87,7 +84,7 @@ class Arch:
         return f()
 
     def param_shapes(self) -> Any:
-        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))  # staticcheck: disable=SC102 (eval_shape: the key is abstract, no bits are ever drawn)
 
     def param_count(self) -> int:
         shapes = self.param_shapes()

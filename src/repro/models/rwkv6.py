@@ -20,7 +20,6 @@ propagate through a `lax.scan`.  `rwkv6_sequential` is the per-token oracle
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Optional, Tuple
 
 import jax

@@ -14,9 +14,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

@@ -24,10 +24,8 @@ and causal masking driven by `cache_len` so the unwritten tail never leaks.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

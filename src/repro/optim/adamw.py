@@ -14,7 +14,7 @@ distributed/sharding.py apply verbatim (opt state inherits the param spec).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -333,10 +333,11 @@ class TokenEngine(ServeLoop):
         if not busy:
             return 0
         # the one steady-state device fetch: the done/progress mask
-        active, n_out = jax.device_get((self.state.active, self.state.n_out))
+        active, n_out = jax.device_get(  # staticcheck: disable=SC103 (the one sanctioned steady-state fetch: done/progress mask, once per poll)
+            (self.state.active, self.state.n_out))
         finished = [s for s in busy if not active[s.index]]
         if finished:
-            out = jax.device_get(self.state.out)
+            out = jax.device_get(self.state.out)  # staticcheck: disable=SC103 (terminal drain: runs only when a request finished, not steady-state)
             for s in finished:
                 n = int(n_out[s.index])
                 results[s.request.rid] = out[s.index, :n].astype(np.int32)
@@ -667,7 +668,7 @@ class DiffusionEngine(ServeLoop):
             with self._ctx():
                 row = self._project_row[s.data["family"]](self.state.u,
                                                           s.index)
-            results[s.request.rid] = np.asarray(row)
+            results[s.request.rid] = np.asarray(row)  # staticcheck: disable=SC103 (terminal result materialization at slot release, not steady-state)
             self.n_samples_out += 1
             self.slots.release(s.index)
         return len(done)

@@ -34,7 +34,7 @@ verbatim until the host fetches them and re-admits into the row.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

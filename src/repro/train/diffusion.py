@@ -14,8 +14,7 @@ for inference) are built host-side once and cached on the spec.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import numpy as np
 import jax
@@ -49,7 +48,7 @@ class DiffusionSpec:
         return score_net.dit_init(key, self.score_cfg)
 
     def param_shapes(self):
-        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))  # staticcheck: disable=SC102 (eval_shape: the key is abstract, no bits are ever drawn)
 
     def eps_model(self, params: Any, u: Array, t: Array) -> Array:
         if self.score_family == "mlp":
@@ -89,7 +88,8 @@ class DiffusionSpec:
         ts = time_grid(self.sde, nfe, grid)
         co = build_sampler_coeffs(self.sde, ts, q=q, lam=lam, kt=self.kt)
         eps_fn = self.make_eps_fn(params, ts)
-        k1, k2 = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
+        k1, k2 = jax.random.split(
+            jax.random.PRNGKey(0) if key is None else key)  # staticcheck: disable=SC102 (opt-in deterministic default when the caller passes key=None)
         u_T = self.sde.prior_sample(k1, n, tuple(self.data_shape))
         if method == "gddim":
             if lam > 0:

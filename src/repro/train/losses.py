@@ -12,7 +12,6 @@ ODEs (Stage-I/Stage-II split, paper App. C.3/C.4).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import numpy as np

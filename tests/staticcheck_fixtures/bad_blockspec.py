@@ -1,0 +1,55 @@
+"""Layer-2 fixtures: a Pallas launch with a non-divisible BlockSpec and
+out-of-bounds index map (PL201/PL202), a host-callback step (JX101), and
+a jit whose donation XLA must drop (JX103).
+
+These are traced by tests/test_staticcheck.py — never executed.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_blockspec_trace():
+    """block 32 does not divide dim 48; the index map overshoots."""
+    def launch(x):
+        return pl.pallas_call(
+            _copy_kernel, grid=(2,),
+            in_specs=[pl.BlockSpec((48, 32), lambda i: (0, i))],
+            out_specs=pl.BlockSpec((48, 32), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((48, 48), jnp.float32))(x)
+    return jax.make_jaxpr(launch)(jnp.zeros((48, 48), jnp.float32))
+
+
+def callback_step_trace():
+    """A steady-state step that round-trips through Python."""
+    def step(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2
+    return jax.make_jaxpr(step)(jnp.zeros((4,), jnp.float32))
+
+
+def dropped_donation_artifacts():
+    """Donating an input no output can alias: XLA silently drops it.
+    Returns (lowered_text, compiled_text) for the JX103 audit."""
+    def reduce_all(big):
+        return jnp.sum(big)                   # scalar out: nothing to alias
+
+    traced = jax.jit(reduce_all, donate_argnums=(0,)).trace(
+        jnp.zeros((64, 64), jnp.float32))
+    lowered = traced.lower()
+    return lowered.as_text(), lowered.compile().as_text()
+
+
+def honored_donation_artifacts():
+    """Control: a same-shaped output keeps the donation honored."""
+    def bump(state):
+        return state + 1.0
+
+    traced = jax.jit(bump, donate_argnums=(0,)).trace(
+        jnp.zeros((64, 64), jnp.float32))
+    lowered = traced.lower()
+    return lowered.as_text(), lowered.compile().as_text()

@@ -1,0 +1,29 @@
+"""Seeded SC105 violations: donated buffers referenced after the call."""
+import jax
+
+
+def _make_step():
+    def step(state, x):
+        return state + x
+    return jax.jit(step, donate_argnums=(0,))
+
+
+_step = _make_step()
+
+
+def use_after_donate(state, x):
+    new = _step(state, x)
+    return new + state                      # SC105 fires here: stale read
+
+
+def loop_donate(state, xs):
+    for x in xs:
+        _ = _step(state, x)                 # SC105 fires here: loop donate
+    return state                            # SC105 fires here: stale read
+
+
+def reassign_ok(state, xs):
+    # NOT a violation: the donated path is re-stored by the call statement
+    for x in xs:
+        state = _step(state, x)
+    return state

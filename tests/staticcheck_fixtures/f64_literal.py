@@ -1,0 +1,17 @@
+# staticcheck: module=coeff-critical
+"""Seeded SC104 violations: Python float literals promoting the (modeled)
+coefficient graph outside Stage-I float64 quadrature."""
+import numpy as np
+import jax.numpy as jnp
+
+
+def leaky_coeff(bank):
+    scaled = jnp.exp(bank.psi) * 0.5        # SC104 fires here: literal*jnp
+    shifted = jnp.asarray(1.5)              # SC104 fires here: literal arg
+    return scaled + shifted
+
+
+def stage1_ok(ts):
+    # NOT violations: Stage-I quadrature is host-side float64 numpy
+    h = np.diff(ts) * 0.5
+    return np.exp(-h) * 2.0

@@ -1,0 +1,21 @@
+# staticcheck: module=hot-path
+"""Seeded SC103 violations: host syncs in a (modeled) serve hot-path
+module."""
+import numpy as np
+import jax
+
+
+def leaky_round(state):
+    mask = np.asarray(state.active)         # SC103 fires here: d2h copy
+    loss = state.loss.item()                # SC103 fires here: sync
+    state.u.block_until_ready()             # SC103 fires here: sync
+    lr = float(state.lr)                    # SC103 fires here: sync
+    return mask, loss, lr
+
+
+def clean_round(state):
+    # NOT violations: jnp.asarray is h2d, float on a literal is host math
+    import jax.numpy as jnp
+    ids = jnp.asarray([0, 1])
+    scale = float(0.5)
+    return jax.device_put(ids), scale

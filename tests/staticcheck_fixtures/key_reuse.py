@@ -1,0 +1,39 @@
+"""Seeded SC101 violations: PRNG key consumed twice / reused in a loop.
+
+Each violation line carries a fires-here comment so the test can assert
+the finding anchors exactly where expected.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def double_consume(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.uniform(k1, (4,))        # SC101 fires here: k1 reused
+    return a + b + jax.random.normal(k2, (4,))
+
+
+def loop_reuse(key):
+    sub = jax.random.fold_in(key, 7)
+    total = jnp.zeros((4,))
+    for _ in range(3):
+        total += jax.random.normal(sub, (4,))   # SC101 fires here: loop
+    return total
+
+
+def branch_ok(key, flag):
+    # NOT a violation: the two consumptions are mutually exclusive
+    k1, _ = jax.random.split(key)
+    if flag:
+        return jax.random.normal(k1, (4,))
+    return jax.random.uniform(k1, (4,))
+
+
+def rebind_ok(key):
+    # NOT a violation: the key is re-derived every iteration
+    out = jnp.zeros((4,))
+    for i in range(3):
+        key, sub = jax.random.split(key)
+        out += jax.random.normal(sub, (4,))
+    return out

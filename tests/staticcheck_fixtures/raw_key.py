@@ -1,0 +1,14 @@
+# staticcheck: module=library
+"""Seeded SC102 violation: constant-seed PRNGKey in (modeled) library
+code.  The pragma above opts this file out of the tests/ exemption."""
+import jax
+
+
+def library_entry(n):
+    key = jax.random.PRNGKey(0)             # SC102 fires here
+    return jax.random.normal(key, (n,))
+
+
+def threaded_ok(key, n):
+    # NOT a violation: the key is threaded in by the caller
+    return jax.random.normal(key, (n,))

@@ -18,25 +18,34 @@ Rules, per record matched by `config`:
     JSON to ratchet it in).  `bank_bytes` is the device-resident size of
     the factored coefficient bank — a reintroduced dense bank layout
     blows it up ~D-fold and fails here.
-  * `n_requests`, `n_configs`, `batch`, `nfe`, `bank_bytes_dense` —
-    schedule/layout identity; any drift means the benchmark no longer
-    measures the same thing and the baseline must be regenerated
+  * `n_requests`, `n_configs`, `batch`, `nfe`, `bank_bytes_dense`,
+    `n_variants` — schedule/layout identity; any drift means the benchmark
+    no longer measures the same thing and the baseline must be regenerated
     deliberately, so a mismatch fails.  (`bank_bytes_dense` is the
     analytic dense-equivalent byte count — the denominator of the
-    factored bank's committed >= 100x residency win.)
+    factored bank's committed >= 100x residency win.  `n_variants` is the
+    jaxpr structural-hash-set cardinality of the multi-family engine's
+    round-step compile buckets — a new bucket is a new compile in steady
+    state, which is a reviewed event, not an accident; the per-bucket
+    hashes ride along in the record's `variant_hashes` for diffing.)
   * a baseline config missing from the fresh run fails (a silently dropped
     row is how perf coverage rots); fresh-only configs are reported but
     pass (new rows land with their own baseline in the same PR).
+
+Under GitHub Actions every failure is also emitted as an `::error`
+workflow command so regressions annotate the PR run directly.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 from typing import Dict, List
 
 BOUNDED = ("recompiles_after_warmup", "rounds", "dispatches", "polls",
            "n_prefills", "bank_bytes", "bank_restack_rows")
-EXACT = ("n_requests", "n_configs", "batch", "nfe", "bank_bytes_dense")
+EXACT = ("n_requests", "n_configs", "batch", "nfe", "bank_bytes_dense",
+         "n_variants")
 
 
 def _records(path: str) -> Dict[str, dict]:
@@ -89,9 +98,14 @@ def main(argv: List[str]) -> int:
                         if k in fresh[config]}
             print(f"ok {config}: {counters}")
     if errors:
+        github = os.environ.get("GITHUB_ACTIONS") == "true"
         print(f"\nPERF GUARD FAILED ({len(errors)} regression(s)):")
         for e in errors:
             print(f"  {e}")
+            if github:
+                msg = e.replace("%", "%25").replace("\r", "%0D") \
+                       .replace("\n", "%0A")
+                print(f"::error title=perf-guard::{msg}")
         return 1
     print(f"\nperf guard passed: {len(baseline)} configs, "
           "deterministic counters no worse than baseline")

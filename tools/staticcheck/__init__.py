@@ -1,0 +1,14 @@
+"""Two-layer static analysis for the serving invariants.
+
+Layer 1 (`astlint`): repo-specific AST lint — PRNG key discipline,
+hot-path host-sync bans, coefficient-graph float-literal hygiene,
+donation safety.  Layer 2 (`jaxprcheck` + `pallas_check` over `menu`):
+trace/lower/compile every serve variant and statically verify no host
+ops, dtype discipline, honored donations, no steady-state transfers,
+Pallas BlockSpec/grid/memory sanity, and recompile-freedom via structural
+jaxpr hashes.
+
+Run: `python -m tools.staticcheck src/ --sanitize` (see docs/
+static_analysis.md).
+"""
+from .findings import Finding, emit, parse_allowlist  # noqa: F401

@@ -1,0 +1,738 @@
+"""Layer 1: repo-specific AST lint over Python sources (stdlib `ast`).
+
+Rules (stable IDs — documented in docs/static_analysis.md):
+
+  SC000  allowlist comment without a justification (findings.py)
+  SC001  unused import (module scope; `__init__.py` re-export files exempt)
+  SC101  PRNG key reuse: a key bound from `jax.random.split` / `fold_in` /
+         `PRNGKey` is *consumed* (passed to anything that is not
+         split/fold_in — deriving a subkey is not consuming) at most once
+         per binding, and never across loop iterations it does not rebind
+         in.  Key reuse silently correlates noise draws — the exact
+         failure mode gDDIM's pure-function-of-(seed, config) sampling
+         contract exists to prevent.
+  SC102  raw `jax.random.PRNGKey(<int literal>)` outside tests/examples:
+         a constant seed in library code aliases every caller onto one
+         noise stream.
+  SC103  host-sync call (`np.asarray`, `np.array`, `jax.device_get`,
+         `.item()`, `.block_until_ready()`, non-literal `float(...)`)
+         inside a serve hot-path module.  The steady-state loop's
+         contract is one sanctioned fetch per poll; anything else stalls
+         the device pipeline.
+  SC104  Python float literal mixed into a `jnp` expression inside a
+         coefficient-critical module (core/coeffs.py): the bitwise
+         factored==dense guarantee rides on the coefficient graph being
+         built in Stage-I float64 numpy and converted once — a stray
+         literal in the jnp graph re-derives values under weak-type
+         promotion and breaks bit-exactness silently.
+  SC105  donation safety: an array passed at a `donate_argnums` position
+         of a jitted callable is dead after the call — referencing it
+         later in the same function reads a buffer XLA may already have
+         reused.  Donating factories are resolved transitively within the
+         module (e.g. `_jit_state_update` -> `jax.jit(donate_argnums=...)`).
+
+Module scoping: hot-path / coefficient-critical module sets are path
+suffixes in `LintConfig`; a file can also opt itself in with a pragma
+comment (used by the test fixtures):
+
+    # staticcheck: module=hot-path
+    # staticcheck: module=coeff-critical
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding, apply_allowlist, parse_allowlist
+
+MODULE_PRAGMA = "# staticcheck: module="
+
+KEY_SOURCES = ("jax.random.split", "jax.random.fold_in", "jax.random.PRNGKey")
+KEY_DERIVERS = ("jax.random.split", "jax.random.fold_in")
+HOST_SYNC_CALLS = ("numpy.asarray", "numpy.array", "jax.device_get")
+HOST_SYNC_METHODS = ("item", "block_until_ready")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintConfig:
+    """Which repo paths each path-scoped rule applies to (suffix match on
+    the POSIX path)."""
+    hot_path_suffixes: Tuple[str, ...] = (
+        "src/repro/serve/loop.py",
+        "src/repro/serve/engine.py",
+        "src/repro/launch/steps.py",
+    )
+    coeff_critical_suffixes: Tuple[str, ...] = (
+        "src/repro/core/coeffs.py",
+    )
+    raw_key_exempt_parts: Tuple[str, ...] = ("tests", "examples", "benchmarks")
+
+
+DEFAULT_CONFIG = LintConfig()
+
+
+# ---------------------------------------------------------------------------
+# name resolution through import aliases
+# ---------------------------------------------------------------------------
+class _Aliases:
+    """Maps local names to canonical dotted module paths via the module's
+    imports (`import numpy as np` -> np: numpy; `from jax import random as
+    jr` -> jr: jax.random; `from jax.random import split` ->
+    split: jax.random.split)."""
+
+    def __init__(self, tree: ast.Module):
+        self.map: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.map[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    self.map[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted path of a Name/Attribute chain, or None."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.map.get(node.id, node.id)
+        return ".".join([root] + list(reversed(parts)))
+
+
+def _attr_path(node: ast.AST) -> Optional[str]:
+    """Syntactic dotted path of a Name / self.attr chain (no alias
+    resolution — used for tracking value identity, e.g. `self.state`)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    return ".".join([node.id] + list(reversed(parts)))
+
+
+def _pos(node: ast.AST) -> Tuple[int, int]:
+    return (node.lineno, node.col_offset)
+
+
+def _end(node: ast.AST) -> Tuple[int, int]:
+    return (node.end_lineno or node.lineno,
+            node.end_col_offset or node.col_offset)
+
+
+def _functions(tree: ast.Module):
+    """Every function/lambda-free scope: the module itself plus each
+    (async) function def, outermost first."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _enclosing_loops(scope: ast.AST) -> Dict[ast.AST, List[ast.AST]]:
+    """node -> stack of For/While loops (within `scope`) that enclose it,
+    not descending into nested function defs."""
+    out: Dict[ast.AST, List[ast.AST]] = {}
+
+    def visit(node, stack):
+        out[node] = list(stack)
+        is_loop = isinstance(node, (ast.For, ast.While))
+        if is_loop:
+            stack = stack + [node]
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            visit(child, stack)
+
+    visit(scope, [])
+    return out
+
+
+def _branch_map(scope: ast.AST) -> Dict[ast.AST, Tuple]:
+    """node -> chain of (branching-node id, arm) pairs, so two uses that
+    live in mutually exclusive arms (if/else, except handlers) are not
+    counted as sequential."""
+    out: Dict[ast.AST, Tuple] = {}
+
+    def visit(node, chain):
+        out[node] = chain
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            sub = chain
+            if isinstance(node, ast.If):
+                if any(child is s for s in node.body):
+                    sub = chain + ((id(node), "body"),)
+                elif any(child is s for s in node.orelse):
+                    sub = chain + ((id(node), "orelse"),)
+            elif isinstance(node, ast.Try):
+                for arm, stmts in (("body", node.body),
+                                   ("orelse", node.orelse),
+                                   ("final", node.finalbody)):
+                    if any(child is s for s in stmts):
+                        sub = chain + ((id(node), arm),)
+                if any(child is h for h in node.handlers):
+                    sub = chain + ((id(node), "handlers"),)
+            elif isinstance(node, ast.IfExp):
+                if child is node.body:
+                    sub = chain + ((id(node), "body"),)
+                elif child is node.orelse:
+                    sub = chain + ((id(node), "orelse"),)
+            visit(child, sub)
+
+    visit(scope, ())
+    return out
+
+
+def _exclusive(a: Tuple, b: Tuple) -> bool:
+    """True when the two branch chains put the nodes in different arms of
+    the same if/try — at most one of them executes."""
+    da, db = dict(a), dict(b)
+    return any(k in db and db[k] != arm for k, arm in da.items())
+
+
+def _scope_walk(scope: ast.AST):
+    """Walk a scope without descending into nested function defs (the
+    nested def is its own scope)."""
+    stack = [scope]
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            stack.append(child)
+
+
+# ---------------------------------------------------------------------------
+# SC001 unused imports
+# ---------------------------------------------------------------------------
+def _check_unused_imports(tree: ast.Module, path: str) -> List[Finding]:
+    if path.endswith("__init__.py"):
+        return []
+    exported: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__" \
+                        and isinstance(node.value, (ast.List, ast.Tuple)):
+                    exported |= {e.value for e in node.value.elts
+                                 if isinstance(e, ast.Constant)}
+    bindings: Dict[str, Tuple[int, str]] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name.split(".")[0]
+                bindings[name] = (node.lineno, a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                name = a.asname or a.name
+                bindings[name] = (node.lineno, a.name)
+    used: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            used.add(node.id)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            pass
+    out = []
+    for name, (line, target) in sorted(bindings.items()):
+        if name in used or name in exported or name == "_":
+            continue
+        out.append(Finding("SC001", path, line,
+                           f"import '{name}' ({target}) is never used"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SC101 / SC102: PRNG key discipline
+# ---------------------------------------------------------------------------
+def _check_keys(tree: ast.Module, aliases: _Aliases, path: str,
+                config: LintConfig, force_library: bool = False
+                ) -> List[Finding]:
+    out: List[Finding] = []
+    posix = path.replace("\\", "/")
+    parts = set(posix.split("/"))
+    key_exempt = (bool(parts & set(config.raw_key_exempt_parts))
+                  or posix.rsplit("/", 1)[-1].startswith("test_")) \
+        and not force_library
+
+    for scope in _functions(tree):
+        loops = _enclosing_loops(scope)
+        branches = _branch_map(scope)
+        # events per name, in source order
+        bindings: List[Tuple[Tuple[int, int], str, ast.AST]] = []   # key binds
+        stores: List[Tuple[Tuple[int, int], str, Optional[ast.AST]]] = []
+        consumes: List[Tuple[Tuple[int, int], str, ast.AST]] = []
+
+        for node in _scope_walk(scope):
+            if isinstance(node, ast.Assign):
+                is_key_src = isinstance(node.value, ast.Call) and \
+                    aliases.dotted(node.value.func) in KEY_SOURCES
+                for t in node.targets:
+                    targets = t.elts if isinstance(t, (ast.Tuple, ast.List)) \
+                        else [t]
+                    for el in targets:
+                        if isinstance(el, ast.Name):
+                            stores.append((_pos(node), el.id, node))
+                            if is_key_src:
+                                bindings.append((_pos(node), el.id, node))
+            elif isinstance(node, ast.Call):
+                callee = aliases.dotted(node.func)
+                if callee in KEY_DERIVERS:
+                    continue                      # deriving != consuming
+                for arg in list(node.args) + [kw.value for kw in
+                                              node.keywords]:
+                    if isinstance(arg, ast.Name):
+                        consumes.append((_pos(arg), arg.id, node))
+                # SC102: raw constant seed
+                if callee == "jax.random.PRNGKey" and not key_exempt \
+                        and node.args \
+                        and isinstance(node.args[0], ast.Constant):
+                    out.append(Finding(
+                        "SC102", path, node.lineno,
+                        "raw jax.random.PRNGKey("
+                        f"{node.args[0].value!r}) in library code: a "
+                        "constant seed aliases every caller onto one "
+                        "noise stream — thread a key in (tests/examples "
+                        "are exempt)"))
+
+        # consumptions inside a `return` terminate their path: a guard
+        # clause (`if p: return f(k)`) is exclusive with later code
+        ret_of: Dict[int, int] = {}
+        for node in _scope_walk(scope):
+            if isinstance(node, (ast.Return, ast.Raise)):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Call):
+                        ret_of[id(sub)] = id(node)
+
+        bindings.sort()
+        stores.sort()
+        consumes.sort()
+        for bpos, name, bnode in bindings:
+            # window: from this binding to the next store of `name`
+            nxt = next((p for p, n, _ in stores if n == name and p > bpos),
+                       (1 << 30, 0))
+            window = [(p, cnode) for p, n, cnode in consumes
+                      if n == name and bpos < p < nxt]
+            # a second consumption counts only when it can execute in the
+            # same run as an earlier one (exclusive if/else arms are fine)
+            for i, (p, cnode) in enumerate(window):
+                def _can_follow(prev):
+                    if _exclusive(branches.get(cnode, ()),
+                                  branches.get(prev, ())):
+                        return False
+                    prev_ret = ret_of.get(id(prev))
+                    if prev_ret is not None \
+                            and prev_ret != ret_of.get(id(cnode)):
+                        return False          # earlier path returned
+                    return True
+
+                if i >= 1 and any(_can_follow(prev)
+                                  for _, prev in window[:i]):
+                    out.append(Finding(
+                        "SC101", path, p[0],
+                        f"PRNG key '{name}' (bound at line {bpos[0]}) is "
+                        "consumed more than once in this scope — derive a "
+                        "fresh subkey with split/fold_in instead of "
+                        "reusing the key"))
+                    break
+            # loop reuse: one consumption inside a loop the binding is
+            # outside of, with no rebind of `name` inside that loop
+            for p, cnode in window[:1]:
+                for loop in loops.get(cnode, []):
+                    binding_inside = loop in loops.get(bnode, [])
+                    if binding_inside:
+                        continue
+                    loop_span = (_pos(loop), _end(loop))
+                    rebound = any(loop_span[0] <= sp <= loop_span[1]
+                                  for sp, n, _ in stores if n == name)
+                    if not rebound:
+                        out.append(Finding(
+                            "SC101", path, p[0],
+                            f"PRNG key '{name}' (bound at line {bpos[0]}, "
+                            "outside this loop) is consumed inside the "
+                            "loop without being rebound — every "
+                            "iteration reuses the same key"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SC103 host syncs in hot-path modules
+# ---------------------------------------------------------------------------
+def _check_host_sync(tree: ast.Module, aliases: _Aliases,
+                     path: str) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = aliases.dotted(node.func)
+        if callee in HOST_SYNC_CALLS:
+            out.append(Finding(
+                "SC103", path, node.lineno,
+                f"host-sync call {callee}() in a serve hot-path module: "
+                "the steady-state loop's contract is one sanctioned "
+                "device fetch per poll — move this off the hot path or "
+                "allowlist the sanctioned fetch with a justification"))
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in HOST_SYNC_METHODS and not node.args:
+            out.append(Finding(
+                "SC103", path, node.lineno,
+                f".{node.func.attr}() in a serve hot-path module forces a "
+                "device sync"))
+        elif isinstance(node.func, ast.Name) and node.func.id == "float" \
+                and node.args and not isinstance(node.args[0], ast.Constant):
+            out.append(Finding(
+                "SC103", path, node.lineno,
+                "float(...) on a non-literal in a serve hot-path module "
+                "blocks on the device value"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SC104 float literals in the jnp coefficient graph
+# ---------------------------------------------------------------------------
+def _roots_jnp(node: ast.AST, aliases: _Aliases) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Name, ast.Attribute)):
+            dotted = aliases.dotted(sub)
+            if dotted and (dotted == "jax.numpy"
+                           or dotted.startswith("jax.numpy.")):
+                return True
+    return False
+
+
+def _has_float_literal(node: ast.AST) -> Optional[ast.Constant]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, float):
+            return sub
+    return None
+
+
+def _check_coeff_literals(tree: ast.Module, aliases: _Aliases,
+                          path: str) -> List[Finding]:
+    out: List[Finding] = []
+    msg = ("Python float literal in a jnp expression of a coefficient-"
+           "critical module: coefficients must be built in Stage-I "
+           "float64 numpy and converted once — a literal in the device "
+           "graph re-derives the value under weak-type promotion and "
+           "silently breaks the bitwise factored==dense contract")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.BinOp):
+            pairs = ((node.left, node.right), (node.right, node.left))
+            for a, b in pairs:
+                lit = _has_float_literal(a)
+                if lit is not None and _roots_jnp(b, aliases):
+                    out.append(Finding("SC104", path, lit.lineno, msg))
+                    break
+        elif isinstance(node, ast.Call) and _roots_jnp(node.func, aliases):
+            for arg in node.args:
+                if isinstance(arg, ast.Constant) \
+                        and isinstance(arg.value, float):
+                    out.append(Finding("SC104", path, arg.lineno, msg))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SC105 donation safety
+# ---------------------------------------------------------------------------
+def _donate_literal(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    if isinstance(node, ast.Tuple):
+        vals = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, int)):
+                return None
+            vals.append(e.value)
+        return tuple(vals)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    return None
+
+
+def _resolve_factories(tree: ast.Module, aliases: _Aliases
+                       ) -> Dict[str, object]:
+    """Functions in this module that return a donating jit: name ->
+    donate tuple, or the parameter *index* the tuple is passed through
+    (transitively resolved, e.g. _make_token_admit -> _jit_state_update
+    -> jax.jit)."""
+    factories: Dict[str, object] = {}
+    fdefs = {n.name: n for n in ast.walk(tree)
+             if isinstance(n, ast.FunctionDef)}
+
+    def returns_of(fn: ast.FunctionDef):
+        for node in _scope_walk(fn):
+            if isinstance(node, ast.Return) and node.value is not None:
+                yield node.value
+
+    changed = True
+    while changed:
+        changed = False
+        for name, fn in fdefs.items():
+            if name in factories:
+                continue
+            params = [a.arg for a in fn.args.args]
+            for ret in returns_of(fn):
+                if not isinstance(ret, ast.Call):
+                    continue
+                callee = aliases.dotted(ret.func)
+                if callee == "jax.jit":
+                    for kw in ret.keywords:
+                        if kw.arg != "donate_argnums":
+                            continue
+                        lit = _donate_literal(kw.value)
+                        if lit is not None:
+                            factories[name] = lit
+                        elif isinstance(kw.value, ast.Name) \
+                                and kw.value.id in params:
+                            factories[name] = ("param",
+                                               params.index(kw.value.id))
+                        changed = name in factories
+                elif isinstance(ret.func, ast.Name) \
+                        and ret.func.id in factories:
+                    inner = factories[ret.func.id]
+                    if isinstance(inner, tuple) and inner[:1] == ("param",):
+                        idx = inner[1]
+                        if idx < len(ret.args):
+                            lit = _donate_literal(ret.args[idx])
+                            if lit is not None:
+                                factories[name] = lit
+                                changed = True
+                    else:
+                        factories[name] = inner
+                        changed = True
+                if name in factories:
+                    break
+    return factories
+
+
+def _donating_value(call: ast.Call, aliases: _Aliases,
+                    factories: Dict[str, object]) -> Optional[Tuple[int, ...]]:
+    """Donate tuple of the callable produced by `call`, if resolvable."""
+    callee = aliases.dotted(call.func)
+    if callee == "jax.jit":
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                return _donate_literal(kw.value)
+        return None
+    if isinstance(call.func, ast.Name) and call.func.id in factories:
+        spec = factories[call.func.id]
+        if isinstance(spec, tuple) and spec[:1] == ("param",):
+            idx = spec[1]
+            if idx < len(call.args):
+                return _donate_literal(call.args[idx])
+            return None
+        return spec  # fixed tuple
+    return None
+
+
+def _check_donation(tree: ast.Module, aliases: _Aliases,
+                    path: str) -> List[Finding]:
+    out: List[Finding] = []
+    factories = _resolve_factories(tree, aliases)
+
+    # donating-callable bindings: `self._decode = <jit/factory>(...)` or
+    # `step = jax.jit(..., donate_argnums=...)`; dict literals /
+    # comprehensions of factory calls bind the attribute as subscripted
+    donors: Dict[str, Tuple[int, ...]] = {}          # "_decode" / "step_fn"
+    subscripted: Dict[str, Tuple[int, ...]] = {}     # "_steps"
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        target = node.targets[0]
+        tpath = _attr_path(target)
+        if tpath is None:
+            continue
+        key = tpath.split(".")[-1]
+        value = node.value
+        if isinstance(value, ast.Call):
+            donate = _donating_value(value, aliases, factories)
+            if donate:
+                donors[key] = donate
+        elif isinstance(value, ast.DictComp) \
+                and isinstance(value.value, ast.Call):
+            donate = _donating_value(value.value, aliases, factories)
+            if donate:
+                subscripted[key] = donate
+        elif isinstance(value, ast.Dict):
+            for v in value.values:
+                if isinstance(v, ast.Call):
+                    donate = _donating_value(v, aliases, factories)
+                    if donate:
+                        subscripted[key] = donate
+                        break
+
+    def call_donate(call: ast.Call) -> Optional[Tuple[int, ...]]:
+        func = call.func
+        if isinstance(func, ast.Call):
+            # immediately-invoked: jax.jit(f, donate_argnums=...)(x, ...)
+            return _donating_value(func, aliases, factories)
+        if isinstance(func, ast.Subscript):
+            base = _attr_path(func.value)
+            if base is not None and base.split(".")[-1] in subscripted:
+                return subscripted[base.split(".")[-1]]
+            return None
+        fpath = _attr_path(func)
+        if fpath is not None and fpath.split(".")[-1] in donors:
+            return donors[fpath.split(".")[-1]]
+        # note: a bare `jax.jit(...)` / factory call *constructs* the
+        # donating callable — it is not itself a donating call site
+        return None
+
+    for scope in _functions(tree):
+        if isinstance(scope, ast.Module):
+            continue
+        loops = _enclosing_loops(scope)
+        # statements of this scope in source order, with accesses
+        accesses: List[Tuple[Tuple[int, int], str, bool]] = []  # (pos, path, is_store)
+        for node in _scope_walk(scope):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                p = _attr_path(node)
+                if p is None:
+                    continue
+                if isinstance(node.ctx, ast.Store):
+                    accesses.append((_pos(node), p, True))
+                elif isinstance(node.ctx, ast.Load):
+                    accesses.append((_pos(node), p, False))
+        accesses.sort()
+
+        for node in _scope_walk(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            donate = call_donate(node)
+            if not donate:
+                continue
+            stmt = _enclosing_stmt(scope, node)
+            if stmt is None:
+                continue
+            stmt_end = _end(stmt)
+            for pos in donate:
+                if pos >= len(node.args):
+                    continue
+                dpath = _attr_path(node.args[pos])
+                if dpath is None:
+                    continue
+                # `x = step(x)` — the donated path is re-stored by the
+                # call statement itself, the canonical safe pattern
+                stored_here = _stmt_stores(stmt, dpath)
+                if not stored_here:
+                    later = [(p, ap, st) for p, ap, st in accesses
+                             if p > stmt_end
+                             and (ap == dpath
+                                  or ap.startswith(dpath + "."))]
+                    for p, ap, is_store in later:
+                        if is_store and ap == dpath:
+                            break
+                        if not is_store:
+                            out.append(Finding(
+                                "SC105", path, p[0],
+                                f"'{dpath}' was donated to a jitted call "
+                                f"at line {node.lineno} (donate_argnums) "
+                                "and is read again here — the buffer may "
+                                "already be reused by XLA; reassign from "
+                                "the call result or copy first"))
+                            break
+                # loop reuse: donated in a loop without re-storing it
+                if not stored_here:
+                    for loop in loops.get(node, []):
+                        span = (_pos(loop), _end(loop))
+                        rebound = any(span[0] <= p <= span[1] and st
+                                      and ap == dpath
+                                      for p, ap, st in accesses)
+                        if not rebound:
+                            out.append(Finding(
+                                "SC105", path, node.lineno,
+                                f"'{dpath}' is donated inside this loop "
+                                "but never reassigned in it — the next "
+                                "iteration donates a dead buffer"))
+                            break
+    return out
+
+
+def _enclosing_stmt(scope: ast.AST, node: ast.AST) -> Optional[ast.stmt]:
+    """Innermost simple statement of `scope` containing `node`."""
+    best = None
+    np_, ne = _pos(node), _end(node)
+    for cand in _scope_walk(scope):
+        if not isinstance(cand, ast.stmt) or isinstance(
+                cand, (ast.For, ast.While, ast.If, ast.With, ast.Try,
+                       ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if _pos(cand) <= np_ and ne <= _end(cand):
+            if best is None or _pos(cand) >= _pos(best):
+                best = cand
+    return best
+
+
+def _stmt_stores(stmt: ast.stmt, dpath: str) -> bool:
+    for node in ast.walk(stmt):
+        if isinstance(node, (ast.Name, ast.Attribute)) \
+                and isinstance(node.ctx, ast.Store) \
+                and _attr_path(node) == dpath:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+def lint_source(source: str, path: str,
+                config: LintConfig = DEFAULT_CONFIG) -> List[Finding]:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("SC900", path, e.lineno or 1,
+                        f"syntax error: {e.msg}")]
+    aliases = _Aliases(tree)
+    posix = path.replace("\\", "/")
+    pragma_modes = {line.split(MODULE_PRAGMA, 1)[1].strip()
+                    for line in source.splitlines()
+                    if MODULE_PRAGMA in line}
+    hot = any(posix.endswith(s) for s in config.hot_path_suffixes) \
+        or "hot-path" in pragma_modes
+    coeff = any(posix.endswith(s) for s in config.coeff_critical_suffixes) \
+        or "coeff-critical" in pragma_modes
+    # `module=library` opts a file *out* of the tests/examples raw-key
+    # exemption (fixtures under tests/ that model library code)
+    library = "library" in pragma_modes
+
+    findings: List[Finding] = []
+    findings += _check_unused_imports(tree, path)
+    findings += _check_keys(tree, aliases, path, config,
+                            force_library=library)
+    if hot:
+        findings += _check_host_sync(tree, aliases, path)
+    if coeff:
+        findings += _check_coeff_literals(tree, aliases, path)
+    findings += _check_donation(tree, aliases, path)
+
+    disabled, bad_allowlist = parse_allowlist(source, path)
+    return apply_allowlist(findings, disabled) + bad_allowlist
+
+
+def lint_paths(paths: Sequence[str],
+               config: LintConfig = DEFAULT_CONFIG) -> List[Finding]:
+    import os
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                if "__pycache__" in root:
+                    continue
+                files += [os.path.join(root, n) for n in sorted(names)
+                          if n.endswith(".py")]
+        else:
+            files.append(p)
+    out: List[Finding] = []
+    for f in sorted(set(files)):
+        with open(f, encoding="utf-8") as fh:
+            out += lint_source(fh.read(), f, config)
+    return out

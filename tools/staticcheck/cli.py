@@ -1,0 +1,109 @@
+"""Command-line entry: `python -m tools.staticcheck [paths] [--sanitize]`.
+
+  python -m tools.staticcheck src/                 # Layer 1: AST lint
+  python -m tools.staticcheck --sanitize           # Layer 2: full menu
+  python -m tools.staticcheck --sanitize --quick   # reduced menu (tests)
+  python -m tools.staticcheck src/ --sanitize --json OUT.json --github
+
+Exit status: 0 = clean, 1 = findings, 2 = usage error.  `--github` (auto
+under GITHUB_ACTIONS) adds `::error file=...,line=...` workflow commands
+so findings annotate the PR diff inline.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from .findings import Finding, emit
+
+
+def run_sanitizer(quick: bool = False, verbose: bool = True
+                  ) -> tuple:
+    """Layer 2 over the serve menu + kernel entries.  Returns (findings,
+    {label: structural hash})."""
+    from . import jaxprcheck as jx
+    from . import pallas_check as plc
+    from .menu import (build_diffusion_variants, build_token_variants,
+                       coeff_apply_traces, kernel_entries)
+
+    findings: List[Finding] = []
+    hashes = {}
+
+    variants, step_hashes = build_diffusion_variants(quick=quick)
+    variants += build_token_variants(quick=quick)
+    for v in variants:
+        traced = v.jitted.trace(*v.args, **v.kwargs)
+        jaxpr = traced.jaxpr
+        findings += jx.check_no_callbacks(jaxpr, v.label)
+        findings += jx.check_dtypes(jaxpr, v.label, f32_only=v.f32_only)
+        findings += plc.check_if_present(jaxpr, v.label)
+        lowered_text = traced.lower().as_text()
+        compiled_text = traced.lower().compile().as_text()
+        if v.donating:
+            findings += jx.check_donation(lowered_text, compiled_text,
+                                          v.label)
+        if v.steady_state:
+            findings += jx.check_no_host_transfers(compiled_text, v.label)
+        hashes[v.label] = jx.jaxpr_hash(jaxpr)
+        if verbose:
+            print(f"  sanitized {v.label}  hash={hashes[v.label]}",
+                  file=sys.stderr)
+
+    findings += jx.check_hash_stability(step_hashes["before"],
+                                        step_hashes["after"],
+                                        "diffusion mixed-config menu")
+
+    for label, jaxpr in coeff_apply_traces():
+        findings += jx.check_no_callbacks(jaxpr, label)
+        findings += jx.check_dtypes(jaxpr, label, f32_only=True)
+        hashes[label] = jx.jaxpr_hash(jaxpr)
+
+    for label, jaxpr in kernel_entries():
+        findings += jx.check_no_callbacks(jaxpr, label)
+        findings += jx.check_dtypes(jaxpr, label)
+        findings += plc.check_traced(jaxpr, label)
+        hashes[label] = jx.jaxpr_hash(jaxpr)
+        if verbose:
+            print(f"  sanitized {label}  hash={hashes[label]}",
+                  file=sys.stderr)
+
+    return findings, hashes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.staticcheck",
+        description="two-layer static analysis: AST lint + jaxpr sanitizer")
+    ap.add_argument("paths", nargs="*", help="files/dirs for the AST lint")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="trace + audit the full serve menu (Layer 2)")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced Layer 2 menu (single family/arch)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write findings as structured JSON")
+    ap.add_argument("--github", action="store_true",
+                    default=bool(os.environ.get("GITHUB_ACTIONS")),
+                    help="emit ::error workflow annotations")
+    args = ap.parse_args(argv)
+    if not args.paths and not args.sanitize:
+        ap.print_usage(sys.stderr)
+        print("error: give paths to lint and/or --sanitize",
+              file=sys.stderr)
+        return 2
+
+    findings: List[Finding] = []
+    if args.paths:
+        from .astlint import lint_paths
+        findings += lint_paths(args.paths)
+    if args.sanitize:
+        sfindings, _hashes = run_sanitizer(quick=args.quick)
+        findings += sfindings
+
+    emit(findings, json_path=args.json, github=args.github)
+    layers = [l for l, on in (("ast", bool(args.paths)),
+                              ("sanitizer", args.sanitize)) if on]
+    print(f"staticcheck [{'+'.join(layers)}]: "
+          f"{'FAIL' if findings else 'ok'} ({len(findings)} finding(s))")
+    return 1 if findings else 0

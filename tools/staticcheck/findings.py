@@ -1,0 +1,95 @@
+"""Finding type, inline allowlist parsing, and the output surfaces.
+
+Every rule emits `Finding` records with a stable rule ID (SCxxx for the
+AST layer, JXxxx for the jaxpr sanitizer, PLxxx for the Pallas kernel
+checks).  A finding can be suppressed at its line (or, for whole-module
+waivers, at the line the rule anchors on) with an inline comment that
+must carry a justification:
+
+    self.state.active  # staticcheck: disable=SC103 (the one steady-state fetch)
+
+Multiple IDs are comma-separated (`disable=SC103,SC101`).  A disable
+comment *without* a parenthesized reason is itself a finding (SC000):
+allowlisting is cheap, silent allowlisting is how invariants rot.
+
+Outputs: human-readable lines, structured JSON (`--json`), and GitHub
+`::error file=...,line=...` workflow annotations (`--github`, auto-enabled
+under `GITHUB_ACTIONS`) so CI findings surface inline on the PR diff.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+DISABLE_RE = re.compile(
+    r"#\s*staticcheck:\s*disable=([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)"
+    r"(\s*\(.+\))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str                 # stable ID, e.g. "SC101"
+    path: str                 # repo-relative file path ("" for menu-level)
+    line: int                 # 1-indexed anchor line (0 = whole file)
+    message: str
+    col: int = 0
+
+    def text(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.path else "<menu>"
+        return f"{loc}: {self.rule}: {self.message}"
+
+    def github(self) -> str:
+        """One GitHub workflow-command annotation line."""
+        msg = self.message.replace("%", "%25").replace("\r", "%0D") \
+                          .replace("\n", "%0A")
+        if self.path:
+            return (f"::error file={self.path},line={max(self.line, 1)},"
+                    f"title={self.rule}::{msg}")
+        return f"::error title={self.rule}::{msg}"
+
+
+def parse_allowlist(source: str, path: str
+                    ) -> Tuple[Dict[int, Set[str]], List[Finding]]:
+    """Per-line disabled rule IDs from inline `# staticcheck: disable=...`
+    comments, plus SC000 findings for disables with no justification."""
+    disabled: Dict[int, Set[str]] = {}
+    bad: List[Finding] = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = DISABLE_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",")}
+        disabled[i] = disabled.get(i, set()) | rules
+        if not m.group(2):
+            bad.append(Finding(
+                "SC000", path, i,
+                f"allowlist comment for {sorted(rules)} carries no "
+                "justification — append one in parentheses: "
+                "# staticcheck: disable=RULE (why this is safe)"))
+    return disabled, bad
+
+
+def apply_allowlist(findings: Iterable[Finding],
+                    disabled: Dict[int, Set[str]]) -> List[Finding]:
+    """Drop findings whose (line, rule) is inline-disabled."""
+    return [f for f in findings
+            if f.rule not in disabled.get(f.line, ())]
+
+
+def emit(findings: List[Finding], json_path: Optional[str] = None,
+         github: bool = False, stream=None) -> None:
+    stream = stream if stream is not None else sys.stdout
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.text(), file=stream)
+        if github:
+            print(f.github(), file=stream)
+    if json_path:
+        doc = {"tool": "staticcheck",
+               "n_findings": len(findings),
+               "findings": [dataclasses.asdict(f) for f in findings]}
+        with open(json_path, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")

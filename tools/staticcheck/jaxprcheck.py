@@ -1,0 +1,256 @@
+"""Layer 2 core: jaxpr walks, compiled-artifact audits, structural hash.
+
+Everything here operates on artifacts of `jitted.trace(*args)` — the
+ClosedJaxpr, the lowered StableHLO text, and the compiled HLO text — so
+the properties it checks are facts about *what will run*, not about what
+the Python source looks like.
+
+Rules:
+
+  JX101  callback / host op in the jaxpr (pure_callback, io_callback,
+         debug_callback, infeed/outfeed, ...): a steady-state step with a
+         host round-trip silently serializes the device pipeline.
+  JX102  dtype discipline: any float64 / complex128 / int64 abstract
+         value anywhere in the program (the repo computes in f32 with
+         Stage-I quadrature confined to *host* numpy float64), and — over
+         the coefficient-apply subgraph — any floating dtype that is not
+         exactly f32 (a bf16 detour through the coefficient path breaks
+         the bitwise factored==dense contract).
+  JX103  dropped donation: the lowered module marks every donated
+         argument (`tf.aliasing_output` / `jax.buffer_donor`); the
+         compiled executable's `input_output_alias` table records what
+         XLA actually honored.  Marks without alias entries mean XLA
+         silently fell back to copying — the in-place state update the
+         serve loop relies on no longer happens.
+  JX104  host transfer op (infeed/outfeed/send/recv/host custom-call) in
+         a compiled steady-state program.
+  JX105  recompile hazard: the canonical structural hash of a serve
+         variant changed after the mixed-config menu was registered —
+         some config escaped its coefficient-bank bucket, so steady-state
+         traffic would retrace.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import Iterator, List, Tuple
+
+from .findings import Finding
+
+# jaxpr primitive names that imply a host round-trip
+_CALLBACK_TOKENS = ("callback", "infeed", "outfeed", "host_callback")
+# HLO text tokens that imply host traffic in the compiled program
+_HLO_HOST_RE = re.compile(
+    r"\b(infeed|outfeed)\b|custom_call_target=\"(xla_python[^\"]*|[^\"]*host[^\"]*)\"")
+_ALIAS_BLOCK_RE = re.compile(r"input_output_alias=\{")
+_DISALLOWED_DTYPES = ("float64", "complex64", "complex128", "int64")
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """Every equation in a (Closed)Jaxpr, recursing into sub-jaxprs held
+    in equation params (pjit bodies, scan/while/cond branches, ...)."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub)
+
+
+def _sub_jaxprs(params: dict) -> Iterator:
+    for v in params.values():
+        yield from _as_jaxprs(v)
+
+
+def _as_jaxprs(v) -> Iterator:
+    if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for item in v:
+            yield from _as_jaxprs(item)
+
+
+def _all_avals(jaxpr) -> Iterator[Tuple[str, object]]:
+    """(context, aval) for every var in the program, including sub-jaxprs."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for var in list(inner.invars) + list(inner.outvars):
+        if hasattr(var, "aval"):
+            yield "interface", var.aval
+    for eqn in iter_eqns(jaxpr):
+        for var in list(eqn.invars) + list(eqn.outvars):
+            if hasattr(var, "aval"):
+                yield eqn.primitive.name, var.aval
+
+
+# ---------------------------------------------------------------------------
+# JX101 callbacks / host ops in the jaxpr
+# ---------------------------------------------------------------------------
+def check_no_callbacks(jaxpr, label: str) -> List[Finding]:
+    out = []
+    for eqn in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if any(tok in name for tok in _CALLBACK_TOKENS):
+            out.append(Finding(
+                "JX101", "", 0,
+                f"[{label}] host op '{name}' in the traced program — a "
+                "steady-state step must not round-trip through Python"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JX102 dtype discipline
+# ---------------------------------------------------------------------------
+def check_dtypes(jaxpr, label: str, f32_only: bool = False) -> List[Finding]:
+    """No f64/c128/i64 anywhere; with `f32_only` (the coefficient-apply
+    subgraph) additionally no floating dtype other than float32."""
+    out, seen = [], set()
+    for ctx, aval in _all_avals(jaxpr):
+        dt = str(getattr(aval, "dtype", ""))
+        if not dt:
+            continue
+        key = (ctx, dt)
+        if key in seen:
+            continue
+        if any(dt == bad for bad in _DISALLOWED_DTYPES):
+            seen.add(key)
+            out.append(Finding(
+                "JX102", "", 0,
+                f"[{label}] {dt} value reaches the compiled program "
+                f"(at '{ctx}') — compute is f32; float64 lives only in "
+                "host-side Stage-I quadrature"))
+        elif f32_only and dt.startswith(("float", "bfloat")) \
+                and dt != "float32":
+            seen.add(key)
+            out.append(Finding(
+                "JX102", "", 0,
+                f"[{label}] {dt} value in the coefficient-apply subgraph "
+                f"(at '{ctx}') — the bitwise factored==dense contract "
+                "requires exact f32 end to end"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JX103 donation audit over the compiled executable
+# ---------------------------------------------------------------------------
+def count_requested_donations(lowered_text: str) -> int:
+    """Donation marks in the lowered StableHLO: `tf.aliasing_output` is a
+    donation XLA intends to alias; `jax.buffer_donor` is donated but not
+    yet pinned to an output."""
+    return (lowered_text.count("tf.aliasing_output")
+            + lowered_text.count("jax.buffer_donor"))
+
+
+def count_granted_aliases(compiled_text: str) -> int:
+    """Entries in the executable's input_output_alias table."""
+    m = _ALIAS_BLOCK_RE.search(compiled_text)
+    if not m:
+        return 0
+    # the block nests braces: count alias kinds up to the closing '}' of
+    # the table, conservatively scanning a bounded window
+    window = compiled_text[m.end():m.end() + 4096]
+    end = window.find("}\n")
+    body = window[:end] if end >= 0 else window
+    return body.count("may-alias") + body.count("must-alias")
+
+
+def check_donation(lowered_text: str, compiled_text: str, label: str,
+                   expect_donation: bool = True) -> List[Finding]:
+    requested = count_requested_donations(lowered_text)
+    granted = count_granted_aliases(compiled_text)
+    out = []
+    if expect_donation and requested == 0:
+        out.append(Finding(
+            "JX103", "", 0,
+            f"[{label}] no donation marks in the lowered module — "
+            "donate_argnums was dropped before lowering (all-copy state "
+            "update)"))
+    if granted < requested:
+        out.append(Finding(
+            "JX103", "", 0,
+            f"[{label}] XLA honored {granted}/{requested} requested "
+            "donations — the executable copies buffers the serve loop "
+            "expects to update in place"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JX104 host transfers in the compiled program
+# ---------------------------------------------------------------------------
+def check_no_host_transfers(compiled_text: str, label: str) -> List[Finding]:
+    out = []
+    for m in _HLO_HOST_RE.finditer(compiled_text):
+        out.append(Finding(
+            "JX104", "", 0,
+            f"[{label}] host-transfer construct '{m.group(0)}' in the "
+            "compiled steady-state program — the zero-transfer serving "
+            "contract is broken at compile time"))
+    return out[:4]          # one program rarely needs more than a sample
+
+
+# ---------------------------------------------------------------------------
+# JX105 structural hash
+# ---------------------------------------------------------------------------
+_ADDR_RE = re.compile(r"0x[0-9a-fA-F]+")
+# params that carry source locations / debug info, not program structure
+_HASH_SKIP_PARAMS = ("name_and_src_info", "debug", "cost_estimate",
+                     "backend", "name", "debug_info", "symbol_name",
+                     "metadata", "interpret", "compiler_params")
+
+
+def jaxpr_hash(jaxpr) -> str:
+    """Canonical structural hash: variables renamed in order of first
+    appearance, equations serialized as (primitive, in, out, params) with
+    sub-jaxprs hashed recursively and debug/source params dropped.  Two
+    traces of the same cost class — same shapes/dtypes/statics, any
+    config values — produce the same hash."""
+    h = hashlib.sha256()
+    h.update(_serialize(jaxpr).encode())
+    return h.hexdigest()[:16]
+
+
+def _serialize(jaxpr) -> str:
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    names: dict = {}
+
+    def nm(var) -> str:
+        if hasattr(var, "val"):               # Literal (unhashable)
+            return f"lit:{_ADDR_RE.sub('0xX', repr(var.val))}"
+        if var not in names:
+            names[var] = f"v{len(names)}"
+        return f"{names[var]}:{var.aval.str_short()}"
+
+    parts = ["in(" + ",".join(nm(v) for v in inner.invars) + ")"]
+    for eqn in inner.eqns:
+        ps = []
+        for k in sorted(eqn.params):
+            if k in _HASH_SKIP_PARAMS:
+                continue
+            v = eqn.params[k]
+            subs = list(_as_jaxprs(v))
+            if subs:
+                ps.append(f"{k}=[" + ",".join(_serialize(s) for s in subs)
+                          + "]")
+            else:
+                ps.append(f"{k}={_ADDR_RE.sub('0xX', repr(v))}")
+        parts.append(f"{eqn.primitive.name}(" +
+                     ",".join(nm(v) for v in eqn.invars) + ")->(" +
+                     ",".join(nm(v) for v in eqn.outvars) + "){" +
+                     ";".join(ps) + "}")
+    parts.append("out(" + ",".join(nm(v) for v in inner.outvars) + ")")
+    return "|".join(parts)
+
+
+def check_hash_stability(before: dict, after: dict,
+                         label: str) -> List[Finding]:
+    """`before`/`after`: variant-name -> hash, traced pre/post registering
+    the mixed-config menu.  Any drift means a config escaped its bucket
+    and steady-state traffic would recompile."""
+    out = []
+    for name in sorted(before):
+        if name in after and after[name] != before[name]:
+            out.append(Finding(
+                "JX105", "", 0,
+                f"[{label}] structural hash of '{name}' changed after the "
+                f"mixed menu was registered ({before[name]} -> "
+                f"{after[name]}) — a sampler config escaped its "
+                "coefficient-bank bucket; steady state would recompile"))
+    return out

@@ -1,0 +1,240 @@
+"""Layer 2 menu: build the serve config menu and capture every compiled
+variant — round steps, merges, admits, prefills — with the *actual*
+arguments the engines pass, so the sanitizer traces exactly what serves.
+
+Mechanism: the engines' jitted callables (`_steps[fam]`, `_decode`,
+`_merge`, `_admit_state`, `_prefill`, ...) are wrapped in recording
+proxies, then a warmup request menu covering every (family, corrector)
+cost class is served.  Each recorded (callable, args, kwargs) becomes a
+`Variant` the checks re-`trace()` — abstract evaluation only; nothing
+extra executes on device.
+
+The mixed-config stability probe serves a *second* menu of different
+sampler configs (other NFE budgets / orders / lambdas) through the same
+engine and re-records: if any round-step's structural hash drifts between
+the two passes, a config escaped its coefficient-bank bucket and steady
+state would recompile (JX105).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+from typing import Dict, List, Tuple
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))), "src")
+
+
+def _ensure_path() -> None:
+    try:
+        import repro  # noqa: F401
+    except ImportError:
+        sys.path.insert(0, _SRC)
+
+
+@dataclasses.dataclass
+class Variant:
+    label: str
+    jitted: object
+    args: tuple
+    kwargs: dict
+    donating: bool = False        # expect donation marks in the lowering
+    steady_state: bool = False    # subject to the host-transfer audit
+    f32_only: bool = False        # coefficient-apply dtype walk
+
+
+class _Recorder:
+    """Transparent proxy that records every (args, kwargs) an engine
+    passes to a jitted callable."""
+
+    def __init__(self, inner, name: str, sink: list):
+        self._inner = inner
+        self._name = name
+        self._sink = sink
+
+    def __call__(self, *args, **kwargs):
+        self._sink.append((self._name, self._inner, args, kwargs))
+        return self._inner(*args, **kwargs)
+
+
+def _dedup(calls: list, keyf) -> Dict[str, Tuple]:
+    """First recorded call per variant key (later calls re-dispatch the
+    same compiled program)."""
+    out: Dict[str, Tuple] = {}
+    for name, inner, args, kwargs in calls:
+        key = keyf(name, args, kwargs)
+        if key not in out:
+            out[key] = (inner, args, kwargs)
+    return out
+
+
+def _shape_sig(args, kwargs) -> str:
+    """Compact stable signature of the call's leaf shapes (scalars and
+    python ints collapse to '()' so value-only differences dedup)."""
+    import hashlib
+    import jax
+    leaves = jax.tree.leaves((args, kwargs))
+    sig = ",".join(str(getattr(l, "shape", "()")) for l in leaves)
+    if len(sig) > 48:
+        return f"{len(leaves)}leaves:{hashlib.md5(sig.encode()).hexdigest()[:8]}"
+    return sig
+
+
+# ---------------------------------------------------------------------------
+# diffusion menu
+# ---------------------------------------------------------------------------
+def build_diffusion_variants(quick: bool = False
+                             ) -> Tuple[List[Variant], Dict[str, str]]:
+    """Serve a menu covering every (family, corrector) cost class through
+    one multi-tenant DiffusionEngine; returns the captured variants plus
+    {variant label: structural hash} for the stability probe."""
+    _ensure_path()
+    import jax
+    from repro.configs import get_diffusion
+    from repro.serve import DiffusionEngine, SampleRequest
+    from .jaxprcheck import jaxpr_hash
+
+    fam_names = {"vpsde": "cifar10-ddpm"} if quick else \
+        {"vpsde": "cifar10-ddpm", "cld": "cifar10-cld", "bdm": "cifar10-bdm"}
+    specs, params = {}, {}
+    for i, (fam, name) in enumerate(fam_names.items()):
+        specs[fam] = get_diffusion(name, reduced=True)
+        params[fam] = specs[fam].init(jax.random.PRNGKey(i))
+    B, nfe = (2, 4) if quick else (4, 6)
+    engine = DiffusionEngine(specs, params, batch_size=B, nfe=nfe)
+
+    calls: list = []
+    engine._steps = {n: _Recorder(s, f"step:{n}", calls)
+                     for n, s in engine._steps.items()}
+    engine._admit_state = _Recorder(engine._admit_state, "admit", calls)
+    engine._prior1 = {n: _Recorder(p, f"prior:{n}", calls)
+                      for n, p in engine._prior1.items()}
+    engine._project_row = {n: _Recorder(p, f"project:{n}", calls)
+                           for n, p in engine._project_row.items()}
+
+    def menu(scale: int) -> List[dict]:
+        kinds = [dict(nfe=nfe), dict(nfe=max(nfe // scale, 2), q=2),
+                 dict(nfe=nfe, corrector=True), dict(nfe=nfe, lam=0.5)]
+        if "cld" in specs:
+            kinds += [dict(family="cld", nfe=nfe),
+                      dict(family="cld", nfe=nfe, corrector=True)]
+        if "bdm" in specs:
+            kinds += [dict(family="bdm", nfe=nfe)]
+        return kinds
+
+    def key(name, args, kwargs):
+        if name.startswith("step:"):
+            return f"{name},corr={kwargs.get('with_corrector', False)}"
+        return f"{name}[{_shape_sig(args, kwargs)}]"
+
+    engine.serve([SampleRequest(rid=-1 - i, seed=i, **kw)
+                  for i, kw in enumerate(menu(2))])
+    first = _dedup(calls, key)
+    hashes0 = {k: jaxpr_hash(j.trace(*a, **kw).jaxpr)
+               for k, (j, a, kw) in first.items()
+               if k.startswith("step:")}
+
+    # mixed-config stability probe: new configs, same buckets expected
+    calls.clear()
+    engine.serve([SampleRequest(rid=-100 - i, seed=i, **kw)
+                  for i, kw in enumerate(menu(3))])
+    second = _dedup(calls, key)
+    hashes1 = {k: jaxpr_hash(j.trace(*a, **kw).jaxpr)
+               for k, (j, a, kw) in second.items()
+               if k.startswith("step:")}
+
+    variants = []
+    for k, (jitted, args, kwargs) in sorted(first.items()):
+        is_step = k.startswith("step:")
+        is_admit = k.startswith("admit")
+        variants.append(Variant(
+            label=f"diffusion/{k}", jitted=jitted, args=args, kwargs=kwargs,
+            donating=is_step or is_admit,
+            steady_state=is_step))
+    return variants, {"before": hashes0, "after": hashes1}
+
+
+# ---------------------------------------------------------------------------
+# token menu
+# ---------------------------------------------------------------------------
+def build_token_variants(quick: bool = False) -> List[Variant]:
+    _ensure_path()
+    import numpy as np
+    import jax
+    from repro.configs import get_arch
+    from repro.models.registry import Arch
+    from repro.serve import Request, TokenEngine
+
+    archs = ("gemma3-1b",) if quick else ("gemma3-1b", "rwkv6-7b")
+    variants: List[Variant] = []
+    for arch_name in archs:
+        spec = get_arch(arch_name, reduced=True)
+        arch = Arch(spec)
+        # deterministic trace-menu init; never serves real traffic
+        params = arch.init(
+            jax.random.PRNGKey(0))  # staticcheck: disable=SC102 (fixed seed keeps menu hashes reproducible)
+        engine = TokenEngine(arch, params, batch_size=2, max_len=48)
+        engine.eos_id = -1
+
+        calls: list = []
+        engine._decode = _Recorder(engine._decode, "decode", calls)
+        engine._merge = _Recorder(engine._merge, "merge", calls)
+        engine._admit_state = _Recorder(engine._admit_state, "admit", calls)
+        engine._prefill = _Recorder(engine._prefill, "prefill", calls)
+
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        tokens=rng.integers(2, arch.cfg.vocab, 8)
+                        .astype(np.int32),
+                        max_new=4)
+                for i in range(3)]
+        engine.serve(reqs)
+
+        def key(name, args, kwargs):
+            return f"{name}[{_shape_sig(args, kwargs)}]"
+
+        for k, (jitted, args, kwargs) in sorted(_dedup(calls, key).items()):
+            variants.append(Variant(
+                label=f"token/{arch_name}/{k}", jitted=jitted,
+                args=args, kwargs=kwargs,
+                donating=k.startswith(("decode", "merge", "admit")),
+                steady_state=k.startswith("decode")))
+    return variants
+
+
+# ---------------------------------------------------------------------------
+# coefficient-apply + kernel entries
+# ---------------------------------------------------------------------------
+def coeff_apply_traces() -> List[Tuple[str, object]]:
+    """The coefficient-apply subgraph in both impls, at serve shapes —
+    subject to the strict f32-only dtype walk."""
+    _ensure_path()
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ei_update import ops
+
+    B, k, D = 4, 2, 3072
+    blk = jnp.zeros((B, k, k), jnp.float32)
+    diag = jnp.zeros((B, D), jnp.float32)
+    z = jnp.zeros((B, k, D), jnp.float32)
+    return [
+        ("coeff_apply/ref",
+         jax.make_jaxpr(lambda b, d, s: ops.apply_factored(
+             b, d, s, impl="ref"))(blk, diag, z)),
+        ("coeff_apply/pallas",
+         jax.make_jaxpr(lambda b, d, s: ops.apply_factored(
+             b, d, s, impl="pallas"))(blk, diag, z)),
+    ]
+
+
+def kernel_entries() -> List[Tuple[str, object]]:
+    _ensure_path()
+    from repro.kernels.dct2 import ops as dct2_ops
+    from repro.kernels.decode_attention import ops as da_ops
+    from repro.kernels.ei_update import ops as ei_ops
+
+    out: List[Tuple[str, object]] = []
+    for mod in (ei_ops, dct2_ops, da_ops):
+        out.extend(mod.staticcheck_entries())
+    return out
