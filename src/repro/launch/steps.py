@@ -136,6 +136,23 @@ def make_token_round_step(arch: Arch):
     return round_step
 
 
+def make_mask_snapshot():
+    """Fresh device copies of the token done/progress mask, for the
+    double-buffered online poll (`ServeLoop.serve_stream`): the loop
+    dispatches this *before* enqueueing the look-ahead round, then blocks
+    on the snapshot — not on `state.active` itself, whose buffer the next
+    round's donation invalidates.  Round k+1 therefore executes while the
+    host waits on round k's mask, and the copy is device->device: the
+    steady-state no-host-transfer contract (JX104) is untouched.
+
+    The ops are identity-shaped but not identities (`| False` / `+ 0`), so
+    XLA materializes output buffers distinct from the round state's."""
+    def snap(active, n_out):
+        return active | False, n_out + 0
+
+    return snap
+
+
 def make_diffusion_round_step(spec, fam_index: int = 0):
     """Bank-mode gDDIM step over a device-resident `DiffusionState`: the
     Eq. 19/22/45 update of `make_diffusion_serve_step` plus the per-slot

@@ -18,7 +18,15 @@ host only paces the loop.
     placement across mesh shards
   * `Scheduler` (scheduler.py) — FIFO admission with head-of-line grouping
     so prefill waves share one shape (no padding into recurrent state) and
-    sampling waves share a (family, corrector) cost class
+    sampling waves share a (family, corrector) cost class;
+    `DeadlineScheduler` is the online variant — urgency order (priority,
+    deadline, arrival), still class-homogeneous waves
+  * online serving (`ServeLoop.serve_stream`) — streaming arrivals from a
+    seeded `TraceTraffic` against a `VirtualClock` (traffic.py),
+    deadline/priority admission with preemption into a host-side
+    `ParkingTable` (parking.py: suspended slot rows restored bitwise), a
+    double-buffered poll, and per-request latency accounting
+    (`RequestTiming`, `serving_metrics`)
   * `TokenEngine` — continuous-batching greedy decode over any Arch family
     (KV-cache transformers, RWKV/Mamba recurrent state, encoder-decoder
     with cross-attention memory), width-bucketed batched prefill
@@ -41,13 +49,21 @@ See `repro.launch.serve` for the CLI, `docs/serving.md` for the full API
 reference, and `examples/serve_batched.py` for a worked walkthrough.
 """
 from .slots import Slot, SlotTable
-from .scheduler import Request, SampleRequest, Scheduler
+from .scheduler import (DeadlineScheduler, Request, SampleRequest,
+                        Scheduler, urgency_key)
 from .loop import ServeLoop
+from .parking import ParkingTable, row_fetch, row_restore
 from .state import DiffusionState, TokenState
+from .traffic import (Arrival, RequestTiming, TraceTraffic, VirtualClock,
+                      poisson_trace, serving_metrics)
 from .engine import TokenEngine, DiffusionEngine
 
 __all__ = [
     "Slot", "SlotTable", "Request", "SampleRequest", "Scheduler",
+    "DeadlineScheduler", "urgency_key",
     "ServeLoop", "TokenState", "DiffusionState",
+    "ParkingTable", "row_fetch", "row_restore",
+    "Arrival", "TraceTraffic", "VirtualClock", "poisson_trace",
+    "RequestTiming", "serving_metrics",
     "TokenEngine", "DiffusionEngine",
 ]

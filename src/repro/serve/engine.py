@@ -67,6 +67,7 @@ from ..core import CoeffCache, SamplerConfig
 from ..sde.base import family_name
 from ..distributed import sharding as shd
 from .loop import ServeLoop, bucket_pow2
+from .parking import row_fetch, row_restore
 from .scheduler import Request, SampleRequest, Scheduler
 from .state import (DiffusionState, TokenState, diffusion_state_init,
                     token_state_init)
@@ -135,6 +136,34 @@ def _make_token_admit(out_shardings=None):
             active=state.active.at[slot_ids].set(born_active, mode="drop"))
 
     return _jit_state_update(admit, (0,), out_shardings)
+
+
+def _make_row_gather(batch_axes: List[int]):
+    """jitted (tree, i) -> row `i` of every leaf, each taken along its own
+    batch axis (the cache twin of parking.row_fetch, whose leaves are all
+    batch-leading).  `i` is a traced argument: one compiled gather serves
+    every slot index, so repeated preemptions never recompile."""
+
+    def gather(tree, i):
+        leaves, treedef = jax.tree.flatten(tree)
+        rows = [jnp.moveaxis(x, ax, 0)[i]
+                for x, ax in zip(leaves, batch_axes)]
+        return jax.tree.unflatten(treedef, rows)
+
+    return jax.jit(gather)
+
+
+def _make_deactivate(out_shardings=None):
+    """jitted (state, i) -> state with slot `i`'s active flag cleared: a
+    suspended slot's device row must stop advancing the moment its payload
+    is parked (the frozen row is overwritten at re-admission either way —
+    this just stops the round step from burning FLOPs on a parked row).
+    The state is donated, like every state update."""
+
+    def deactivate(state, i):
+        return state._replace(active=state.active.at[i].set(False))
+
+    return _jit_state_update(deactivate, (0,), out_shardings)
 
 
 def _make_diffusion_admit(out_shardings=None):
@@ -215,6 +244,17 @@ class TokenEngine(ServeLoop):
         self._merge = _make_row_scatter(jax.tree.leaves(axes_tree),
                                         out_shardings=caches_sh)
         self._admit_state = _make_token_admit(out_shardings=state_sh)
+        self._cache_axes = jax.tree.leaves(axes_tree)
+        # preemption machinery (serve_stream): gather a slot's state +
+        # cache rows for parking, deactivate the parked device row, and
+        # restore the parked bits into a free row on resume.  All take the
+        # slot index as a traced argument — one compile each, warmed by
+        # the first preemption
+        self._fetch_row = jax.jit(row_fetch)
+        self._fetch_cache_row = _make_row_gather(self._cache_axes)
+        self._deactivate = _make_deactivate(out_shardings=state_sh)
+        self._restore = _jit_state_update(row_restore, (0,), state_sh)
+        self._snapshot = jax.jit(steps_lib.make_mask_snapshot())
         # the round step is donated on (state, caches): in-place at the XLA
         # level, no per-step copy of the KV/recurrent cache.  Output
         # shardings are pinned in mesh mode so retire-and-refill cycles
@@ -256,7 +296,12 @@ class TokenEngine(ServeLoop):
     def compile_stats(self) -> Dict[str, int]:
         stats = {"decode": _cache_size(self._decode),
                  "prefill": _cache_size(self._prefill),
-                 "merge": _cache_size(self._merge)}
+                 "merge": _cache_size(self._merge),
+                 "park": _cache_size(self._fetch_row)
+                 + _cache_size(self._fetch_cache_row)
+                 + _cache_size(self._deactivate),
+                 "resume": _cache_size(self._restore),
+                 "snapshot": _cache_size(self._snapshot)}
         if self._encode is not None:
             stats["encode"] = _cache_size(self._encode)
         return stats
@@ -328,15 +373,21 @@ class TokenEngine(ServeLoop):
         for s in self.slots.active():
             s.data["n_out"] += 1
 
-    def _poll(self, results: Dict[int, np.ndarray]) -> int:
+    def _poll(self, results: Dict[int, np.ndarray], snap=None,
+              lag: int = 0) -> int:
         busy = self.slots.active()
         if not busy:
             return 0
-        # the one steady-state device fetch: the done/progress mask
-        active, n_out = jax.device_get(  # staticcheck: disable=SC103 (the one sanctioned steady-state fetch: done/progress mask, once per poll)
-            (self.state.active, self.state.n_out))
+        if snap is None:
+            snap = (self.state.active, self.state.n_out)
+        # the one steady-state device fetch: the done/progress mask (in
+        # the double-buffered online poll, a snapshot taken before the
+        # look-ahead round — blocking here overlaps that round's compute)
+        active, n_out = jax.device_get(snap)  # staticcheck: disable=SC103 (the one sanctioned steady-state fetch: done/progress mask, once per poll)
         finished = [s for s in busy if not active[s.index]]
         if finished:
+            # retired rows are frozen, so reading the *live* out buffer is
+            # exact even with a look-ahead round in flight
             out = jax.device_get(self.state.out)  # staticcheck: disable=SC103 (terminal drain: runs only when a request finished, not steady-state)
             for s in finished:
                 n = int(n_out[s.index])
@@ -344,8 +395,43 @@ class TokenEngine(ServeLoop):
                 self.n_tokens_out += n
                 self.slots.release(s.index)
         for s in self.slots.active():
-            s.data["n_out"] = int(n_out[s.index])
+            # resync the shadow from the snapshot, plus the rounds
+            # dispatched after it (`lag`: the online look-ahead)
+            s.data["n_out"] = int(n_out[s.index]) + lag
         return len(finished)
+
+    def _poll_snapshot(self):
+        with self._ctx():
+            return self._snapshot(self.state.active, self.state.n_out)
+
+    def _suspend_slot(self, slot):
+        i = np.int32(slot.index)
+        with self._ctx():
+            state_row = self._fetch_row(self.state, i)
+            cache_row = self._fetch_cache_row(self.caches, i)
+            mem_row = None if self.memory is None \
+                else self._fetch_row(self.memory, i)
+            self.state = self._deactivate(self.state, i)
+        return (state_row, cache_row, mem_row)
+
+    def _resume_slot(self, request: Request, shadow: dict, payload,
+                     index: int) -> None:
+        state_row, cache_row, mem_row = payload
+        ids = jnp.asarray([index], np.int32)
+        # the cache scatter expects source rows in the caches' own layout
+        # (batch axis in place, size 1) — the merge is the same program
+        # width-1 admission waves warm
+        leaves, treedef = jax.tree.flatten(cache_row)
+        src = jax.tree.unflatten(treedef, [
+            np.expand_dims(x, ax)
+            for x, ax in zip(leaves, self._cache_axes)])
+        with self._ctx():
+            self.caches = self._merge(self.caches, src, ids)
+            if mem_row is not None:
+                self.memory = self._merge_memory(
+                    self.memory, mem_row[None], ids)
+            self.state = self._restore(self.state, state_row,
+                                       np.int32(index))
 
     def _remaining_lb(self, slot) -> int:
         return slot.data["budget"] - slot.data["n_out"]
@@ -522,6 +608,14 @@ class DiffusionEngine(ServeLoop):
                 (1,), state_sh, static_argnames=("with_corrector",))
             for n, s in specs.items()}
         self._admit_state = _make_diffusion_admit(out_shardings=state_sh)
+        # preemption machinery (serve_stream): every DiffusionState leaf is
+        # batch-leading, so the generic parking row fetch/restore covers the
+        # whole per-slot row (u, hist, k, cfg, fam, keys, active) — a
+        # resumed slot continues mid-trajectory, mid-multistep-history, on
+        # exactly the bits it was suspended with
+        self._fetch_row = jax.jit(row_fetch)
+        self._deactivate = _make_deactivate(out_shardings=state_sh)
+        self._restore = _jit_state_update(row_restore, (0,), state_sh)
 
         def make_prior(s):
             from ..kernels.ei_update.ops import pad_channels
@@ -555,7 +649,10 @@ class DiffusionEngine(ServeLoop):
         # it stays put across any traffic mix whose configs fit the warmed
         # coefficient buckets
         return {"step": sum(_cache_size(s) for s in self._steps.values()),
-                "prior": sum(_cache_size(p) for p in self._prior1.values())}
+                "prior": sum(_cache_size(p) for p in self._prior1.values()),
+                "park": _cache_size(self._fetch_row)
+                + _cache_size(self._deactivate),
+                "resume": _cache_size(self._restore)}
 
     def config_of(self, req: SampleRequest) -> SamplerConfig:
         d = self.default_config
@@ -658,12 +755,21 @@ class DiffusionEngine(ServeLoop):
         for s in self.slots.active():
             s.data["k"] += 1
 
-    def _poll(self, results: Dict[int, np.ndarray]) -> int:
+    def _poll(self, results: Dict[int, np.ndarray], snap=None,
+              lag: int = 0) -> int:
         # retirement is exactly predictable from the host shadow (k reaches
         # the config's NFE after exactly NFE rounds): no device fetch at
-        # all for metadata, only the finished samples themselves
+        # all for metadata, only the finished samples themselves.  There is
+        # no device mask to snapshot, so the online poll's observation
+        # point is reconstructed by discounting `lag` (rounds dispatched
+        # after it — the look-ahead): a slot that finishes *inside* the
+        # look-ahead round retires at the next poll, exactly like the
+        # token engine's snapshot semantics, so its completion stamp never
+        # predates the round that produced it.  The round step freezes a
+        # finished row on device (active = k < nfe), so reading the live
+        # `state.u` under a look-ahead round in flight is bitwise exact
         done = [s for s in self.slots.active()
-                if s.data["k"] >= s.data["nfe"]]
+                if s.data["k"] - lag >= s.data["nfe"]]
         for s in done:
             with self._ctx():
                 row = self._project_row[s.data["family"]](self.state.u,
@@ -672,6 +778,29 @@ class DiffusionEngine(ServeLoop):
             self.n_samples_out += 1
             self.slots.release(s.index)
         return len(done)
+
+    def _suspend_slot(self, slot):
+        i = np.int32(slot.index)
+        with self._ctx():
+            row = self._fetch_row(self.state, i)    # before the deactivate:
+            self.state = self._deactivate(self.state, i)  # parked active=True
+        return row
+
+    def _resume_slot(self, request: SampleRequest, shadow: dict, payload,
+                     index: int) -> None:
+        qb = self.state.hist.shape[1]
+        hist = payload.hist
+        if hist.shape[0] < qb:
+            # the bank's Qb bucket grew while the row was parked (a first-
+            # seen higher-q config arrived): pad with zeros — exactly what
+            # `_refresh_bank` padded every *resident* row with, so resumed
+            # == never-suspended, bitwise, across the regrowth
+            pad = np.zeros((qb - hist.shape[0],) + hist.shape[1:],
+                           hist.dtype)
+            payload = payload._replace(
+                hist=np.concatenate([hist, pad], axis=0))
+        with self._ctx():
+            self.state = self._restore(self.state, payload, np.int32(index))
 
     def _remaining_lb(self, slot) -> int:
         return slot.data["nfe"] - slot.data["k"]

@@ -36,6 +36,14 @@ rounds; token decode with eos disabled) the bound is tight and the loop
 never runs a wasted round; an early eos retirement is simply observed at
 the next poll.
 
+`serve()` consumes a pre-submitted menu with the FIFO scheduler;
+`serve_stream()` is the *online* path — arrivals stream in from a
+`TraceTraffic` against a virtual clock, admission is deadline/priority
+urgency (`DeadlineScheduler`) with preemption into a host-side
+`ParkingTable`, and the poll is double-buffered (the look-ahead round is
+enqueued before the host blocks on the previous round's done-mask
+snapshot).  Both paths share the admit/round/poll machinery and hooks.
+
 Mesh awareness also lives here: constructed with a `Mesh`, the loop derives
 the slot-batch shard count (for round-robin free-slot placement across
 shards, see `SlotTable`) and runs every device call inside the mesh context
@@ -45,12 +53,16 @@ params / caches / state via the serve rules in `distributed.sharding`.
 from __future__ import annotations
 
 import contextlib
+import math
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
 from ..distributed import sharding as shd
+from .parking import ParkingTable
+from .scheduler import DeadlineScheduler
 from .slots import SlotTable
+from .traffic import RequestTiming, VirtualClock
 
 Mesh = Any
 
@@ -124,6 +136,15 @@ class ServeLoop:
         self.n_shards = n_shards
         self.slots = SlotTable(batch_size, n_shards=n_shards)
         self.n_polls = 0
+        # online-serving surface (serve_stream): parked rows of preempted
+        # slots, preemption counters, per-request latency log, and the
+        # per-call wave/preemption traces the property tests assert over
+        self.parking = ParkingTable()
+        self.n_preemptions = 0
+        self.n_resumes = 0
+        self.request_log: Dict[int, RequestTiming] = {}
+        self.wave_log: List[tuple] = []
+        self.preemption_log: List[tuple] = []
 
     # ---- public API ---------------------------------------------------------
     def serve(self, requests: List[Any]) -> Dict[int, np.ndarray]:
@@ -132,6 +153,7 @@ class ServeLoop:
             self._validate(r)
         self._prepare(requests)
         self.scheduler.submit_all(requests)
+        self.wave_log = []
         results: Dict[int, np.ndarray] = {}
         while self.scheduler.has_pending() or self.slots.active_ids():
             self._admit()
@@ -149,6 +171,123 @@ class ServeLoop:
                 self._round()                           # pragma: no cover
         return results
 
+    def serve_stream(self, traffic, clock: Optional[VirtualClock] = None,
+                     round_cost: float = 1.0) -> Dict[int, np.ndarray]:
+        """Online serving: pull an open-ended arrival stream from `traffic`
+        (serve/traffic.py) as `clock` reaches each arrival time, admit by
+        deadline/priority urgency with preemption, and double-buffer the
+        poll so round k+1 is enqueued before the host blocks on round k's
+        done mask.  Returns results keyed by rid, like `serve`; per-request
+        arrival/admission/completion timestamps land in `request_log`
+        (summarized by `traffic.serving_metrics`).
+
+        The clock is virtual by default: it advances exactly one
+        `round_cost` per dispatched round and jumps over idle gaps, so a
+        run is a pure function of (trace, engine, seeds) and the
+        simulation tier replays it deterministically on CI.
+
+        Scheduling contract (asserted by tests/test_properties.py):
+
+          * admission order is urgency — priority, then earliest deadline,
+            then arrival (`DeadlineScheduler`); waves never mix (family,
+            corrector) classes, preemption or not;
+          * a pending request preempts only a *strictly lower priority*
+            active slot (lowest priority first, most remaining work as the
+            tie-break); the victim's state row is parked host-side and
+            restored bitwise on resume, so preemption changes when a
+            result is computed, never the result;
+          * polls happen only when a retirement is possible (the host
+            lower bound reached zero) or `sync_every` rounds have run —
+            an arrival-dense trace does not degrade to per-round syncing
+            (the poll-cadence counter in the online benchmark gates this).
+        """
+        clock = VirtualClock() if clock is None else clock
+        if round_cost <= 0:
+            raise ValueError(f"round_cost must be > 0, got {round_cost}")
+        results: Dict[int, np.ndarray] = {}
+        self.request_log = {}
+        self.wave_log = []
+        self.preemption_log = []
+        seen: set = set()
+        fifo = self.scheduler
+        self.scheduler = DeadlineScheduler(group_key=fifo._group_key)
+        since_poll = 0          # rounds dispatched since the last poll
+        try:
+            while True:
+                for arr in traffic.due(clock.now()):
+                    r = arr.request
+                    if r.rid in seen:
+                        raise ValueError(
+                            f"duplicate request rid {r.rid} in trace")
+                    seen.add(r.rid)
+                    self._validate(r)
+                    self._prepare([r])
+                    self.scheduler.submit(r)
+                    self.request_log[r.rid] = RequestTiming(
+                        t_arrival=arr.t,
+                        deadline=getattr(r, "deadline", None),
+                        priority=getattr(r, "priority", 0))
+                if not (self.slots.active_ids()
+                        or self.scheduler.has_pending()):
+                    nxt = traffic.next_time()
+                    if nxt is None:
+                        break                     # drained: stream is done
+                    clock.advance_to(nxt)         # idle: skip to the next
+                    continue                      # arrival
+                self._admit_stream(now=clock.now())
+                active = self.slots.active()
+                if not active:                              # pragma: no cover
+                    nxt = traffic.next_time()     # defensive: pending but
+                    if nxt is None:               # unadmittable cannot
+                        break                     # happen (free slots exist
+                    clock.advance_to(nxt)         # whenever nothing is
+                    continue                      # active)
+                # window: rounds until the earliest of (possible
+                # retirement, forced poll, next arrival) — each dispatched
+                # round advances the clock, look-ahead rounds included,
+                # so virtual time == rounds in flight
+                lb = min(self._remaining_lb(s) for s in active)
+                n = min(lb, self.sync_every - since_poll)
+                nxt = traffic.next_time()
+                if nxt is not None:
+                    gap = int(math.ceil((nxt - clock.now()) / round_cost))
+                    n = min(n, max(gap, 1))
+                for _ in range(max(n, 0)):
+                    self._round()
+                    clock.advance(round_cost)
+                    since_poll += 1
+                # poll-cadence fix: an arrival-capped window ends with no
+                # slot at its retirement bound — skip the poll instead of
+                # regressing to per-round syncing (frozen rows make a late
+                # observation safe; `sync_every` still forces one)
+                if (lb - max(n, 0)) > 0 and since_poll < self.sync_every:
+                    continue
+                # double-buffered poll: snapshot the done mask, enqueue
+                # the look-ahead round, then block on the snapshot — round
+                # k+1 executes while the host waits on round k
+                t_mark = clock.now()
+                snap = self._poll_snapshot()
+                nxt = traffic.next_time()
+                lag = 0
+                if (nxt is None or nxt > clock.now()) \
+                        and any(self._remaining_lb(s) > 0
+                                for s in self.slots.active()):
+                    self._round()
+                    clock.advance(round_cost)
+                    lag = 1
+                before = set(results)
+                self._poll(results, snap=snap, lag=lag)
+                self.n_polls += 1
+                since_poll = lag
+                for rid in set(results) - before:
+                    timing = self.request_log.get(rid)
+                    if timing is not None:
+                        timing.t_done = t_mark
+            assert len(self.parking) == 0   # parked ⊆ pending, both drained
+            return results
+        finally:
+            self.scheduler = fifo
+
     # ---- shared loop pieces -------------------------------------------------
     def _admit(self) -> None:
         """Fill free slots from the queue in class-homogeneous waves (one
@@ -159,9 +298,88 @@ class ServeLoop:
             group = self.scheduler.take_group(len(free))
             if not group:
                 return
-            self._admit_wave(group, free)
+            self._place_group(group, free)
             if not self.greedy_admit:
                 return
+
+    def _admit_stream(self, now: float) -> int:
+        """Online admission: fill free slots in urgency order, then let the
+        most urgent pending request preempt strictly-lower-priority active
+        slots while the batch is full.  Each eviction parks the victim's
+        state row host-side and re-queues it (it competes again by its own
+        urgency), so every iteration admits the pending head that justified
+        it and eviction chains strictly descend in priority — no cycles,
+        no starvation by churn."""
+        admitted = 0
+        while True:
+            free = self.slots.free_ids()
+            group = self.scheduler.take_group(len(free))
+            if not group:
+                break
+            self._place_group(group, free, now=now)
+            admitted += len(group)
+            if not self.greedy_admit:
+                break
+        while True:
+            head = self.scheduler.peek()
+            if head is None or self.slots.free_ids():
+                break
+            prio = getattr(head, "priority", 0)
+            victims = [s for s in self.slots.active()
+                       if getattr(s.request, "priority", 0) < prio]
+            if not victims:
+                break
+            victim = min(victims, key=lambda s: (
+                getattr(s.request, "priority", 0),
+                -self._remaining_lb(s), s.index))
+            self.preemption_log.append(
+                (head.rid, prio, victim.request.rid,
+                 getattr(victim.request, "priority", 0)))
+            self._suspend(victim)
+            free = self.slots.free_ids()
+            group = self.scheduler.take_group(len(free))
+            if group:
+                self._place_group(group, free, now=now)
+                admitted += len(group)
+        return admitted
+
+    def _place_group(self, group, free, now: Optional[float] = None) -> None:
+        """Land one class-homogeneous wave: fresh requests through the
+        engine's admission scatter, parked ones through the bitwise row
+        restore.  `free` is consumed left-to-right (fresh first), matching
+        the engines' wave layout."""
+        self.wave_log.append(
+            tuple(self.scheduler._group_key(r) for r in group))
+        fresh = [r for r in group if r.rid not in self.parking]
+        parked = [r for r in group if r.rid in self.parking]
+        if fresh:
+            self._admit_wave(fresh, list(free[:len(fresh)]))
+        for j, r in enumerate(parked):
+            payload, shadow, _ = self.parking.pop(r.rid)
+            index = free[len(fresh) + j]
+            self._resume_slot(r, shadow, payload, index)
+            self.slots.assign(index, r, **shadow)
+            self.n_resumes += 1
+        if now is not None:
+            for r in group:
+                timing = self.request_log.get(r.rid)
+                if timing is not None and timing.t_admit is None:
+                    timing.t_admit = now
+
+    def _suspend(self, slot) -> None:
+        """Preempt one active slot: park its device row(s) host-side (the
+        engine's `_suspend_slot` gathers them and deactivates the device
+        row), free the slot, and re-queue the request — its restored run
+        is bitwise the uninterrupted one."""
+        req = slot.request
+        payload = self._suspend_slot(slot)
+        self.parking.park(req.rid, payload, slot.data, req)
+        self.slots.release(slot.index)
+        self.scheduler.submit(req)
+        self.n_preemptions += 1
+        timing = self.request_log.get(req.rid)
+        if timing is not None:
+            timing.n_preempted += 1
 
     def _rounds_until_poll(self) -> int:
         lb = min(self._remaining_lb(s) for s in self.slots.active())
@@ -189,7 +407,29 @@ class ServeLoop:
     def _round(self) -> None:
         raise NotImplementedError
 
-    def _poll(self, results) -> int:
+    def _poll(self, results, snap=None, lag: int = 0) -> int:
+        """Observe device progress, retire finished slots into `results`.
+        `snap` (from `_poll_snapshot`) is the done-mask snapshot the
+        double-buffered online poll blocks on instead of the live state;
+        `lag` is how many rounds were dispatched after that snapshot (the
+        look-ahead), so shadow resyncs can stay exact."""
+        raise NotImplementedError
+
+    def _poll_snapshot(self):
+        """Device snapshot of whatever `_poll` fetches, dispatched before
+        the look-ahead round is enqueued (whose donation invalidates the
+        live state's buffers).  None for engines whose poll is pure host
+        arithmetic (diffusion: retirement is exactly predictable)."""
+        return None
+
+    def _suspend_slot(self, slot):
+        """Gather slot `slot.index`'s device row(s) for parking and
+        deactivate the device row; returns the device payload the
+        `ParkingTable` will fetch host-side."""
+        raise NotImplementedError
+
+    def _resume_slot(self, request, shadow, payload, index: int) -> None:
+        """Restore a parked payload into slot row `index`, bitwise."""
         raise NotImplementedError
 
     def _remaining_lb(self, slot) -> int:

@@ -1,0 +1,79 @@
+"""Host-side parking table: suspended slot rows, restored bitwise.
+
+Preempting a slot (loop.py `_suspend`) must not lose work: the engine
+gathers the slot's row of every device pytree — the `DiffusionState` /
+`TokenState` row, KV/recurrent cache rows, encoder memory — and the
+parking table keeps the fetched copy on the *host*, keyed by request rid,
+next to the host shadow dict the `SlotTable` was tracking.  Resuming
+scatters the same bits back into whichever slot row is free at that point
+(`row_restore` below, jitted with the state donated by the engine), so a
+preempted request's remaining rounds compute on exactly the state it was
+suspended with: solo == preempted+resumed, bitwise, which
+tests/test_serve_online.py asserts per family and mid-multistep.
+
+The row layout is the engines' existing pytree row layout — fetch and
+restore are generic `tree.map`s over batch-leading leaves, there is no
+parking-specific serialization — so anything the round step can consume
+round-trips (a hypothesis property in tests/test_properties.py drives
+arbitrary pytrees through `row_fetch`/`row_restore`).
+
+Parking is OFF the steady-state path by construction: the device fetch
+happens only at a preemption decision, the device put only at a resume —
+both admission-class events, like prefill.  This module is registered as
+a staticcheck hot-path module (SC103/SC105) so any host sync that is NOT
+the sanctioned park fetch fails the lint.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Tuple
+
+import jax
+
+
+def row_fetch(tree: Any, i) -> Any:
+    """Row `i` of every batch-leading leaf of `tree` (jit-able; the engine
+    jits one instance so repeated preemptions reuse one compiled gather
+    for any slot index)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def row_restore(tree: Any, row: Any, i) -> Any:
+    """`tree` with `row` written back at batch index `i` of every leaf —
+    the bitwise inverse of `row_fetch` for the written row.  The engine
+    jits this with `tree` donated (and, in mesh mode, output shardings
+    pinned), so a resume updates the state in place like a round does."""
+    return jax.tree.map(lambda d, r: d.at[i].set(r), tree, row)
+
+
+class ParkingTable:
+    """rid -> (host payload, host shadow, request) for suspended slots.
+
+    `park` materializes the device rows on the host at the moment of
+    suspension (the slot is about to be overwritten by the preempting
+    admission); `pop` hands them back for the resume scatter.  Counters
+    are cumulative over the table's lifetime — the benchmark reports
+    them next to the loop's n_preemptions/n_resumes."""
+
+    def __init__(self):
+        self._rows: Dict[int, Tuple[Any, dict, Any]] = {}
+        self.n_parked_total = 0
+
+    def park(self, rid: int, device_rows: Any, shadow: dict,
+             request: Any) -> None:
+        if rid in self._rows:
+            raise ValueError(f"request {rid} is already parked")
+        payload = jax.device_get(device_rows)  # staticcheck: disable=SC103 (the sanctioned park fetch: one slot row at a preemption decision, not steady-state)
+        self._rows[rid] = (payload, dict(shadow), request)
+        self.n_parked_total += 1
+
+    def pop(self, rid: int) -> Tuple[Any, dict, Any]:
+        return self._rows.pop(rid)
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._rows
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def rids(self) -> Iterable[int]:
+        return tuple(self._rows)

@@ -18,6 +18,15 @@ request with a new prompt length therefore waits for the current length
 run to drain rather than being reordered around — simple, starvation-free,
 and it keeps the number of distinct prefill shapes (→ compilations) at one
 per prompt length actually seen.
+
+The online path (`ServeLoop.serve_stream`) swaps in `DeadlineScheduler`:
+same queue surface, but admission order is urgency — priority first
+(higher preempts strictly lower, see loop.py), earliest deadline within a
+priority, arrival order as the tie-break so no-deadline requests cannot
+starve.  Waves stay (group key)-homogeneous: the wave is built from the
+most urgent request's class, in urgency order, skipping over other
+classes instead of stopping at them (an online mix should not make an
+urgent request wait for an unrelated class run to drain).
 """
 from __future__ import annotations
 
@@ -36,6 +45,8 @@ class Request:
     tokens: np.ndarray                  # (L,) int32 prompt
     max_new: int = 16
     frames: Optional[np.ndarray] = None  # (ctx, d_model) f32, encdec archs
+    priority: int = 0                   # higher = more urgent (online path)
+    deadline: Optional[float] = None    # absolute virtual-clock time
 
     @property
     def prompt_len(self) -> int:
@@ -62,6 +73,12 @@ class SampleRequest:
     lam: Optional[float] = None         # stochasticity lambda (Eq. 22)
     grid: Optional[str] = None          # 'quadratic' | 'uniform'
     family: Optional[str] = None        # SDE family ('vpsde'|'cld'|'bdm')
+    priority: int = 0                   # higher = more urgent (online path)
+    deadline: Optional[float] = None    # absolute virtual-clock time
+
+    # deadline/priority never enter the sampler config: a preempted render
+    # resumes on restored state, so urgency changes *when* a sample is
+    # computed, not *what* (bitwise, tests/test_serve_online.py)
 
 
 class Scheduler:
@@ -93,3 +110,56 @@ class Scheduler:
                 and self._group_key(self._queue[0]) == key:
             group.append(self._queue.popleft())
         return group
+
+
+def urgency_key(request: Any):
+    """Total order on pending requests for the online path: priority
+    strictly first (higher = smaller key = more urgent), earliest deadline
+    within a priority (no deadline sorts last), and submission order as
+    the final tie-break — FIFO among equals, so a request can only be
+    overtaken by one that is strictly more urgent, never starved by
+    churn.  (The submission sequence number is appended by the scheduler;
+    this helper orders the (priority, deadline) prefix.)"""
+    deadline = getattr(request, "deadline", None)
+    has_deadline = deadline is not None
+    return (-getattr(request, "priority", 0),
+            not has_deadline, deadline if has_deadline else 0.0)
+
+
+class DeadlineScheduler(Scheduler):
+    """Urgency-ordered admission for `ServeLoop.serve_stream` (see the
+    module docstring).  Same `submit`/`take_group` surface as the FIFO
+    scheduler so the engines' admission machinery is reused unchanged;
+    `peek()` additionally exposes the most urgent pending request so the
+    loop can decide whether it justifies a preemption."""
+
+    def __init__(self, group_key: Callable[[Any], Any] = lambda r: None):
+        super().__init__(group_key)
+        self._seq = 0
+
+    def submit(self, request: Any) -> None:
+        self._queue.append((self._seq, request))
+        self._seq += 1
+
+    def _order(self) -> List[Any]:
+        return sorted(self._queue,
+                      key=lambda e: urgency_key(e[1]) + (e[0],))
+
+    def peek(self) -> Optional[Any]:
+        if not self._queue:
+            return None
+        return self._order()[0][1]
+
+    def take_group(self, n: int) -> List[Any]:
+        """Up to `n` pending requests sharing the *most urgent* request's
+        group key, in urgency order (other classes are skipped over, not
+        waited behind)."""
+        if n <= 0 or not self._queue:
+            return []
+        ordered = self._order()
+        key = self._group_key(ordered[0][1])
+        group = [e for e in ordered
+                 if self._group_key(e[1]) == key][:n]
+        for e in group:
+            self._queue.remove(e)
+        return [r for _, r in group]

@@ -31,6 +31,13 @@ threefold:
 Retired slots are *frozen*, not cleared: the round step masks every update
 with `active`, so a finished slot's `out` rows / sampler state survive
 verbatim until the host fetches them and re-admits into the row.
+
+Preemption (the online path, loop.py `serve_stream`) reuses the same row
+layout verbatim: suspending a slot parks row `i` of every leaf host-side
+(`serve.parking.row_fetch`) and resuming scatters the identical bits into
+whichever row is free (`row_restore`) — there is no separate
+serialization format, so anything the round step can consume round-trips
+bitwise.
 """
 from __future__ import annotations
 

@@ -1,0 +1,125 @@
+"""Virtual-clock simulation rig for the online serving tests.
+
+The online loop (`ServeLoop.serve_stream`) is already deterministic — its
+clock is explicit and advances only with dispatched rounds — so "simulate"
+here means running the *same* loop against either
+
+  * `RecordingClock` — a `VirtualClock` that journals every advance, so a
+    golden test can assert the exact schedule the loop executed, not just
+    its end state; and
+  * `HostSimEngine` — a pure-host `ServeLoop` whose "device" is a dict of
+    integer progress counters.  One round of work is one unit; a request
+    with `work=n` retires after exactly n rounds.  No jax device work at
+    all, so the scheduling/preemption/latency properties (golden metrics
+    in test_serve_online.py, the hypothesis properties in
+    test_properties.py) run in milliseconds while exercising the very
+    loop code the real engines inherit — admission, urgency, preemption
+    into the real `ParkingTable`, the double-buffered poll skeleton, the
+    poll cadence, and the latency accounting.
+
+`trace_of(...)` builds hand-written traces tersely:
+
+    trace_of((0.0, SimRequest(rid=0, work=4)),
+             (2.5, SimRequest(rid=1, work=2, priority=1)))
+"""
+from typing import Optional
+
+import dataclasses
+
+import numpy as np
+
+from repro.serve import Arrival, ServeLoop, Scheduler, TraceTraffic, \
+    VirtualClock
+
+
+class RecordingClock(VirtualClock):
+    """VirtualClock that journals its own movement: `events` holds
+    ("round", t_after) per `advance` and ("skip", t_after) per effective
+    `advance_to`, so tests can assert exactly when the loop worked and
+    when it idled."""
+
+    def __init__(self, t0: float = 0.0):
+        super().__init__(t0)
+        self.events = []
+
+    def advance(self, dt: float) -> None:
+        super().advance(dt)
+        self.events.append(("round", self.now()))
+
+    def advance_to(self, t: float) -> None:
+        moved = t > self.now()
+        super().advance_to(t)
+        if moved:
+            self.events.append(("skip", self.now()))
+
+
+@dataclasses.dataclass
+class SimRequest:
+    """One unit-cost-per-round request for the host simulator.  `cls` is
+    the admission cost class (the `group_key`), standing in for the real
+    engines' prompt-length / (family, corrector) classes."""
+    rid: int
+    work: int = 4
+    cls: str = "a"
+    priority: int = 0
+    deadline: Optional[float] = None
+    seed: int = 0
+
+
+def trace_of(*pairs) -> TraceTraffic:
+    return TraceTraffic([Arrival(t, r) for t, r in pairs])
+
+
+class HostSimEngine(ServeLoop):
+    """Pure-host ServeLoop: slot rows are {"done": int} dicts, a round
+    adds 1 to every active row, and a request retires once its row
+    reaches `work`.  Suspend/resume move the row dict through the real
+    `ParkingTable` (`jax.device_get` on python ints is the identity), so
+    a preempted request's progress is preserved exactly — the integer
+    analogue of the engines' bitwise row round-trip."""
+
+    def __init__(self, batch_size: int, sync_every: int = 8,
+                 greedy: bool = False):
+        super().__init__(batch_size,
+                         Scheduler(group_key=lambda r: r.cls),
+                         sync_every=sync_every)
+        self.greedy_admit = greedy
+        self.rows = {}                  # slot index -> {"done": int}
+        self.n_rounds = 0
+
+    # ---- ServeLoop hooks --------------------------------------------------
+    def _validate(self, r: SimRequest) -> None:
+        if r.work < 1:
+            raise ValueError(f"request {r.rid}: work must be >= 1")
+
+    def _admit_wave(self, group, free) -> None:
+        for req in group:
+            i = free.pop(0)
+            self.rows[i] = {"done": 0}
+            self.slots.assign(i, req, k=0, work=req.work, cls=req.cls)
+
+    def _round(self) -> None:
+        for s in self.slots.active():
+            if s.data["k"] < s.data["work"]:    # frozen once finished,
+                self.rows[s.index]["done"] += 1  # like a retired device row
+            s.data["k"] += 1  # shadow advances regardless (DiffusionEngine)
+        self.n_rounds += 1
+
+    def _poll(self, results, snap=None, lag: int = 0) -> int:
+        # `k - lag` reconstructs the pre-look-ahead observation point,
+        # exactly like DiffusionEngine._poll
+        done = [s for s in self.slots.active()
+                if s.data["k"] - lag >= s.data["work"]]
+        for s in done:
+            results[s.request.rid] = np.int32(self.rows.pop(s.index)["done"])
+            self.slots.release(s.index)
+        return len(done)
+
+    def _suspend_slot(self, slot):
+        return self.rows.pop(slot.index)
+
+    def _resume_slot(self, request, shadow, payload, index: int) -> None:
+        self.rows[index] = dict(payload)
+
+    def _remaining_lb(self, slot) -> int:
+        return slot.data["work"] - slot.data["k"]

@@ -1,0 +1,27 @@
+"""Fixture: host syncs under the online-serving hot-path registration.
+
+No module pragma comment in this file on purpose — test_staticcheck.py
+lints this source under the *registered path suffixes*
+(src/repro/serve/traffic.py, src/repro/serve/parking.py), so the thing
+under test is the LintConfig registration itself.  Linted at its real
+path this file is silent.
+"""
+import jax
+import numpy as np
+
+
+def park_without_allowlist(tree):
+    return jax.device_get(tree)  # SC103 fires here
+
+
+def peek_progress(counter):
+    return counter.item()  # SC103 fires here
+
+
+def snapshot_to_host(mask):
+    return np.asarray(mask)  # SC103 fires here
+
+
+def fine_on_host(values):
+    # NOT a violation: float on a literal constant-folds, no device sync
+    return float("1.5"), len(values)

@@ -251,6 +251,129 @@ class TestSchedulerProperties:
         assert admitted == [r.rid for r in reqs]
 
 
+class TestOnlineServingProperties:
+    """serve_stream invariants (ISSUE 7), driven through the pure-host
+    simulation rig (tests/sim_clock.py) — the same ServeLoop machinery
+    the real engines inherit, so these run the actual admission /
+    preemption / parking / poll code at hypothesis example counts."""
+
+    @given(
+        jobs=st.lists(st.tuples(st.integers(0, 20),     # arrival time
+                                st.integers(1, 8)),     # work
+                      min_size=1, max_size=3),
+        seed=st.integers(min_value=0, max_value=2**30),
+    )
+    @settings(**SLOW)
+    def test_no_starvation_when_capacity_suffices(self, jobs, seed):
+        """With at most B concurrent requests (capacity always suffices),
+        integer arrivals and unit rounds, a request is admitted the moment
+        it arrives and completes at exactly t_arrival + work — so even the
+        *tight* deadline t_arrival + work is always met, nothing is
+        preempted, and nothing starves."""
+        from tests.sim_clock import HostSimEngine, SimRequest, trace_of
+        from repro.serve import serving_metrics
+        eng = HostSimEngine(batch_size=3, sync_every=4, greedy=True)
+        trace = trace_of(*[
+            (float(t), SimRequest(rid=i, work=w, deadline=float(t + w)))
+            for i, (t, w) in enumerate(jobs)])
+        results = eng.serve_stream(trace)
+        assert len(results) == len(jobs)
+        assert eng.n_preemptions == 0
+        for i, (t, w) in enumerate(jobs):
+            timing = eng.request_log[i]
+            assert timing.t_admit == float(t)
+            assert timing.t_done == float(t + w)
+            assert timing.met_slo
+        assert serving_metrics(eng.request_log)["deadline_misses"] == 0
+
+    @given(
+        jobs=st.lists(st.tuples(st.integers(0, 12),     # arrival time
+                                st.integers(1, 6),      # work
+                                st.integers(0, 3),      # priority
+                                st.sampled_from(["a", "b"])),
+                      min_size=1, max_size=14),
+        seed=st.integers(min_value=0, max_value=2**30),
+    )
+    @settings(**SLOW)
+    def test_preemption_strictness_waves_and_drain(self, jobs, seed):
+        """For ANY arrival stream over a 2-slot engine with mixed
+        priorities and cost classes:
+
+          * every preemption evicts a *strictly* lower-priority victim
+            (equal priority never churns),
+          * every admission wave — preemption-driven or not — is
+            homogeneous in the cost class,
+          * every suspension is eventually resumed and every request
+            completes (the parking table drains; no starvation by churn),
+          * the replay is deterministic (same stream -> same logs)."""
+        from tests.sim_clock import HostSimEngine, SimRequest, trace_of
+
+        def run():
+            eng = HostSimEngine(batch_size=2, sync_every=4)
+            trace = trace_of(*[
+                (float(t), SimRequest(rid=i, work=w, priority=p, cls=c))
+                for i, (t, w, p, c) in enumerate(jobs)])
+            return eng, eng.serve_stream(trace)
+
+        eng, results = run()
+        assert set(results) == set(range(len(jobs)))
+        for preemptor_rid, p_prio, victim_rid, v_prio in eng.preemption_log:
+            assert v_prio < p_prio, eng.preemption_log
+        for wave in eng.wave_log:
+            assert len(set(wave)) == 1, eng.wave_log
+        assert eng.n_resumes == eng.n_preemptions
+        assert len(eng.parking) == 0
+        for i, (t, w, p, c) in enumerate(jobs):
+            assert int(results[i]) == w      # full work done exactly once
+        eng2, results2 = run()
+        assert results == results2
+        assert eng.preemption_log == eng2.preemption_log
+        assert eng.wave_log == eng2.wave_log
+        assert eng.request_log == eng2.request_log
+
+    @given(
+        B=st.integers(min_value=1, max_value=4),
+        extra_dims=st.lists(st.sampled_from([(), (3,), (2, 4), (5,)]),
+                            min_size=1, max_size=4),
+        seed=st.integers(min_value=0, max_value=2**30),
+    )
+    @settings(**SLOW)
+    def test_parked_row_save_restore_round_trips_pytrees(self, B,
+                                                         extra_dims, seed):
+        """row_fetch -> host -> row_restore is the bitwise identity on the
+        written row of an arbitrary batch-leading pytree (mixed dtypes,
+        mixed ranks) and leaves every other row of the destination
+        untouched — the generic mechanism preemption parking rides."""
+        from repro.serve import row_fetch, row_restore
+        rng = np.random.default_rng(seed)
+        dtypes = [np.float32, np.int32, np.bool_, np.uint32]
+
+        def tree_of(rng):
+            leaves = {}
+            for li, dims in enumerate(extra_dims):
+                dt = dtypes[li % len(dtypes)]
+                raw = rng.standard_normal((B,) + dims) * 100
+                leaves[f"leaf{li}"] = jnp.asarray(raw.astype(dt))
+            return {"nested": leaves, "flat": jnp.asarray(
+                rng.integers(0, 2**31, size=(B,)).astype(np.int32))}
+
+        src = tree_of(rng)
+        dst = tree_of(rng)
+        i = int(rng.integers(0, B))
+        j = int(rng.integers(0, B))
+        payload = jax.device_get(row_fetch(src, np.int32(i)))  # like park()
+        restored = row_restore(dst, payload, np.int32(j))
+        flat_src = jax.tree.leaves(src)
+        flat_dst = jax.tree.leaves(dst)
+        flat_out = jax.tree.leaves(restored)
+        for s, d, o in zip(flat_src, flat_dst, flat_out):
+            np.testing.assert_array_equal(np.asarray(o[j]), np.asarray(s[i]))
+            for b in range(B):
+                if b != j:
+                    np.testing.assert_array_equal(np.asarray(o[b]),
+                                                  np.asarray(d[b]))
+
+
 class TestDataProperties:
     @given(step=st.integers(min_value=0, max_value=10_000),
            seed=st.integers(min_value=0, max_value=2**30))

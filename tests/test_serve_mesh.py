@@ -203,3 +203,54 @@ def test_mesh_admission_spreads_across_shards():
         print("SPREAD_OK")
     """)
     assert "SPREAD_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# online serving (preemption + resume) on a 2-device mesh
+# ---------------------------------------------------------------------------
+def test_mesh_online_preempt_resume_bitwise():
+    """ISSUE 7 satellite: the online path on a 2-device data mesh — a
+    priority arrival preempts a sharded slot, the parked row round-trips
+    through the host, and every sample is still bitwise-equal to the
+    single-device engine's *offline* solo run.  A second stream after
+    warmup compiles nothing new (park/resume/restore included)."""
+    out = run_with_devices(2, """
+        import numpy as np, jax
+        from repro.configs import get_diffusion
+        from repro.launch.mesh import make_local_mesh
+        from repro.serve import (Arrival, DiffusionEngine, SampleRequest,
+                                 TraceTraffic, VirtualClock)
+
+        spec = get_diffusion("cifar10-ddpm", reduced=True)
+        params = spec.init(jax.random.PRNGKey(0))
+
+        def trace(base):
+            return TraceTraffic([
+                Arrival(0.0, SampleRequest(rid=base, seed=base)),
+                Arrival(0.0, SampleRequest(rid=base + 1, seed=base + 1)),
+                Arrival(2.0, SampleRequest(rid=base + 2, seed=base + 2,
+                                           priority=5, deadline=12.0)),
+            ])
+
+        sharded = DiffusionEngine(spec, params, batch_size=2, nfe=8,
+                                  sync_every=4, mesh=make_local_mesh(data=2))
+        assert sharded.n_shards == 2
+        got = sharded.serve_stream(trace(0), clock=VirtualClock())
+        assert sharded.n_preemptions == 1 and sharded.n_resumes == 1, (
+            sharded.n_preemptions, sharded.n_resumes)
+
+        solo = DiffusionEngine(spec, params, batch_size=2, nfe=8)
+        for rid in (0, 1, 2):
+            ref = solo.serve([SampleRequest(rid=rid, seed=rid)])[rid]
+            np.testing.assert_array_equal(
+                got[rid], ref,
+                err_msg=f"rid {rid}: mesh online run != single-device solo")
+
+        warm = sharded.compile_stats()
+        sharded.serve_stream(trace(10), clock=VirtualClock())
+        assert sharded.n_preemptions == 2
+        assert sharded.compile_stats() == warm, (
+            "mesh online replay recompiled", warm, sharded.compile_stats())
+        print("MESH_ONLINE_OK")
+    """)
+    assert "MESH_ONLINE_OK" in out

@@ -1,0 +1,377 @@
+"""Online serving: streaming arrivals, deadline-aware preemption, and the
+virtual-clock simulation rig that proves it.
+
+Three layers, cheapest first:
+
+  * traffic unit level — `VirtualClock` monotonicity, `TraceTraffic`
+    consumption order, seeded `poisson_trace` replay, and the pure-Python
+    `percentile` against numpy's.
+  * simulation level (tests/sim_clock.py) — the *golden* tests: a
+    hand-written trace through the real `ServeLoop.serve_stream`
+    machinery with a pure-host engine, where every timestamp, preemption,
+    poll and latency percentile is computed by hand in the comments and
+    asserted exactly.  Also: deterministic replay of a seeded Poisson
+    stream, and the poll-cadence bound (an arrival-dense trace must not
+    degrade to per-round syncing).
+  * engine level — the real `DiffusionEngine` / `TokenEngine` under
+    preemption: a suspended+resumed request's output is **bitwise**
+    identical to an uninterrupted solo run (plain, mid-multistep q=2
+    eps-history, mixed VPSDE/CLD co-residency, token decode with KV
+    caches), and a warmed engine replays a fresh online stream with zero
+    recompiles.  The 2-device mesh variant lives in test_serve_mesh.py.
+"""
+import math
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_arch, get_diffusion
+from repro.models.registry import Arch
+from repro.serve import (Arrival, DiffusionEngine, Request, SampleRequest,
+                         TokenEngine, TraceTraffic, VirtualClock,
+                         poisson_trace, serving_metrics)
+from repro.serve.traffic import percentile
+
+from tests.sim_clock import (HostSimEngine, RecordingClock, SimRequest,
+                             trace_of)
+
+
+# ---------------------------------------------------------------------------
+# traffic unit level
+# ---------------------------------------------------------------------------
+def test_virtual_clock_monotone():
+    c = VirtualClock()
+    c.advance(2.5)
+    assert c.now() == 2.5
+    c.advance_to(2.0)                       # no-op for past times
+    assert c.now() == 2.5
+    c.advance_to(4.0)
+    assert c.now() == 4.0
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+
+
+def test_trace_traffic_consumption():
+    t = trace_of((1.0, SimRequest(rid=0)), (0.5, SimRequest(rid=1)),
+                 (3.0, SimRequest(rid=2)))
+    assert t.next_time() == 0.5             # sorted regardless of input order
+    assert [a.request.rid for a in t.due(1.0)] == [1, 0]
+    assert t.due(1.0) == []                 # popped, not re-delivered
+    assert t.next_time() == 3.0 and t.remaining() == 1
+    assert [a.request.rid for a in t.due(10.0)] == [2]
+    assert t.next_time() is None
+
+
+def test_poisson_trace_is_seed_deterministic():
+    mk = lambda i, rng: SimRequest(rid=i, work=int(rng.integers(1, 5)),
+                                   priority=int(rng.integers(0, 3)))
+    a = poisson_trace(mk, n=20, rate=0.5, seed=7)
+    b = poisson_trace(mk, n=20, rate=0.5, seed=7)
+    c = poisson_trace(mk, n=20, rate=0.5, seed=8)
+    ta = [x.t for x in a.due(float("inf"))]
+    tb = [x.t for x in b.due(float("inf"))]
+    tc = [x.t for x in c.due(float("inf"))]
+    assert ta == tb and ta != tc
+    assert all(isinstance(t, float) for t in ta)   # plain host floats
+    ra = [x.request for x in a._queue]
+    rb = [x.request for x in b._queue]
+    assert [(r.work, r.priority) for r in ra] == \
+           [(r.work, r.priority) for r in rb]
+    with pytest.raises(ValueError):
+        poisson_trace(mk, n=3, rate=0.0, seed=0)
+
+
+def test_percentile_matches_numpy():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 5, 17):
+        xs = rng.uniform(0, 10, size=n).tolist()
+        for p in (0.0, 25.0, 50.0, 99.0, 100.0):
+            assert math.isclose(percentile(xs, p),
+                                float(np.percentile(xs, p)))
+    with pytest.raises(ValueError):
+        percentile([], 50.0)
+
+
+# ---------------------------------------------------------------------------
+# golden simulation: every number below is hand-computed from the trace
+# ---------------------------------------------------------------------------
+def test_golden_schedule_and_metrics():
+    """B=2 slots, sync_every=4, round_cost=1.  Trace:
+
+        t=0   r0 (work 4)        r1 (work 6)         -> both admitted at 0
+        t=3   r2 (work 2, priority 2, deadline 6)
+        t=20  r3 (work 3)
+
+    Hand-computed schedule:
+      * rounds at t=1,2,3 (window capped by r2's arrival).
+      * t=3: r2 preempts — victims are both prio-0 slots; r1 has the most
+        remaining work (3 vs r0's 1), so r1 is parked at k=3 and r2 takes
+        its slot.  One more round (r0's retirement bound) to t=4, then the
+        poll at t_mark=4 with a look-ahead round to t=5: r0 retires with
+        t_done=4 (4 rounds, t0->4); r2 finished *inside* the look-ahead
+        (k=2 at t=5) so it is not observed yet.
+      * t=5: r1 resumes into the freed slot (k=3 preserved).  r2's bound
+        is exhausted -> poll at t_mark=5 retires r2 (t_done=5: rounds
+        t3->4, t4->5; deadline 6 met), look-ahead round to t=6.
+      * rounds to t=8; poll retires r1 at t_done=8 (3 rounds before the
+        park + 3 after: t5->6 look-ahead, t6->8).
+      * idle skip 8->20; r3 runs t20->23, retires at t_done=23.
+
+    Latencies [4, 8, 2, 3] -> sorted [2, 3, 4, 8]:
+      p50 = 3.5 (rank 1.5), p99 = 4*0.03 + 8*0.97 = 7.88 (rank 2.97).
+    All four met their SLO -> goodput = 4 / span(23).
+    """
+    eng = HostSimEngine(batch_size=2, sync_every=4)
+    clock = RecordingClock()
+    trace = trace_of(
+        (0.0, SimRequest(rid=0, work=4)),
+        (0.0, SimRequest(rid=1, work=6)),
+        (3.0, SimRequest(rid=2, work=2, priority=2, deadline=6.0)),
+        (20.0, SimRequest(rid=3, work=3)))
+    results = eng.serve_stream(trace, clock=clock)
+
+    assert {rid: int(v) for rid, v in results.items()} == \
+           {0: 4, 1: 6, 2: 2, 3: 3}
+    log = eng.request_log
+    assert [(log[r].t_admit, log[r].t_done, log[r].n_preempted)
+            for r in range(4)] == \
+           [(0.0, 4.0, 0), (0.0, 8.0, 1), (3.0, 5.0, 0), (20.0, 23.0, 0)]
+    assert eng.preemption_log == [(2, 2, 1, 0)]
+    assert eng.n_preemptions == 1 and eng.n_resumes == 1
+    assert eng.parking.n_parked_total == 1 and len(eng.parking) == 0
+    assert eng.n_polls == 4 and eng.n_rounds == 11
+
+    # the exact clock journal: 11 rounds + the one idle skip
+    assert clock.events == [
+        ("round", 1.0), ("round", 2.0), ("round", 3.0), ("round", 4.0),
+        ("round", 5.0), ("round", 6.0), ("round", 7.0), ("round", 8.0),
+        ("skip", 20.0), ("round", 21.0), ("round", 22.0), ("round", 23.0)]
+
+    m = serving_metrics(log)
+    assert m["n_arrived"] == 4 and m["n_done"] == 4
+    assert m["p50_latency"] == 3.5
+    assert math.isclose(m["p99_latency"], 7.88)
+    assert m["deadline_misses"] == 0
+    assert m["span"] == 23.0
+    assert math.isclose(m["goodput_slo"], 4 / 23)
+
+
+def test_golden_deadline_miss_excluded_from_goodput():
+    """B=1: r0 (work 4, deadline 2 — unmeetable) then r1 (work 4, no
+    deadline) queued behind it.  r0 finishes at t=4 (missed), r1 at t=8.
+    Goodput counts only the SLO-met completion: 1 / span(8)."""
+    eng = HostSimEngine(batch_size=1, sync_every=8)
+    trace = trace_of((0.0, SimRequest(rid=0, work=4, deadline=2.0)),
+                     (0.0, SimRequest(rid=1, work=4)))
+    eng.serve_stream(trace)
+    log = eng.request_log
+    assert log[0].t_done == 4.0 and not log[0].met_slo
+    assert log[1].t_done == 8.0 and log[1].met_slo
+    m = serving_metrics(log)
+    assert m["deadline_misses"] == 1
+    assert math.isclose(m["goodput_slo"], 1 / 8)
+
+
+def test_poisson_stream_replays_identically():
+    """The whole online run — timestamps, preemptions, waves, metrics — is
+    a pure function of (trace seed, engine config): two replays agree on
+    everything, field for field."""
+    mk = lambda i, rng: SimRequest(
+        rid=i, work=int(rng.integers(2, 8)),
+        priority=int(rng.integers(0, 3)),
+        deadline=None if rng.integers(0, 2) == 0
+        else float(rng.integers(10, 60)))
+
+    def run():
+        eng = HostSimEngine(batch_size=3, sync_every=4)
+        res = eng.serve_stream(poisson_trace(mk, n=24, rate=0.7, seed=11))
+        return eng, res
+
+    a, res_a = run()
+    b, res_b = run()
+    assert res_a == res_b
+    assert a.request_log == b.request_log
+    assert a.preemption_log == b.preemption_log
+    assert a.wave_log == b.wave_log
+    assert (a.n_preemptions, a.n_resumes, a.n_polls, a.n_rounds) == \
+           (b.n_preemptions, b.n_resumes, b.n_polls, b.n_rounds)
+    assert serving_metrics(a.request_log) == serving_metrics(b.request_log)
+    # the run exercised what it claims to: work queued beyond capacity
+    # with mixed priorities forces preemptions
+    assert a.n_preemptions > 0
+    assert serving_metrics(a.request_log)["n_done"] == 24
+
+
+def test_arrival_dense_stream_does_not_poll_per_round():
+    """Satellite: arrival-capped round windows end with no slot at its
+    retirement bound; the loop must *skip* the poll there (frozen rows
+    make late observation safe), not regress to per-round syncing.  With
+    work=16 and an arrival every round for a while, polls stay paced by
+    `sync_every`/retirements — far below one per round."""
+    eng = HostSimEngine(batch_size=2, sync_every=8)
+    arrivals = [(0.0, SimRequest(rid=0, work=16)),
+                (0.0, SimRequest(rid=1, work=16))]
+    arrivals += [(float(t), SimRequest(rid=2 + t, work=16))
+                 for t in range(1, 7)]
+    eng.serve_stream(trace_of(*arrivals))
+    assert serving_metrics(eng.request_log)["n_done"] == 8
+    # 8 requests x 16 rounds of work on 2 slots ~= 64+ occupied rounds;
+    # a per-round-sync regression would put n_polls within a couple of
+    # n_rounds.  Paced correctly it is bounded by forced syncs plus one
+    # poll per retirement bound.
+    assert eng.n_rounds >= 64
+    assert eng.n_polls <= eng.n_rounds // eng.sync_every + 8 + 1
+    assert 4 * eng.n_polls < eng.n_rounds
+
+
+def test_preemption_only_evicts_strictly_lower_priority():
+    """Equal priority never preempts (no churn): two prio-1 residents and
+    a stream of prio-1 arrivals -> zero preemptions, FIFO-by-urgency."""
+    eng = HostSimEngine(batch_size=2, sync_every=4)
+    trace = trace_of(*[(float(i), SimRequest(rid=i, work=4, priority=1))
+                       for i in range(6)])
+    eng.serve_stream(trace)
+    assert eng.n_preemptions == 0
+    assert serving_metrics(eng.request_log)["n_done"] == 6
+
+
+# ---------------------------------------------------------------------------
+# real engines: preemption is bitwise-invisible, replay is compile-free
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def diff_parts():
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    return spec, params
+
+
+def _preempt_trace(**extra):
+    """Two prio-0 residents from t=0, one prio-5 arrival at t=2 that must
+    preempt (batch of 2 is full and both residents are strictly lower
+    priority)."""
+    return TraceTraffic([
+        Arrival(0.0, SampleRequest(rid=0, seed=0, **extra)),
+        Arrival(0.0, SampleRequest(rid=1, seed=1, **extra)),
+        Arrival(2.0, SampleRequest(rid=2, seed=2, priority=5, deadline=12.0,
+                                   **extra)),
+    ])
+
+
+def test_diffusion_preempt_resume_bitwise_and_compile_free(diff_parts):
+    spec, params = diff_parts
+    eng = DiffusionEngine(spec, params, batch_size=2, nfe=8, sync_every=4)
+    results = eng.serve_stream(_preempt_trace(), clock=VirtualClock())
+
+    assert eng.n_preemptions == 1 and eng.n_resumes == 1
+    victim = eng.preemption_log[0][2]
+    assert eng.request_log[victim].n_preempted == 1
+    assert eng.request_log[2].met_slo       # the urgent render made its SLO
+
+    solo = DiffusionEngine(spec, params, batch_size=2, nfe=8)
+    for rid in (0, 1, 2):
+        ref = solo.serve([SampleRequest(rid=rid, seed=rid)])[rid]
+        np.testing.assert_array_equal(
+            results[rid], ref,
+            err_msg=f"rid {rid}: online (preempting) run != solo")
+
+    # replaying a fresh stream — new seeds, preemption + resume again —
+    # must not compile anything new: park/resume/steps are all warmed
+    warm = eng.compile_stats()
+    eng.serve_stream(TraceTraffic([
+        Arrival(0.0, SampleRequest(rid=10, seed=10)),
+        Arrival(0.0, SampleRequest(rid=11, seed=11)),
+        Arrival(3.0, SampleRequest(rid=12, seed=12, priority=2)),
+    ]), clock=VirtualClock())
+    assert eng.n_preemptions == 2           # cumulative: preempted again
+    assert eng.compile_stats() == warm
+
+
+def test_diffusion_preempt_mid_multistep_q2_bitwise(diff_parts):
+    """Preemption lands mid-flight with a populated q=2 eps history (the
+    victim is past k=2 when suspended), so the parked row carries live
+    multistep state — restored bitwise, the resumed trajectory must equal
+    the uninterrupted one."""
+    spec, params = diff_parts
+    eng = DiffusionEngine(spec, params, batch_size=2, nfe=8, sync_every=4)
+    trace = _preempt_trace(q=2)
+    results = eng.serve_stream(trace, clock=VirtualClock())
+    assert eng.n_preemptions == 1
+    victim = eng.preemption_log[0][2]
+    assert eng.request_log[victim].n_preempted == 1
+
+    solo = DiffusionEngine(spec, params, batch_size=2, nfe=8)
+    for rid in (0, 1, 2):
+        ref = solo.serve([SampleRequest(rid=rid, seed=rid, q=2)])[rid]
+        np.testing.assert_array_equal(
+            results[rid], ref,
+            err_msg=f"rid {rid} (q=2): online (preempting) run != solo")
+
+
+def test_diffusion_preempt_mixed_family_bitwise():
+    """VPSDE and CLD co-resident when the preemption hits: the parked and
+    resumed row is a CLD (K=2) render suspended next to a VPSDE slot, and
+    every sample still equals its solo single-family run bitwise.  Waves
+    never mix (family, corrector) classes, preemption or not."""
+    specs = {"vpsde": get_diffusion("cifar10-ddpm", reduced=True),
+             "cld": get_diffusion("cifar10-cld", reduced=True)}
+    params = {n: specs[n].init(jax.random.PRNGKey(100 + i))
+              for i, n in enumerate(specs)}
+    eng = DiffusionEngine(specs, params, batch_size=2, nfe=8, sync_every=4)
+    trace = TraceTraffic([
+        Arrival(0.0, SampleRequest(rid=0, seed=0, family="cld")),
+        Arrival(1.0, SampleRequest(rid=1, seed=1, family="vpsde")),
+        Arrival(3.0, SampleRequest(rid=2, seed=2, family="vpsde",
+                                   priority=5)),
+    ])
+    results = eng.serve_stream(trace, clock=VirtualClock())
+    assert eng.n_preemptions >= 1 and eng.n_resumes == eng.n_preemptions
+    for wave in eng.wave_log:               # class-homogeneous, always
+        assert len(set(wave)) == 1, eng.wave_log
+
+    for rid, fam in ((0, "cld"), (1, "vpsde"), (2, "vpsde")):
+        solo = DiffusionEngine(specs[fam], params[fam], batch_size=2, nfe=8)
+        ref = solo.serve([SampleRequest(rid=rid, seed=rid)])[rid]
+        np.testing.assert_array_equal(
+            results[rid], ref,
+            err_msg=f"rid {rid} ({fam}): mixed-family online run != solo")
+
+
+def test_token_preempt_resume_bitwise_and_compile_free():
+    """Token decode under preemption: the parked payload spans the
+    TokenState row *and* the KV-cache rows; the resumed continuation must
+    reproduce the uninterrupted token stream exactly, and a second online
+    stream must not compile anything new (snapshot/park/resume warmed)."""
+    spec = get_arch("gemma3-1b", reduced=True)
+    arch = Arch(spec)
+    params = arch.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    mk = lambda rid, L, m, **kw: Request(
+        rid=rid, tokens=rng.integers(2, arch.cfg.vocab, size=L)
+        .astype(np.int32), max_new=m, **kw)
+
+    eng = TokenEngine(arch, params, batch_size=2, max_len=48, sync_every=4)
+    reqs = [mk(0, 6, 12), mk(1, 6, 12), mk(2, 6, 8, priority=3,
+                                           deadline=20.0)]
+    trace = TraceTraffic([Arrival(0.0, reqs[0]), Arrival(0.0, reqs[1]),
+                          Arrival(3.0, reqs[2])])
+    results = eng.serve_stream(trace, clock=VirtualClock())
+    assert eng.n_preemptions == 1 and eng.n_resumes == 1
+    assert eng.compile_stats()["snapshot"] == 1     # double-buffered poll
+
+    solo = TokenEngine(arch, params, batch_size=2, max_len=48)
+    for r in reqs:
+        ref = solo.serve([Request(rid=90, tokens=r.tokens,
+                                  max_new=r.max_new)])[90]
+        np.testing.assert_array_equal(
+            results[r.rid], ref,
+            err_msg=f"rid {r.rid}: online (preempting) run != solo")
+
+    warm = eng.compile_stats()
+    reqs2 = [mk(10, 6, 12), mk(11, 6, 12), mk(12, 6, 8, priority=3)]
+    eng.serve_stream(TraceTraffic([Arrival(0.0, reqs2[0]),
+                                   Arrival(0.0, reqs2[1]),
+                                   Arrival(3.0, reqs2[2])]),
+                     clock=VirtualClock())
+    assert eng.n_preemptions == 2
+    assert eng.compile_stats() == warm

@@ -66,6 +66,57 @@ class TestFixturesFire:
             assert "NOT " in (FIXTURES / name).read_text(), name
 
 
+class TestOnlineHotPathRegistration:
+    """The online-serving modules (serve/traffic.py, serve/parking.py)
+    are registered hot paths: SC103 fires for sources linted under those
+    *paths* with no pragma in the file, and the real parking module's one
+    sanctioned fetch carries an allowlist justification."""
+
+    NEW_SUFFIXES = ("src/repro/serve/traffic.py",
+                    "src/repro/serve/parking.py")
+
+    def test_suffixes_registered_in_default_config(self):
+        from tools.staticcheck.astlint import DEFAULT_CONFIG
+        for suffix in self.NEW_SUFFIXES:
+            assert suffix in DEFAULT_CONFIG.hot_path_suffixes, suffix
+
+    @pytest.mark.parametrize("suffix", NEW_SUFFIXES)
+    def test_sc103_fires_by_path_at_tagged_lines(self, suffix):
+        src = (FIXTURES / "online_hot_path.py").read_text()
+        assert "staticcheck: module=" not in src  # path does the scoping
+        hits = {(f.rule, f.line) for f in lint_source(src, suffix)}
+        want = {("SC103", ln) for ln in _tagged_lines("online_hot_path.py")}
+        assert want, "fixture lost its tags"
+        assert hits == want, (
+            f"{suffix}: expected exactly {sorted(want)}, got {sorted(hits)}")
+
+    def test_same_source_is_silent_off_the_hot_path(self):
+        src = (FIXTURES / "online_hot_path.py").read_text()
+        assert lint_source(src, "src/repro/eval/metrics.py") == []
+
+    def test_sc105_fires_for_parked_row_donation_misuse(self):
+        # the parking restore pattern done wrong: `state` is donated into
+        # the jitted restore, then read again instead of reassigned
+        bad = ("import jax\n"
+               "def resume(state, row):\n"
+               "    restore = jax.jit(lambda s, r: s, donate_argnums=(0,))\n"
+               "    new = restore(state, row)\n"
+               "    return state.active\n")
+        for suffix in self.NEW_SUFFIXES:
+            rules = {(f.rule, f.line) for f in lint_source(bad, suffix)}
+            assert ("SC105", 5) in rules, (suffix, rules)
+        good = ("import jax\n"
+                "def resume(state, row):\n"
+                "    restore = jax.jit(lambda s, r: s, donate_argnums=(0,))\n"
+                "    state = restore(state, row)\n"
+                "    return state.active\n")
+        assert lint_source(good, self.NEW_SUFFIXES[1]) == []
+
+    def test_repo_parking_fetch_is_allowlisted_with_reason(self):
+        src = (REPO / "src" / "repro" / "serve" / "parking.py").read_text()
+        assert "staticcheck: disable=SC103" in src
+
+
 class TestAllowlist:
     def test_disable_with_reason_suppresses(self):
         src = ("import jax\n"

@@ -28,6 +28,9 @@ Rules, per record matched by `config`:
     round-step compile buckets — a new bucket is a new compile in steady
     state, which is a reviewed event, not an accident; the per-bucket
     hashes ride along in the record's `variant_hashes` for diffing.)
+    The online record's preemption counters (`n_preemptions`, `n_resumes`,
+    `deadline_misses`) are exact too: at a fixed seed the virtual-clock
+    replay is deterministic, so any drift means the schedule changed.
   * a baseline config missing from the fresh run fails (a silently dropped
     row is how perf coverage rots); fresh-only configs are reported but
     pass (new rows land with their own baseline in the same PR).
@@ -45,7 +48,7 @@ from typing import Dict, List
 BOUNDED = ("recompiles_after_warmup", "rounds", "dispatches", "polls",
            "n_prefills", "bank_bytes", "bank_restack_rows")
 EXACT = ("n_requests", "n_configs", "batch", "nfe", "bank_bytes_dense",
-         "n_variants")
+         "n_variants", "n_preemptions", "n_resumes", "deadline_misses")
 
 
 def _records(path: str) -> Dict[str, dict]:

@@ -61,6 +61,8 @@ class LintConfig:
     hot_path_suffixes: Tuple[str, ...] = (
         "src/repro/serve/loop.py",
         "src/repro/serve/engine.py",
+        "src/repro/serve/traffic.py",
+        "src/repro/serve/parking.py",
         "src/repro/launch/steps.py",
     )
     coeff_critical_suffixes: Tuple[str, ...] = (
