@@ -1,19 +1,35 @@
 """Roofline report: aggregates the dry-run JSONL into the EXPERIMENTS.md
 tables (per arch x shape x mesh: three terms, bottleneck, MODEL/HLO ratio,
-roofline fraction)."""
+roofline fraction).
+
+`--serving` switches to the *serving-round* mode (PR 8): instead of
+aggregating dry-run records it builds the diffusion engine's round update
+at the benchmark shapes and reports achieved vs peak bytes/FLOPs per
+round — the fused megakernel's analytic single-pass traffic
+(`kernels/round_fused.ops.fused_round_cost`, one launch) against the
+compiled-HLO byte traffic of the pre-fusion XLA-stitched chain
+(`hlo_analysis.hlo_program_stats`), i.e. the measured roofline gap the
+fusion closes.  The same record is appended to `BENCH_serving.json` by
+`python -m benchmarks.run serving`, where `kernel_launches_per_round` and
+`round_bytes_moved` are EXACT-gated by tools/perf_guard.py."""
 from __future__ import annotations
 
 import json
 import os
 import sys
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 
 
-def load(path: str) -> List[dict]:
-    out = []
+def load(path: str) -> Tuple[List[dict], int]:
+    """Parse a dry-run JSONL; returns (records, n_skipped).  Malformed
+    lines are *counted*, not silently dropped — a truncated results file
+    (killed run, concurrent writer) used to thin the report without a
+    trace, which reads as "that shape was never measured"."""
+    out: List[dict] = []
+    skipped = 0
     if not os.path.exists(path):
-        return out
+        return out, skipped
     with open(path) as f:
         for line in f:
             line = line.strip()
@@ -21,12 +37,12 @@ def load(path: str) -> List[dict]:
                 try:
                     out.append(json.loads(line))
                 except json.JSONDecodeError:
-                    pass
+                    skipped += 1
     # keep the LAST record per (arch, shape, mesh, tag) — reruns supersede
     dedup: Dict[tuple, dict] = {}
     for r in out:
         dedup[(r.get("arch"), r.get("shape"), r.get("mesh"), r.get("tag", ""))] = r
-    return list(dedup.values())
+    return list(dedup.values()), skipped
 
 
 def fmt_s(x) -> str:
@@ -94,13 +110,117 @@ def pick_hillclimb(records: List[dict]) -> dict:
     return out
 
 
+def serving_round_record(nfe: int = 10, batch: int = 4) -> dict:
+    """The serving-round roofline record: one fused launch's analytic
+    bytes/FLOPs vs the pre-fusion stitched chain's compiled-HLO traffic,
+    plus the peak-rate terms, at the serving benchmark's reduced CIFAR
+    shapes.  Every gated field is a pure function of static shapes:
+
+      * `kernel_launches_per_round` — pallas_call count in the traced
+        fused update (the tentpole's contract: ONE post-score-eval
+        launch; the corrector's predict launch runs before the eval)
+      * `round_bytes_moved` / `round_flops` — `fused_round_cost`'s
+        single-pass model (each stream touched exactly once)
+      * `stitched_bytes_moved` / `stitched_flops` — `hlo_program_stats`
+        over the jit-compiled stitched update: what the old chain's
+        fusion boundaries actually stream
+      * `roofline` — achieved intensity vs machine balance and the
+        per-round time bounds at peak HBM/FLOP rates, fused vs stitched;
+        `bytes_gap_ratio` is the roofline gap the fusion closes
+    """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_diffusion
+    from repro.core import SamplerConfig
+    from repro.launch import hlo_analysis
+    from repro.serve import DiffusionEngine, SampleRequest
+    from repro.kernels.round_fused import ops as rf_ops
+    from tools.staticcheck.pallas_check import find_pallas_eqns
+
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    engine = DiffusionEngine(spec, params, batch_size=batch, nfe=nfe)
+    engine.cache.index_of(SamplerConfig(nfe=nfe, q=2))   # Qb=2 bucket
+    engine._refresh_bank()
+    bank, state = engine._bank, engine.state
+    sde = spec.sde
+    kf = sde.packed_k
+    B, K, D = state.u.shape
+    Qb = state.hist.shape[1]
+    state_shape = sde.state_shape(tuple(spec.data_shape))
+    kc = jnp.zeros((B,), jnp.int32)
+    eps_c = jnp.zeros((B, kf, D), jnp.float32)
+
+    def update(impl):
+        def fn(u, hist, k, cfg, fam, prec, keys, active, bank, eps_c):
+            kcl = jnp.clip(k, 0, bank.n_steps[cfg] - 1)
+            return rf_ops.round_update(
+                u, hist, k, kcl, cfg, fam, prec, keys, active, bank,
+                eps_c, sde=sde, state_shape=state_shape, kf=kf, impl=impl)
+        return fn
+
+    args = (state.u, state.hist, state.k, state.cfg, state.fam, state.prec,
+            state.keys, state.active, bank, eps_c)
+
+    # the old chain, as XLA compiles it on this backend
+    stitched = jax.jit(update("ref")).lower(*args).compile()
+    s_stats = hlo_analysis.hlo_program_stats(stitched.as_text())
+
+    # the fused kernel: launch count from the trace, bytes from the
+    # analytic single-pass model (the Mosaic kernel's contract)
+    jaxpr = jax.make_jaxpr(update("pallas"))(*args)
+    launches = len(find_pallas_eqns(jaxpr))
+    cost = rf_ops.fused_round_cost(
+        B=B, K=K, Qb=Qb, kf=kf, D=D, pool_rows=bank.diag.shape[0])
+
+    t_comp = cost["flops"] / hlo_analysis.PEAK_FLOPS
+    t_mem = cost["bytes_moved"] / hlo_analysis.HBM_BW
+    s_mem = s_stats["bytes"] / hlo_analysis.HBM_BW
+    balance = hlo_analysis.PEAK_FLOPS / hlo_analysis.HBM_BW
+    intensity = cost["flops"] / max(cost["bytes_moved"], 1)
+    return {
+        "workload": "diffusion",
+        "config": "gddim_round_roofline",
+        "batch": B, "nfe": nfe, "K": K, "Qb": Qb, "kf": kf, "D": D,
+        "kernel_launches_per_round": launches,
+        "round_bytes_moved": cost["bytes_moved"],
+        "round_flops": cost["flops"],
+        "stitched_bytes_moved": int(s_stats["bytes"]),
+        "stitched_flops": int(s_stats["flops"]),
+        "roofline": {
+            "bytes_gap_ratio": round(s_stats["bytes"]
+                                     / max(cost["bytes_moved"], 1), 3),
+            "intensity_flop_per_byte": round(intensity, 4),
+            "machine_balance_flop_per_byte": round(balance, 1),
+            "bottleneck": "memory" if intensity < balance else "compute",
+            "t_mem_s_fused": t_mem, "t_mem_s_stitched": s_mem,
+            "t_comp_s": t_comp,
+        },
+    }
+
+
 def main(argv=None) -> int:
-    paths = argv or sys.argv[1:] or ["results/dryrun_single.jsonl",
-                                     "results/dryrun_multi.jsonl"]
+    argv = list(argv if argv is not None else sys.argv[1:])
+    if "--serving" in argv:
+        rec = serving_round_record()
+        print(json.dumps(rec, indent=2, sort_keys=True))
+        return 0
+    paths = argv or ["results/dryrun_single.jsonl",
+                     "results/dryrun_multi.jsonl"]
     recs = []
+    n_skipped = 0
     for p in paths:
-        recs += load(p)
+        r, skipped = load(p)
+        recs += r
+        if skipped:
+            print(f"WARNING: {p}: skipped {skipped} malformed JSONL "
+                  f"line(s)", file=sys.stderr)
+        n_skipped += skipped
     print(table(recs))
+    if n_skipped:
+        print(f"\n{n_skipped} malformed line(s) skipped — see stderr")
     picks = pick_hillclimb(recs)
     print()
     for k, r in picks.items():

@@ -240,16 +240,17 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
     # same hash tools/staticcheck --sanitize prints; docs/static_analysis.md)
     step_calls: dict = {}
 
-    def _recording(fam, fn):
+    def _recording(fam, prec, fn):
         def call(*args, **kwargs):
-            k = f"step:{fam},corr={kwargs.get('with_corrector', False)}"
+            k = (f"step:{fam},prec={prec},"
+                 f"corr={kwargs.get('with_corrector', False)}")
             if k not in step_calls:
                 step_calls[k] = (fn, args, kwargs)
             return fn(*args, **kwargs)
         return call
 
-    engine._steps = {fam: _recording(fam, fn)
-                     for fam, fn in engine._steps.items()}
+    engine._steps = {(fam, prec): _recording(fam, prec, fn)
+                     for (fam, prec), fn in engine._steps.items()}
 
     engine.serve([SampleRequest(rid=-1 - i, seed=0, **kw)
                   for i, kw in enumerate(fam_mix)])         # warm every
@@ -288,6 +289,16 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
     records.append(rec)
     yield (f"serving,{rec['config']},{nfe},0,"
            f"{rec['bank_bytes_dense'] / max(rec['bank_bytes'], 1):.1f},0")
+
+    # ---- fused-round roofline: achieved vs peak bytes/FLOPs per round ----
+    # one pallas launch per post-score-eval commit, analytic single-pass
+    # bytes vs the stitched chain's compiled-HLO traffic (roofline.py);
+    # `kernel_launches_per_round` and `round_bytes_moved` are EXACT-gated
+    from .roofline import serving_round_record
+    rec = serving_round_record(nfe=nfe)
+    records.append(rec)
+    yield (f"serving,{rec['config']},{nfe},0,"
+           f"{rec['roofline']['bytes_gap_ratio']:.2f},0")
 
     # ---- online serving: streaming arrivals, deadlines, preemption ----
     # A seeded Poisson stream replayed on the virtual clock through ONE

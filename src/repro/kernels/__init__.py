@@ -3,5 +3,8 @@
   attention/        flash attention forward (train / prefill)
   decode_attention/ flash-decoding analogue (one query vs long KV cache)
   ei_update/        fused q-step gDDIM exponential-integrator state update
+  round_fused/      the whole post-score-eval serving round in ONE launch
+                    (factor applies, history shift, Eq. 22 noise in-kernel,
+                    retire masking + k-advance)
   dct2/             BDM DCT-as-matmul + fully fused frequency-space EI update
 """

@@ -1,0 +1,352 @@
+"""Pallas TPU megakernel: the whole post-score-eval gDDIM round in ONE pass.
+
+The stitched serving chain pays a separate memory-bound VMEM round-trip
+over the (B, K, D) state for every piece — six `apply_factored` launches,
+the eps-history shift, the Eq. 22 noise draw + add, the stochastic/
+corrector selects, and the retire masking each re-read and re-write state
+volume.  This kernel does the entire commit in one grid pass: each grid
+step (b, d) loads one (K, block_d) state tile, the (Qb, K, block_d)
+history tile and the eps tile once, applies every gathered factor pair
+from SMEM, draws the stochastic-branch noise *in VREGs* (threefry2x32,
+keys folded with the slot's step index in-kernel), resolves the selects
+and the (active, fam, prec) retire mask, and stores each output tile
+once.  Per-slot k-advance and retirement land in two tiny SMEM outputs.
+
+Layouts follow `kernels/ei_update`: grid (B, Dp // block_d); per-slot
+block factors, diag-pool ids, config scalars and PRNG keys in SMEM; the
+deduplicated diagonal pool streams as a (Pb, block_d) VMEM tile with
+dynamic row selection.  Coefficient stacking order (the `_PSI`/`_B`/`_P`
+constants + `ops._stage_factors`):
+
+    0 psi | 1 B | 2 P_chol | 3..3+Qb-1 pC_j | 3+Qb..3+2Qb-1 cC_j (corr)
+
+Bitwise discipline: every factor apply reassembles the dense coefficient
+per term — `(blk[c, c2] * diag) * z[c2]`, left-associated sum — which is
+the exact multiply-reduce graph of `apply_factored_ref`, and the noise
+path replicates jax's threefry2x32 / fold_in / uniform->erf_inv normal
+bit-for-bit (verified against `jax.random.normal(fold_in(key, k), .)`
+across seeds, folds and odd sizes).  In interpret mode the kernel is
+bitwise equal to `ref.round_update_ref`; on TPU metal the guarantee is
+tight-tolerance (tests/test_kernels.py).
+
+`gen_noise=False` takes the canonical noise as an input stream instead —
+the BDM path, whose canonicalize is a DCT, not a reshape (`ops` selects
+via the SDE's `canonical_noise_is_reshape`).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+# coefficient slots in the stacked (B, C, kf, kf) SMEM block-factor array
+_PSI, _B, _P = 0, 1, 2
+_N_FIXED = 3                       # pC_j at _N_FIXED + j; cC_j after the pCs
+
+# per-slot int32 SMEM scalar row: [kc, k, n_steps, mine, stoch, use_c, active]
+N_INTS = 7
+
+_U32 = jnp.uint32
+_TF_MAGIC = np.uint32(0x1BD11BDA)
+_ROT_A = (13, 15, 26, 6)
+_ROT_B = (17, 29, 16, 24)
+# key-schedule index pairs injected after each 4-round group i (i = 1..5)
+_INJECT = ((1, 2), (2, 0), (0, 1), (1, 2), (2, 0))
+
+
+def _rotl(x, r: int):
+    return (x << r) | (x >> (32 - r))
+
+
+def _threefry2x32(k0, k1, x0, x1):
+    """The 20-round threefry2x32 block cipher on uint32 scalars/vectors —
+    the same schedule jax's PRNG lowers (jax._src.prng), so counters
+    encrypted here match `jax.random` bit-for-bit."""
+    ks = (k0, k1, k0 ^ k1 ^ _TF_MAGIC)
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for i in range(5):
+        for r in (_ROT_A if i % 2 == 0 else _ROT_B):
+            x0 = x0 + x1
+            x1 = _rotl(x1, r) ^ x0
+        a, b = _INJECT[i]
+        x0 = x0 + ks[a]
+        x1 = x1 + ks[b] + np.uint32(i + 1)
+    return x0, x1
+
+
+def _fold_in(k0, k1, data):
+    """jax.random.fold_in on a raw uint32 key pair: encrypt the pair
+    (0, data) — threefry_seed of a uint32 is [0, data]."""
+    return _threefry2x32(k0, k1, jnp.zeros_like(data), data)
+
+
+_NORM_LO = np.float32(np.nextafter(np.float32(-1.0), np.float32(0.0)))
+_NORM_SCALE = np.float32(1.0) - _NORM_LO
+_SQRT2 = np.float32(np.sqrt(2.0))
+
+
+def _bits_to_normal(bits):
+    """uint32 random bits -> N(0, 1) f32, replicating jax.random.normal's
+    uniform(-1, 1) -> sqrt(2) * erf_inv pipeline bit-for-bit."""
+    fb = (bits >> 9) | np.uint32(0x3F800000)
+    fl = jax.lax.bitcast_convert_type(fb, jnp.float32) - np.float32(1.0)
+    un = jnp.maximum(_NORM_LO, fl * _NORM_SCALE + _NORM_LO)
+    return _SQRT2 * jax.lax.erf_inv(un)
+
+
+def _normal_row(fk0, fk1, f, n: int):
+    """Normal draws for flat state indices `f` (int32 vector) of an n-element
+    `jax.random.normal(key, shape)` call: pair i = (x0=i, x1=i+half, zero
+    past n), lane 0 covers f < half, lane 1 the rest — jax's
+    threefry_random_bits counter layout."""
+    half = (n + 1) // 2
+    i0 = jnp.where(f < half, f, f - half)
+    x1i = i0 + half
+    o0, o1 = _threefry2x32(fk0, fk1, i0.astype(_U32),
+                           jnp.where(x1i < n, x1i, 0).astype(_U32))
+    return _bits_to_normal(jnp.where(f < half, o0, o1))
+
+
+def _make_round_kernel(*, kf: int, K: int, Qb: int, D: int, n: int,
+                       block_d: int, with_corrector: bool, gen_noise: bool):
+    def kernel(ints_ref, keys_ref, blks_ref, dis_ref, pool_ref,
+               u_ref, hist_ref, eps_ref, *rest):
+        i = 0
+        epsn_ref = None
+        if with_corrector:
+            epsn_ref, i = rest[0], 1
+        noise_ref = None
+        if not gen_noise:
+            noise_ref, i = rest[i], i + 1
+        u_out, hist_out, k_out, act_out = rest[i:i + 4]
+
+        kc = ints_ref[0, 0]
+        k = ints_ref[0, 1]
+        nst = ints_ref[0, 2]
+        mine = ints_ref[0, 3] != 0
+        stoch = ints_ref[0, 4] != 0
+        use_c = ints_ref[0, 5] != 0
+        act = ints_ref[0, 6]
+
+        u_rows = [u_ref[0, c] for c in range(K)]            # (bd,) each
+        eps_rows = [eps_ref[0, c] for c in range(kf)]
+        zero = jnp.zeros_like(u_rows[0])
+
+        # q-step history shift: slot 0 <- pad(eps_c), the rest slide
+        h2 = [[eps_rows[c] if c < kf else zero for c in range(K)]]
+        for j in range(1, Qb):
+            h2.append([hist_ref[0, j - 1, c] for c in range(K)])
+
+        def dvec(ci: int):
+            idx = dis_ref[0, ci]
+            return pl.load(pool_ref, (pl.dslice(idx, 1), slice(None)))[0]
+
+        def fapply(ci: int, rows):
+            # (blk * diag) * z per term, left-associated sum over c2 — the
+            # exact apply_factored_ref multiply-reduce, so interpret mode
+            # is bitwise against the ref chain
+            d = dvec(ci)
+            out = []
+            for c in range(kf):
+                r = (blks_ref[0, ci, c, 0] * d) * rows[0]
+                for c2 in range(1, kf):
+                    r = r + (blks_ref[0, ci, c, c2] * d) * rows[c2]
+                out.append(r)
+            return out
+
+        u_lin = fapply(_PSI, u_rows[:kf])
+        u_pred = list(u_lin)
+        for j in range(Qb):
+            tj = fapply(_N_FIXED + j, h2[j][:kf])
+            u_pred = [a + b for a, b in zip(u_pred, tj)]
+
+        if gen_noise:
+            fk0, fk1 = _fold_in(keys_ref[0, 0], keys_ref[0, 1],
+                                kc.astype(_U32))
+            lanes = jax.lax.broadcasted_iota(jnp.int32, (1, block_d), 1)[0]
+            d_abs = pl.program_id(1) * block_d + lanes
+            noise_rows = [_normal_row(fk0, fk1, c * D + d_abs, n)
+                          for c in range(kf)]
+        else:
+            noise_rows = [noise_ref[0, c] for c in range(kf)]
+
+        tB = fapply(_B, eps_rows)
+        tP = fapply(_P, noise_rows)
+        u_sto = [(u_lin[c] + tB[c]) + tP[c] for c in range(kf)]
+        sel = [jnp.where(stoch, u_sto[c], u_pred[c]) for c in range(kf)]
+
+        if with_corrector:
+            epsn_rows = [epsn_ref[0, c] for c in range(kf)]
+            t0 = fapply(_N_FIXED + Qb, epsn_rows)
+            u_corr = [u_lin[c] + t0[c] for c in range(kf)]
+            for j in range(1, Qb):
+                tj = fapply(_N_FIXED + Qb + j, h2[j - 1][:kf])
+                u_corr = [a + b for a, b in zip(u_corr, tj)]
+            sel = [jnp.where(use_c, u_corr[c], sel[c]) for c in range(kf)]
+
+        # retire masking: freeze rows that are not this variant's
+        # (active, family, precision) class; padding rows pass through
+        for c in range(K):
+            u_out[0, c] = jnp.where(mine, sel[c], u_rows[c]) if c < kf \
+                else u_rows[c]
+        for j in range(Qb):
+            for c in range(K):
+                hist_out[0, j, c] = jnp.where(mine, h2[j][c],
+                                              hist_ref[0, j, c])
+        # k-advance + retirement (idempotent across d-tiles)
+        k2 = jnp.where(mine, k + 1, k)
+        k_out[0] = k2
+        act_out[0] = jnp.where(mine, (k2 < nst).astype(jnp.int32), act)
+
+    return kernel
+
+
+def _make_predict_kernel(*, kf: int, K: int, Qb: int):
+    def kernel(blks_ref, dis_ref, pool_ref, u_ref, hist_ref, eps_ref, o_ref):
+        u_rows = [u_ref[0, c] for c in range(kf)]
+        eps_rows = [eps_ref[0, c] for c in range(kf)]
+        h2 = [eps_rows] + [[hist_ref[0, j - 1, c] for c in range(kf)]
+                           for j in range(1, Qb)]
+
+        def dvec(ci: int):
+            idx = dis_ref[0, ci]
+            return pl.load(pool_ref, (pl.dslice(idx, 1), slice(None)))[0]
+
+        def fapply(ci: int, rows):
+            d = dvec(ci)
+            out = []
+            for c in range(kf):
+                r = (blks_ref[0, ci, c, 0] * d) * rows[0]
+                for c2 in range(1, kf):
+                    r = r + (blks_ref[0, ci, c, c2] * d) * rows[c2]
+                out.append(r)
+            return out
+
+        u_pred = fapply(0, u_rows)                    # psi at slot 0
+        for j in range(Qb):
+            tj = fapply(1 + j, h2[j])                 # pC_j at 1 + j
+            u_pred = [a + b for a, b in zip(u_pred, tj)]
+        for c in range(kf):
+            o_ref[0, c] = u_pred[c]
+
+    return kernel
+
+
+def _pad_last(x, Dp: int):
+    if x is None or x.shape[-1] == Dp:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, Dp - x.shape[-1])]
+    return jnp.pad(x, pad)
+
+
+_SMEM = pltpu.SMEM
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kf", "n", "with_corrector", "gen_noise", "block_d", "interpret"))
+def round_fused(ints, keys, blks, dis, pool, u, hist, eps_c,
+                eps_n_c=None, noise_c=None, *, kf: int, n: int,
+                with_corrector: bool = False, gen_noise: bool = True,
+                block_d: int = 2048, interpret: bool = False):
+    """One fused launch for the whole post-score-eval round commit.
+
+    ints (B, N_INTS) int32 [kc, k, n_steps, mine, stoch, use_c, active];
+    keys (B, 2) uint32; blks (B, C, kf, kf) stacked block factors (see
+    module docstring for slot order); dis (B, C) int32 diag-pool ids;
+    pool (Pb, D); u (B, K, D); hist (B, Qb, K, D); eps_c/eps_n_c/noise_c
+    (B, kf, D).  Returns (u_next, hist_next, k_next, active_next_i32).
+    """
+    B, K, D = u.shape
+    Qb = hist.shape[1]
+    block_d = min(block_d, D)
+    Dp = D if D % block_d == 0 else D + (block_d - D % block_d)
+    u, hist, eps_c, eps_n_c, noise_c, pool = (
+        _pad_last(x, Dp) for x in (u, hist, eps_c, eps_n_c, noise_c, pool))
+    Pb, C = pool.shape[0], blks.shape[1]
+    grid = (B, Dp // block_d)
+
+    kernel = _make_round_kernel(
+        kf=kf, K=K, Qb=Qb, D=D, n=n, block_d=block_d,
+        with_corrector=with_corrector, gen_noise=gen_noise)
+
+    in_specs = [
+        pl.BlockSpec((1, N_INTS), lambda b, d: (b, 0), memory_space=_SMEM),
+        pl.BlockSpec((1, 2), lambda b, d: (b, 0), memory_space=_SMEM),
+        pl.BlockSpec((1, C, kf, kf), lambda b, d: (b, 0, 0, 0),
+                     memory_space=_SMEM),
+        pl.BlockSpec((1, C), lambda b, d: (b, 0), memory_space=_SMEM),
+        pl.BlockSpec((Pb, block_d), lambda b, d: (0, d)),
+        pl.BlockSpec((1, K, block_d), lambda b, d: (b, 0, d)),
+        pl.BlockSpec((1, Qb, K, block_d), lambda b, d: (b, 0, 0, d)),
+        pl.BlockSpec((1, kf, block_d), lambda b, d: (b, 0, d)),
+    ]
+    args = [ints, keys, blks.astype(jnp.float32), dis, pool, u, hist, eps_c]
+    if with_corrector:
+        in_specs.append(pl.BlockSpec((1, kf, block_d),
+                                     lambda b, d: (b, 0, d)))
+        args.append(eps_n_c)
+    if not gen_noise:
+        in_specs.append(pl.BlockSpec((1, kf, block_d),
+                                     lambda b, d: (b, 0, d)))
+        args.append(noise_c)
+
+    u2, h2, k2, a2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, K, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, Qb, K, block_d), lambda b, d: (b, 0, 0, d)),
+            pl.BlockSpec((1,), lambda b, d: (b,), memory_space=_SMEM),
+            pl.BlockSpec((1,), lambda b, d: (b,), memory_space=_SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, Dp), u.dtype),
+            jax.ShapeDtypeStruct((B, Qb, K, Dp), hist.dtype),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*args)
+    return u2[..., :D], h2[..., :D], k2, a2
+
+
+@functools.partial(jax.jit, static_argnames=("kf", "block_d", "interpret"))
+def round_predict(blks, dis, pool, u, hist, eps_c, *, kf: int,
+                  block_d: int = 2048, interpret: bool = False):
+    """Fused Eq. 19a predictor iterate (the corrector eval's input):
+    blks (B, 1 + Qb, kf, kf) stacked [psi, pC_0..pC_{Qb-1}]; returns
+    u_pred (B, kf, D)."""
+    B, K, D = u.shape
+    Qb = hist.shape[1]
+    block_d = min(block_d, D)
+    Dp = D if D % block_d == 0 else D + (block_d - D % block_d)
+    u, hist, eps_c, pool = (_pad_last(x, Dp)
+                            for x in (u, hist, eps_c, pool))
+    Pb, C = pool.shape[0], blks.shape[1]
+    grid = (B, Dp // block_d)
+
+    out = pl.pallas_call(
+        _make_predict_kernel(kf=kf, K=K, Qb=Qb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, kf, kf), lambda b, d: (b, 0, 0, 0),
+                         memory_space=_SMEM),
+            pl.BlockSpec((1, C), lambda b, d: (b, 0), memory_space=_SMEM),
+            pl.BlockSpec((Pb, block_d), lambda b, d: (0, d)),
+            pl.BlockSpec((1, K, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, Qb, K, block_d), lambda b, d: (b, 0, 0, d)),
+            pl.BlockSpec((1, kf, block_d), lambda b, d: (b, 0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, kf, block_d), lambda b, d: (b, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((B, kf, Dp), u.dtype),
+        interpret=interpret,
+    )(blks.astype(jnp.float32), dis, pool, u, hist, eps_c)
+    return out[..., :D]

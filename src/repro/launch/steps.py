@@ -34,11 +34,20 @@
   make_diffusion_round_step(spec,  bank-mode gDDIM step over a
                             fam)   DiffusionState pytree: the update is
                                    masked by active & (fam == this family)
-                                   (retired and foreign-family rows freeze)
-                                   and k advances on device.  The engine
-                                   jits one variant per (family, corrector)
-                                   cost class with the state donated, so
-                                   u/hist update in place
+                                   & (prec == this precision class)
+                                   (retired and foreign rows freeze) and k
+                                   advances on device.  The whole
+                                   post-score-eval update runs through the
+                                   kernels/round_fused megakernel (one
+                                   Pallas launch on TPU; bitwise-equal ref
+                                   chain elsewhere).  The engine jits one
+                                   variant per (family, precision,
+                                   corrector) cost class with the state
+                                   donated, so u/hist update in place
+  make_diffusion_round_step_stitched(spec, fam)
+                                   the pre-fusion XLA-stitched assembly of
+                                   the same round — the bitwise
+                                   differential oracle + roofline baseline
 
 `shardings_for(...)` produces (params, opt, inputs) NamedShardings for any
 (arch x shape x mesh) cell from the rules in distributed/sharding.py.
@@ -153,7 +162,8 @@ def make_mask_snapshot():
     return snap
 
 
-def make_diffusion_round_step(spec, fam_index: int = 0):
+def make_diffusion_round_step(spec, fam_index: int = 0, prec_index: int = 0,
+                              impl: str = "auto", eps_model=None):
     """Bank-mode gDDIM step over a device-resident `DiffusionState`: the
     Eq. 19/22/45 update of `make_diffusion_serve_step` plus the per-slot
     bookkeeping — advance `k`, retire (clear `active`) when a slot reaches
@@ -162,13 +172,71 @@ def make_diffusion_round_step(spec, fam_index: int = 0):
     donated (`u`/`hist` update in place) and the bank as a non-donated
     argument (it is reused every round).
 
-    `fam_index` is this variant's family id (a closure constant, so it
-    costs no per-round transfer): the step evaluates *this* spec's score
-    net over the packed batch and commits the update only to active slots
-    whose `state.fam` matches — co-resident slots of other families are
-    left frozen for their own family's variant, which the engine dispatches
-    in the same round.  One compiled variant per (family, corrector) cost
-    class serves any traffic mix."""
+    The whole post-score-eval state update — factor gathers + applies,
+    eps-history shift, Eq. 22 noise, stochastic/corrector selects, retire
+    masking, k-advance — runs through `kernels/round_fused`: ONE Pallas
+    launch per round after the model eval on TPU (`impl='auto'`/'pallas'),
+    and on other backends a ref path that is BITWISE equal to the
+    historical XLA-stitched chain, which survives as
+    `make_diffusion_round_step_stitched` (the differential oracle and the
+    roofline gap's baseline — tests/test_round_fused.py).
+
+    `fam_index`/`prec_index` are this variant's family id and precision
+    class (closure constants, so they cost no per-round transfer): the
+    step evaluates this spec's score net — `eps_model` overrides it for
+    the low-precision variants, e.g. `models.quantize.wrap_eps_model` —
+    over the packed batch and commits the update only to active slots
+    whose `state.fam` and `state.prec` match; co-resident slots of other
+    (family, precision) classes are left frozen for their own variant,
+    which the engine dispatches in the same round.  One compiled variant
+    per (family, precision, corrector) cost class serves any traffic mix.
+    """
+    from ..kernels.round_fused import ops as rf
+
+    sde = spec.sde
+    kf = sde.packed_k
+    data_shape = tuple(spec.data_shape)
+    state_shape = sde.state_shape(data_shape)
+    model = spec.eps_model if eps_model is None else eps_model
+
+    def round_step(params, state, bank, with_corrector=False):
+        from ..serve.state import DiffusionState
+        kc = jnp.clip(jnp.asarray(state.k), 0,
+                      bank.n_steps[state.cfg] - 1)
+        t = bank.t_cur[state.cfg, kc]
+        ub = state.u[:, :kf]
+        eps = model(params, sde.decanonicalize(ub, data_shape), t)
+        eps_c = sde.canonicalize(eps)
+        eps_n_c = None
+        if with_corrector:
+            # Eq. 45: second eval at the predictor iterate (recomputed
+            # inside the commit with the identical ops — bitwise agreement)
+            u_pred = rf.round_predict(state.u, state.hist, kc, state.cfg,
+                                      bank, eps_c, kf=kf, impl=impl)
+            eps_n = model(params, sde.decanonicalize(u_pred, data_shape),
+                          bank.t_nxt[state.cfg, kc])
+            eps_n_c = sde.canonicalize(eps_n)
+        u2, h2, k2, a2 = rf.round_update(
+            state.u, state.hist, state.k, kc, state.cfg, state.fam,
+            state.prec, state.keys, state.active, bank, eps_c,
+            sde=sde, state_shape=state_shape, kf=kf, fam_index=fam_index,
+            prec_index=prec_index, with_corrector=with_corrector,
+            eps_n_c=eps_n_c, impl=impl)
+        return DiffusionState(u=u2, hist=h2, k=k2, cfg=state.cfg,
+                              fam=state.fam, prec=state.prec,
+                              keys=state.keys, active=a2)
+
+    return round_step
+
+
+def make_diffusion_round_step_stitched(spec, fam_index: int = 0):
+    """The PRE-FUSION round step: `make_diffusion_serve_step`'s bank-mode
+    chain of XLA-stitched pieces plus the retire masking, exactly as the
+    engine ran it before `kernels/round_fused`.  Kept as (a) the bitwise
+    differential oracle the fused step is locked against at the round and
+    engine levels (tests/test_round_fused.py), and (b) the baseline whose
+    compiled-HLO byte traffic the roofline's serving mode compares the
+    fused launch's analytic bytes to (benchmarks/roofline.py)."""
     bank_step = make_diffusion_serve_step(spec)
 
     def round_step(params, state, bank, with_corrector=False):
@@ -182,7 +250,8 @@ def make_diffusion_round_step(spec, fam_index: int = 0):
         return DiffusionState(
             u=jnp.where(rmask(state.u), u_next, state.u),
             hist=jnp.where(rmask(state.hist), hist_next, state.hist),
-            k=k, cfg=state.cfg, fam=state.fam, keys=state.keys,
+            k=k, cfg=state.cfg, fam=state.fam, prec=state.prec,
+            keys=state.keys,
             active=jnp.where(mine, k < bank.n_steps[state.cfg],
                              state.active))
 

@@ -1,0 +1,129 @@
+"""Low-precision score-net serving: bf16 and int8 weight-quantized params.
+
+The diffusion round has exactly two costs — the score-net eval and the
+state update.  The update is fused and bitwise (`kernels/round_fused`);
+the eval's weights are the remaining HBM traffic, and this module halves
+(bf16) or quarters (int8) their residency behind a per-request /
+per-engine `precision` flag (`DiffusionEngine(..., precision=)` /
+`SampleRequest.precision`).
+
+The tolerance tier is differential, split by layer:
+
+  * coefficient / state-update layer — BITWISE at every precision: the
+    round commit consumes the net's eps output but never the params, so
+    engine(precision=p) equals "p-precision eval + f32 stitched chain"
+    bit-for-bit, and solo == mixed stays bitwise *within* a precision
+    class (each (family, precision) class is its own compiled variant
+    masked by `state.prec`, exactly like the family axis).
+  * net layer — bounded error vs the f32 eval, with the documented
+    `NET_TOLERANCES` below (locked by tests/test_lowprec.py under the
+    pinned `ci` hypothesis profile).
+
+Weight-only quantization: int8 stores a per-output-channel symmetric
+`QTensor(q, scale)` for every float matrix leaf (ndim >= 2) and leaves
+vectors (biases, norms, time embeddings) in f32; the dequant happens
+inside the compiled round program (`wrap_eps_model`), so the resident
+copy really is int8.  bf16 casts every float leaf; activations stay f32
+(jnp promotes f32 @ bf16 -> f32).  `precision='f32'` is the identity on
+both params and eps_model — the warmed f32 graphs are untouched, byte
+for byte.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+PRECISIONS = ("f32", "bf16", "int8")
+
+# documented bounded-error tolerances of the *net* layer vs the f32 eval
+# (relative to the eps output's scale; see tests/test_lowprec.py).  bf16
+# carries ~8 mantissa bits (~2^-8 relative per op); int8 weight rounding
+# is ~scale/2 per weight, amplified by depth — both measured with slack
+# on the repo's score nets.
+NET_TOLERANCES = {
+    "bf16": {"rtol": 3e-2, "atol": 3e-2},
+    "int8": {"rtol": 2e-1, "atol": 2e-1},
+}
+
+
+def prec_index(precision: str) -> int:
+    """The `state.prec` class id of a precision name (engine/state axis)."""
+    return PRECISIONS.index(check_precision(precision))
+
+
+def check_precision(precision: str) -> str:
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; "
+                         f"choose from {PRECISIONS}")
+    return precision
+
+
+class QTensor(NamedTuple):
+    """Per-output-channel symmetric int8 weight: w ~ q * scale, q int8 in
+    [-127, 127], scale f32 broadcast over all but the last axis.  A pytree
+    (both leaves traverse under jit/device_put), so quantized params ride
+    every existing placement path."""
+    q: Array                    # int8, w.shape
+    scale: Array                # f32, (w.shape[-1],)
+
+    def dequant(self) -> Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+
+def _quantize_leaf_int8(w: Array) -> QTensor:
+    amax = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)))
+    scale = jnp.maximum(amax, 1e-12).astype(jnp.float32) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale)
+
+
+def _is_float(x: Any) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def quantize_tree(params: Any, precision: str) -> Any:
+    """Params pytree -> its `precision` resident form.  'f32' returns the
+    input unchanged (same buffers); 'bf16' casts float leaves; 'int8'
+    replaces float matrices (ndim >= 2) with `QTensor`s and leaves
+    vectors/scalars in f32 (weight-only quantization)."""
+    check_precision(precision)
+    if precision == "f32":
+        return params
+    if precision == "bf16":
+        return jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16) if _is_float(x) else x, params)
+    return jax.tree.map(
+        lambda x: _quantize_leaf_int8(x)
+        if _is_float(x) and x.ndim >= 2 else x, params)
+
+
+def dequantize_tree(params: Any) -> Any:
+    """Inverse residency transform for the eval: QTensor leaves dequant to
+    f32 *inside* the compiled program (the stored copy stays int8)."""
+    return jax.tree.map(
+        lambda x: x.dequant() if isinstance(x, QTensor) else x, params,
+        is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def wrap_eps_model(eps_model, precision: str):
+    """The round-step's eval hook for a precision class.  'f32' is the
+    identity — the warmed full-precision graphs are untouched.  'bf16'
+    and 'int8' dequantize/consume the resident low-precision params and
+    pin the eps output back to f32, so the state-update layer downstream
+    sees the exact dtype/shape contract of the f32 path."""
+    check_precision(precision)
+    if precision == "f32":
+        return eps_model
+
+    if precision == "bf16":
+        def eval_bf16(params, u, t):
+            return eps_model(params, u, t).astype(jnp.float32)
+        return eval_bf16
+
+    def eval_int8(params, u, t):
+        return eps_model(dequantize_tree(params), u, t).astype(jnp.float32)
+    return eval_int8

@@ -281,6 +281,15 @@ class LinearSDE:
         """Channel rows of the canonical (B, k, D) packed state."""
         return getattr(self.ops, "k", 1)
 
+    # True when `canonicalize` is a pure reshape (VPSDE/CLD): i.i.d. normal
+    # noise drawn directly in canonical (B, k, D) layout is then the same
+    # bits as noise_like(state_shape) -> canonicalize, which lets the fused
+    # round kernel (kernels/round_fused) draw the Eq. 22 noise in-kernel.
+    # BDM overrides this: its canonicalize is a DCT, so canonical noise is
+    # a correlated transform of the state-space draw and must be computed
+    # outside the kernel and streamed in.
+    canonical_noise_is_reshape = True
+
     def canonicalize(self, u: Array) -> Array:
         """(B, *state_shape) -> (B, packed_k, D) in the linear basis."""
         return u.reshape(u.shape[0], self.packed_k, -1)

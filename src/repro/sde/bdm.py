@@ -163,6 +163,10 @@ class BDM(LinearSDE):
             return dct2(u, inverse=inverse)
         return idct_nd(u, axes) if inverse else dct_nd(u, axes)
 
+    # canonicalize is a DCT, not a reshape: the fused round kernel cannot
+    # draw this family's Eq. 22 noise in-kernel (see sde/base.py)
+    canonical_noise_is_reshape = False
+
     def canonicalize(self, u: Array) -> Array:
         return self._dct2(u, inverse=False).reshape(u.shape[0], 1, -1)
 

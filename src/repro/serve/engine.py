@@ -55,7 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -63,6 +63,7 @@ import jax.numpy as jnp
 
 from ..launch import steps as steps_lib
 from ..models.registry import Arch
+from ..models import quantize as qtz
 from ..core import CoeffCache, SamplerConfig
 from ..sde.base import family_name
 from ..distributed import sharding as shd
@@ -169,15 +170,16 @@ def _make_deactivate(out_shardings=None):
 def _make_diffusion_admit(out_shardings=None):
     """jitted admission scatter into a DiffusionState: one slot row —
     packed prior sample, zeroed eps history, k=0, config index, family id,
-    PRNG key.  The state is donated."""
+    precision class, PRNG key.  The state is donated."""
 
-    def admit(state, u_row, key_row, i, ci, fi):
+    def admit(state, u_row, key_row, i, ci, fi, pi):
         return DiffusionState(
             u=state.u.at[i].set(u_row[0]),
             hist=state.hist.at[i].set(0.0),
             k=state.k.at[i].set(0),
             cfg=state.cfg.at[i].set(ci),
             fam=state.fam.at[i].set(fi),
+            prec=state.prec.at[i].set(pi),
             keys=state.keys.at[i].set(key_row),
             active=state.active.at[i].set(True))
 
@@ -526,6 +528,7 @@ class DiffusionEngine(ServeLoop):
     def __init__(self, spec: Any, params: Any, batch_size: int,
                  nfe: Optional[int] = None, grid: Optional[str] = None,
                  default_config: Optional[SamplerConfig] = None,
+                 precision: str = "f32",
                  mesh: Any = None,
                  shard_cfg: Optional[shd.ShardCfg] = None,
                  sync_every: int = 8):
@@ -597,16 +600,30 @@ class DiffusionEngine(ServeLoop):
         self._bank = None
         self._refresh_bank()
 
-        # one round-step program per family (x2 with_corrector variants),
-        # donated on the state: u/hist update in place.  The family index
-        # baked into each variant is the closure constant that keeps the
-        # steady-state round transfer-free
+        # low-precision serving: requests pick a score-net precision class
+        # (engine default `precision`); each class keeps its own lazily-
+        # quantized device-resident copy of the family's params
+        # (models/quantize — bf16 cast / int8 QTensor residency) and its
+        # own compiled round variants, masked per-slot by `state.prec`
+        self.precision = qtz.check_precision(precision)
+        self._params_prec: Dict[Any, Any] = {
+            (n, "f32"): p for n, p in params.items()}
+
+        # one round-step program per (family, precision) class (x2
+        # with_corrector variants), donated on the state: u/hist update in
+        # place.  The family index and precision class baked into each
+        # variant are the closure constants that keep the steady-state
+        # round transfer-free; unused precision classes never trace, so
+        # they cost nothing until traffic asks for them
         self._steps = {
-            n: _jit_state_update(
+            (n, prec): _jit_state_update(
                 steps_lib.make_diffusion_round_step(
-                    s, fam_index=self.cache.fam_index(n)),
+                    s, fam_index=self.cache.fam_index(n),
+                    prec_index=pi,
+                    eps_model=qtz.wrap_eps_model(s.eps_model, prec)),
                 (1,), state_sh, static_argnames=("with_corrector",))
-            for n, s in specs.items()}
+            for n, s in specs.items()
+            for pi, prec in enumerate(qtz.PRECISIONS)}
         self._admit_state = _make_diffusion_admit(out_shardings=state_sh)
         # preemption machinery (serve_stream): every DiffusionState leaf is
         # batch-leading, so the generic parking row fetch/restore covers the
@@ -667,10 +684,28 @@ class DiffusionEngine(ServeLoop):
             lam=pick(req.lam, d.lam), grid=pick(req.grid, d.grid),
             family=fam)
 
+    def precision_of(self, req: SampleRequest) -> str:
+        """The request's score-net precision class (engine default when
+        unset) — never part of the SamplerConfig: coefficients stay f32
+        and bitwise at every precision (models/quantize docstring)."""
+        return qtz.check_precision(
+            self.precision if req.precision is None else req.precision)
+
     def _class_of(self, req: SampleRequest):
-        """The admission-wave cost class: (family, corrector)."""
+        """The admission-wave cost class: (family, corrector, precision)."""
         cfg = self.config_of(req)
-        return (cfg.family, cfg.corrector)
+        return (cfg.family, cfg.corrector, self.precision_of(req))
+
+    def _params_for(self, fam: str, prec: str):
+        """This (family, precision) class's device-resident params —
+        quantized from the placed f32 copy on first use, then cached
+        (resident next to the f32 copy; the round program reads the
+        low-precision buffers directly)."""
+        key = (fam, prec)
+        if key not in self._params_prec:
+            self._params_prec[key] = qtz.quantize_tree(self.params[fam],
+                                                       prec)
+        return self._params_prec[key]
 
     # ---- coefficient-bank placement ----------------------------------------
     def _refresh_bank(self) -> None:
@@ -700,6 +735,7 @@ class DiffusionEngine(ServeLoop):
     def _validate(self, r: SampleRequest) -> None:
         try:
             self.config_of(r)           # fail fast, before any device work
+            self.precision_of(r)
         except ValueError as e:
             raise ValueError(f"request {r.rid}: {e}") from None
 
@@ -724,33 +760,37 @@ class DiffusionEngine(ServeLoop):
         for req, cfg, ci in zip(group, cfgs, idx):
             i = free.pop(0)
             fi = self.cache.fam_index(cfg.family)
+            prec = self.precision_of(req)
+            pi = qtz.prec_index(prec)
             base = jax.random.PRNGKey(req.seed)
             with self._ctx():
                 row = self._prior1[cfg.family](base)
                 key_row = jax.random.fold_in(base, self._NOISE_SALT)
                 self.state = self._admit_state(self.state, row, key_row,
                                                np.int32(i), np.int32(ci),
-                                               np.int32(fi))
+                                               np.int32(fi), np.int32(pi))
             self.slots.assign(i, req, k=0, cfg=ci, nfe=cfg.nfe,
-                              family=cfg.family, pc=cfg.corrector)
+                              family=cfg.family, pc=cfg.corrector, prec=prec)
 
     def _round(self) -> None:
-        # dispatch one variant per (family, corrector) class present among
-        # active slots — a host-shadow read, no device fetch.  Iteration
-        # follows family registration order so a round's dispatch sequence
-        # is deterministic
-        want: Dict[str, bool] = {}
+        # dispatch one variant per (family, precision, corrector) class
+        # present among active slots — a host-shadow read, no device fetch.
+        # Iteration follows (family registration order) x (PRECISIONS
+        # order) so a round's dispatch sequence is deterministic
+        want: Dict[Tuple[str, str], bool] = {}
         for s in self.slots.active():
-            fam = s.data["family"]
-            want[fam] = want.get(fam, False) or s.data["pc"]
+            cls = (s.data["family"], s.data["prec"])
+            want[cls] = want.get(cls, False) or s.data["pc"]
         for fam in self.families:
-            if fam not in want:
-                continue
-            with self._ctx():
-                self.state = self._steps[fam](
-                    self.params[fam], self.state, self._bank,
-                    with_corrector=want[fam])
-            self.n_steps += 1
+            for prec in qtz.PRECISIONS:
+                cls = (fam, prec)
+                if cls not in want:
+                    continue
+                with self._ctx():
+                    self.state = self._steps[cls](
+                        self._params_for(fam, prec), self.state, self._bank,
+                        with_corrector=want[cls])
+                self.n_steps += 1
         self.n_rounds += 1
         for s in self.slots.active():
             s.data["k"] += 1

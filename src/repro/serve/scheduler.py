@@ -73,6 +73,10 @@ class SampleRequest:
     lam: Optional[float] = None         # stochasticity lambda (Eq. 22)
     grid: Optional[str] = None          # 'quadratic' | 'uniform'
     family: Optional[str] = None        # SDE family ('vpsde'|'cld'|'bdm')
+    precision: Optional[str] = None     # score-net precision class
+                                        # ('f32'|'bf16'|'int8'); bitwise at
+                                        # the state-update layer, bounded-
+                                        # error at the net (models/quantize)
     priority: int = 0                   # higher = more urgent (online path)
     deadline: Optional[float] = None    # absolute virtual-clock time
 

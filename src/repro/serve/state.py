@@ -83,8 +83,12 @@ class DiffusionState(NamedTuple):
       cfg     (B,) int32        per-slot config row in the factored
                                 coefficient bank (`FactoredBank`)
       fam     (B,) int32        per-slot SDE family id (`CoeffCache.families`
-                                order) — selects which (family, corrector)
+                                order) — with `prec`, selects which
                                 round-step variant commits the slot's update
+      prec    (B,) int32        per-slot score-net precision class
+                                (`models.quantize.PRECISIONS` order:
+                                f32/bf16/int8) — second axis of the
+                                variant mask, same contract as `fam`
       keys    (B, 2) uint32     per-slot PRNG key (Eq. 22 stochastic branch)
       active  (B,) bool         False once k reached the config's NFE
 
@@ -99,6 +103,7 @@ class DiffusionState(NamedTuple):
     k: Array
     cfg: Array
     fam: Array
+    prec: Array
     keys: Array
     active: Array
 
@@ -128,6 +133,7 @@ def diffusion_state_init(batch_size: int, k_max: int, data_dim: int,
         k=jnp.zeros((B,), jnp.int32),
         cfg=jnp.zeros((B,), jnp.int32),
         fam=jnp.zeros((B,), jnp.int32),
+        prec=jnp.zeros((B,), jnp.int32),
         keys=jnp.zeros((B, 2), jnp.uint32),
         active=jnp.zeros((B,), bool),
     )

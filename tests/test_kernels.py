@@ -211,3 +211,105 @@ def test_ei_update_is_the_gddim_step():
     out = ei_update(up, ep, co.psi[k], co.pC[k], interpret=True)
     np.testing.assert_allclose(np.asarray(unpack_state(out, shape)),
                                np.asarray(u_ref), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# round_fused (the whole post-score-eval round commit, one launch)
+# ---------------------------------------------------------------------------
+def _round_fused_parts():
+    import functools
+    from repro.core import CoeffCache, SamplerConfig
+    from repro.sde import VPSDE, CLD, BDM
+    if not hasattr(_round_fused_parts, "_cache"):
+        shape = (4, 4, 3)
+        cache = CoeffCache({"vpsde": VPSDE(), "cld": CLD(),
+                            "bdm": BDM(data_shape=shape)},
+                           data_shape=shape)
+        cfgs = [SamplerConfig(nfe=4), SamplerConfig(nfe=5, q=2),
+                SamplerConfig(nfe=6, lam=0.7),
+                SamplerConfig(nfe=4, family="cld"),
+                SamplerConfig(nfe=4, family="cld", q=2, corrector=True),
+                SamplerConfig(nfe=5, family="cld", lam=0.5),
+                SamplerConfig(nfe=4, family="bdm", q=2, corrector=True),
+                SamplerConfig(nfe=3, family="bdm", lam=0.5)]
+        idx = [cache.index_of(c) for c in cfgs]
+        _round_fused_parts._cache = (cache, cfgs, idx, shape)
+    return _round_fused_parts._cache
+
+
+# corners: family x q x corrector x stochastic — each case's slot list
+# cycles the matching configs, so every case also mixes q/nfe per slot
+ROUND_CASES = [
+    # (family, want_q2, with_corrector, want_stochastic)
+    ("vpsde", False, False, False),
+    ("vpsde", True, False, False),
+    ("vpsde", False, False, True),
+    ("vpsde", True, True, True),
+    ("cld", False, False, False),
+    ("cld", True, True, False),
+    ("cld", False, False, True),
+    ("bdm", True, False, False),
+    ("bdm", True, True, True),
+]
+
+
+@pytest.mark.parametrize("family,q2,corr,sto", ROUND_CASES)
+def test_round_fused_kernel_matches_ref(family, q2, corr, sto):
+    """One interpret-mode launch of the fused round commit vs the jitted
+    reference chain: BITWISE for the kf=1 families (VPSDE/BDM — the
+    in-kernel threefry/erf_inv noise draw reproduces the stitched
+    fold_in draw exactly), and within one rounding of the CLD kf=2 block
+    contraction (the ref einsum lowers to an FMA dot_general; see
+    apply_factored_ref's docstring — same gap class as the
+    `test_apply_factored_kernel_matches_ref` tolerance)."""
+    import functools
+    from repro.kernels.round_fused import ops as rf
+    cache, cfgs, idx, shape = _round_fused_parts()
+    bank = cache.factored_bank
+    sde = cache.sdes[family]
+    kf, fi = sde.packed_k, cache.fam_index(family)
+    K, D = cache.k_max, int(np.prod(shape))
+    Qb = bank.pC_blk.shape[2]
+    slots = [c for c, cfg in zip(idx, cfgs)
+             if cache.resolve(cfg) == family
+             and (cfg.q == 2) == q2 and (cfg.lam > 0) == sto] \
+        or [c for c, cfg in zip(idx, cfgs) if cache.resolve(cfg) == family]
+    B = 3
+    rng = np.random.default_rng(
+        abs(hash((family, q2, corr, sto))) % 99991)
+    cfg_ids = jnp.asarray([slots[i % len(slots)] for i in range(B)],
+                          jnp.int32)
+    k = jnp.asarray(rng.integers(0, 5, B), jnp.int32)
+    kc = jnp.clip(k, 0, bank.n_steps[cfg_ids] - 1)
+    u = jnp.asarray(rng.standard_normal((B, K, D)), jnp.float32)
+    hist = jnp.asarray(rng.standard_normal((B, Qb, K, D)), jnp.float32)
+    eps_c = jnp.asarray(rng.standard_normal((B, kf, D)), jnp.float32)
+    eps_n_c = jnp.asarray(rng.standard_normal((B, kf, D)), jnp.float32)
+    keys = jnp.asarray(rng.integers(0, 2**32, (B, 2), dtype=np.uint64),
+                       jnp.uint32)
+    args = (u, hist, k, kc, cfg_ids, jnp.full((B,), fi, jnp.int32),
+            jnp.zeros((B,), jnp.int32), keys,
+            jnp.asarray([True, True, False]), bank, eps_c)
+    call = functools.partial(
+        rf.round_update, sde=sde, state_shape=sde.state_shape(shape),
+        kf=kf, fam_index=fi, prec_index=0, with_corrector=corr)
+    out_ref = jax.jit(functools.partial(call, impl="ref"))(
+        *args, eps_n_c=eps_n_c)
+    out_pl = call(*args, eps_n_c=eps_n_c, impl="pallas_interpret",
+                  block_d=64)
+    p_ref = jax.jit(functools.partial(rf.round_predict, kf=kf, impl="ref"))(
+        u, hist, kc, cfg_ids, bank, eps_c)
+    p_pl = rf.round_predict(u, hist, kc, cfg_ids, bank, eps_c, kf=kf,
+                            impl="pallas_interpret", block_d=64)
+    for nm, a, b in list(zip(("u", "hist", "k", "active"),
+                             out_ref, out_pl)) + [("u_pred", p_ref, p_pl)]:
+        a, b = np.asarray(a), np.asarray(b)
+        if kf == 1:
+            np.testing.assert_array_equal(
+                a, b,
+                err_msg=f"{family} q2={q2} corr={corr} sto={sto} {nm}: "
+                        "kf=1 must be bitwise")
+        else:
+            np.testing.assert_allclose(
+                a, b, rtol=1e-5, atol=1e-5,
+                err_msg=f"{family} {nm}: beyond the kf=2 FMA gap")

@@ -1,0 +1,192 @@
+"""Low-precision serving: the differential tolerance tier of PR 8.
+
+The precision axis splits by layer (models/quantize docstring):
+
+  * state-update layer — BITWISE at every precision.  The round commit
+    consumes the net's f32 eps output and never touches the params, so
+    an engine serving precision p equals "p-precision eval + the f32
+    stitched chain" bit for bit, and solo == mixed stays bitwise within
+    a precision class.  The f32 class itself is untouched by the
+    refactor: `wrap_eps_model(..., 'f32')` is the identity, so an
+    all-f32 engine and the f32 slots of a mixed-precision engine run the
+    byte-identical warmed graphs.
+  * net layer — bounded error vs the f32 eval, with the documented
+    `NET_TOLERANCES` (bf16 ~2^-8 relative; int8 ~scale/2 per weight,
+    depth-amplified).
+
+Plus the serving contract: warming every precision class once means
+later traffic — any mix of precisions and in-bucket configs — compiles
+NOTHING (`recompiles_after_warmup == 0` stays gated in perf_guard).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_diffusion
+from repro.models import quantize as qtz
+from repro.serve import DiffusionEngine, SampleRequest
+
+
+@pytest.fixture(scope="module")
+def spec_params():
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    return spec, spec.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# the residency transform itself
+# ---------------------------------------------------------------------------
+def test_f32_is_identity(spec_params):
+    spec, params = spec_params
+    assert qtz.quantize_tree(params, "f32") is params
+    model = spec.eps_model
+    assert qtz.wrap_eps_model(model, "f32") is model
+
+
+def test_bf16_casts_every_float_leaf(spec_params):
+    _, params = spec_params
+    q = qtz.quantize_tree(params, "bf16")
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(q)):
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            assert b.dtype == jnp.bfloat16
+            np.testing.assert_array_equal(
+                np.asarray(a.astype(jnp.bfloat16), np.float32),
+                np.asarray(b, np.float32))
+        else:
+            assert b.dtype == a.dtype
+
+
+def test_int8_quantizes_matrices_within_half_scale(spec_params):
+    _, params = spec_params
+    q = qtz.quantize_tree(params, "int8")
+    n_qt = 0
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(q, is_leaf=lambda x:
+                                    isinstance(x, qtz.QTensor))):
+        if isinstance(b, qtz.QTensor):
+            n_qt += 1
+            assert b.q.dtype == jnp.int8 and a.ndim >= 2
+            err = np.abs(np.asarray(b.dequant()) - np.asarray(a))
+            half = 0.5 * np.asarray(b.scale) + 1e-12
+            assert (err <= half + 1e-7 * np.abs(np.asarray(a))).all()
+        else:
+            # vectors/scalars ride in f32 (weight-only quantization)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert n_qt > 0
+
+
+def test_unknown_precision_rejected(spec_params):
+    spec, params = spec_params
+    with pytest.raises(ValueError, match="unknown precision"):
+        DiffusionEngine(spec, params, batch_size=2, nfe=4, precision="fp4")
+    eng = DiffusionEngine(spec, params, batch_size=2, nfe=4)
+    with pytest.raises(ValueError, match="unknown precision"):
+        eng.serve([SampleRequest(rid=0, precision="fp4")])
+
+
+# ---------------------------------------------------------------------------
+# net layer: bounded error vs the f32 eval (the documented tolerances)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+def test_net_eval_within_documented_tolerance(spec_params, precision):
+    spec, params = spec_params
+    shape = (4,) + tuple(spec.data_shape)
+    u = jax.random.normal(jax.random.PRNGKey(1), shape)
+    t = jnp.full((4,), 0.5)
+    ref = np.asarray(spec.eps_model(params, u, t))
+    lo = np.asarray(qtz.wrap_eps_model(spec.eps_model, precision)(
+        qtz.quantize_tree(params, precision), u, t))
+    assert lo.dtype == np.float32
+    tol = qtz.NET_TOLERANCES[precision]
+    np.testing.assert_allclose(
+        lo, ref, rtol=tol["rtol"], atol=tol["atol"] * np.abs(ref).max(),
+        err_msg=f"{precision} eval beyond its documented tolerance")
+
+
+# ---------------------------------------------------------------------------
+# state-update layer: bitwise, solo == mixed, f32 untouched
+# ---------------------------------------------------------------------------
+def test_solo_equals_mixed_within_precision_class(spec_params):
+    spec, params = spec_params
+    reqs = [SampleRequest(rid=0, seed=0),
+            SampleRequest(rid=1, seed=1, precision="bf16"),
+            SampleRequest(rid=2, seed=2, precision="int8"),
+            SampleRequest(rid=3, seed=3, precision="bf16", nfe=5)]
+    mixed = DiffusionEngine(spec, params, batch_size=2, nfe=6).serve(reqs)
+    assert set(mixed) == {0, 1, 2, 3}
+    for r in reqs:
+        solo = DiffusionEngine(spec, params, batch_size=2,
+                               nfe=6).serve([r])
+        np.testing.assert_array_equal(
+            mixed[r.rid], solo[r.rid],
+            err_msg=f"rid {r.rid} ({r.precision or 'f32'}): solo != mixed")
+
+
+def test_f32_class_unperturbed_by_lowprec_neighbours(spec_params):
+    """The f32 request in a mixed-precision batch is bitwise what an
+    all-f32 engine serves: the low-precision classes ride their own
+    variants and masks, never the f32 slots' arithmetic."""
+    spec, params = spec_params
+    r = SampleRequest(rid=0, seed=7)
+    base = DiffusionEngine(spec, params, batch_size=2, nfe=6).serve([r])
+    mixed = DiffusionEngine(spec, params, batch_size=2, nfe=6).serve(
+        [r, SampleRequest(rid=1, seed=8, precision="int8")])
+    np.testing.assert_array_equal(mixed[0], base[0])
+
+
+def test_lowprec_equals_lowprec_eval_plus_f32_chain(spec_params):
+    """The tolerance split made operational: engine(precision=p) must
+    reproduce, bitwise, a stitched-chain engine whose ONLY change is the
+    p-precision score eval — i.e. the whole error budget of low-precision
+    serving lives in the net layer; the state-update layer contributes
+    exactly zero."""
+    from repro.launch.steps import make_diffusion_round_step_stitched
+    from repro.serve.engine import _jit_state_update
+    spec, params = spec_params
+
+    class _PrecSpec:
+        """spec with the eval swapped for its p-precision wrapper."""
+        def __init__(self, spec, precision):
+            self._spec = spec
+            self.eps_model = qtz.wrap_eps_model(spec.eps_model, precision)
+
+        def __getattr__(self, name):
+            return getattr(self._spec, name)
+
+    for precision in ("bf16", "int8"):
+        r = SampleRequest(rid=0, seed=3, precision=precision)
+        out = DiffusionEngine(spec, params, batch_size=2, nfe=5).serve([r])
+
+        oracle = DiffusionEngine(spec, params, batch_size=2, nfe=5,
+                                 precision=precision)
+        oracle._steps = {
+            (n, precision): _jit_state_update(
+                make_diffusion_round_step_stitched(
+                    _PrecSpec(s, precision),
+                    fam_index=oracle.cache.fam_index(n)),
+                (1,), oracle._state_sh,
+                static_argnames=("with_corrector",))
+            for n, s in oracle.specs.items()}
+        ref = oracle.serve([SampleRequest(rid=0, seed=3)])
+        np.testing.assert_array_equal(
+            out[0], ref[0],
+            err_msg=f"{precision}: state-update layer leaked error")
+
+
+# ---------------------------------------------------------------------------
+# serving contract: zero recompiles after a full-precision warmup
+# ---------------------------------------------------------------------------
+def test_zero_recompiles_after_precision_warmup(spec_params):
+    spec, params = spec_params
+    eng = DiffusionEngine(spec, params, batch_size=2, nfe=6)
+    eng.serve([SampleRequest(rid=0, seed=0),
+               SampleRequest(rid=1, seed=1, precision="bf16"),
+               SampleRequest(rid=2, seed=2, precision="int8")])
+    warm = eng.compile_stats()
+    assert warm["step"] == 3            # one variant per warmed class
+    eng.serve([SampleRequest(rid=10 + i, seed=i,
+                             precision=["int8", "f32", "bf16"][i % 3],
+                             nfe=[6, 5, 4][i % 3])
+               for i in range(6)])
+    assert eng.compile_stats() == warm, "post-warmup traffic recompiled"

@@ -403,3 +403,89 @@ class TestCoeffProperties:
         ddim = ddim_closed_form_check(sde, ts)
         np.testing.assert_allclose(np.asarray(co.pC[:, 0]), ddim,
                                    rtol=1e-4, atol=1e-6)
+
+
+class TestRoundFusedProperties:
+    """The fused round megakernel (kernels/round_fused) as a property,
+    mirroring `test_apply_factored_kernel`: for any family / batch /
+    corrector flag / seed, one interpret-mode launch of the commit kernel
+    reproduces the jitted reference chain — bitwise for the kf=1 families
+    (VPSDE/BDM, in-kernel threefry noise included), and within one
+    rounding of the kf=2 (CLD) block contraction (the ref's XLA-lowered
+    dot_general accumulates with FMA; see `apply_factored_ref`)."""
+
+    @staticmethod
+    def _parts():
+        import functools
+        from repro.core import CoeffCache, SamplerConfig
+
+        @functools.lru_cache(maxsize=1)
+        def build():
+            shape = (4, 4, 3)
+            cache = CoeffCache({"vpsde": VPSDE(), "cld": CLD(),
+                                "bdm": BDM(data_shape=shape)},
+                               data_shape=shape)
+            cfgs = [SamplerConfig(nfe=4), SamplerConfig(nfe=5, q=2),
+                    SamplerConfig(nfe=6, lam=0.7),
+                    SamplerConfig(nfe=4, family="cld"),
+                    SamplerConfig(nfe=4, family="cld", q=2, corrector=True),
+                    SamplerConfig(nfe=4, family="bdm", q=2),
+                    SamplerConfig(nfe=3, family="bdm", lam=0.5)]
+            idx = [cache.index_of(c) for c in cfgs]
+            return cache, cfgs, idx, shape
+        if not hasattr(TestRoundFusedProperties, "_cached"):
+            TestRoundFusedProperties._cached = build()
+        return TestRoundFusedProperties._cached
+
+    @given(
+        B=st.integers(min_value=1, max_value=3),
+        family=st.sampled_from(["vpsde", "cld", "bdm"]),
+        with_corrector=st.booleans(),
+        seed=st.integers(min_value=0, max_value=2**30),
+    )
+    @settings(**SLOW)
+    def test_round_fused_kernel_matches_ref(self, B, family, with_corrector,
+                                            seed):
+        import functools
+        from repro.kernels.round_fused import ops as rf
+        cache, cfgs, idx, shape = self._parts()
+        bank = cache.factored_bank
+        sde = cache.sdes[family]
+        kf = sde.packed_k
+        fi = cache.fam_index(family)
+        K, D = cache.k_max, int(np.prod(shape))
+        Qb = bank.pC_blk.shape[2]
+        slots = [c for c, cfg in zip(idx, cfgs)
+                 if cache.resolve(cfg) == family]
+        rng = np.random.default_rng(seed)
+        cfg_ids = jnp.asarray(rng.choice(slots, B), jnp.int32)
+        k = jnp.asarray(rng.integers(0, 5, B), jnp.int32)
+        kc = jnp.clip(k, 0, bank.n_steps[cfg_ids] - 1)
+        u = jnp.asarray(rng.standard_normal((B, K, D)), jnp.float32)
+        hist = jnp.asarray(rng.standard_normal((B, Qb, K, D)), jnp.float32)
+        eps_c = jnp.asarray(rng.standard_normal((B, kf, D)), jnp.float32)
+        eps_n_c = jnp.asarray(rng.standard_normal((B, kf, D)), jnp.float32)
+        keys = jnp.asarray(rng.integers(0, 2**32, (B, 2), dtype=np.uint64),
+                           jnp.uint32)
+        fam_ids = jnp.full((B,), fi, jnp.int32)
+        prec = jnp.zeros((B,), jnp.int32)
+        active = jnp.asarray(rng.integers(0, 2, B, dtype=np.int64) > 0)
+        call = functools.partial(
+            rf.round_update, sde=sde, state_shape=sde.state_shape(shape),
+            kf=kf, fam_index=fi, prec_index=0,
+            with_corrector=with_corrector)
+        out_ref = jax.jit(functools.partial(call, impl="ref"))(
+            u, hist, k, kc, cfg_ids, fam_ids, prec, keys, active, bank,
+            eps_c, eps_n_c=eps_n_c)
+        out_pl = call(u, hist, k, kc, cfg_ids, fam_ids, prec, keys, active,
+                      bank, eps_c, eps_n_c=eps_n_c,
+                      impl="pallas_interpret", block_d=64)
+        for nm, a, b in zip(("u", "hist", "k", "active"), out_ref, out_pl):
+            a, b = np.asarray(a), np.asarray(b)
+            if kf == 1:
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"{family} {nm}: kf=1 must be bitwise")
+            else:
+                np.testing.assert_allclose(
+                    a, b, rtol=1e-5, atol=1e-5,
+                    err_msg=f"{family} {nm}: beyond the FMA gap")

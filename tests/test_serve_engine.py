@@ -531,9 +531,10 @@ class TestSchedulerGrouping:
 
 def test_family_corrector_wave_grouping(family_parts):
     """Admission waves are homogeneous in the generalized (family,
-    corrector) cost class: FIFO with head-of-line grouping, so a wave
-    never mixes classes (a cld render would otherwise drag vpsde
-    neighbours through its score net's rounds from round one)."""
+    corrector, precision) cost class: FIFO with head-of-line grouping,
+    so a wave never mixes classes (a cld render would otherwise drag
+    vpsde neighbours through its score net's rounds from round one, and
+    an int8 request would drag f32 neighbours onto the quantized net)."""
     specs, params = family_parts
     engine = DiffusionEngine(specs, params, batch_size=8, nfe=4)
     reqs = [SampleRequest(rid=0, seed=0),                      # (vpsde, F)
@@ -548,11 +549,12 @@ def test_family_corrector_wave_grouping(family_parts):
         waves.append([engine._class_of(r)
                       for r in engine.scheduler.take_group(8)])
     for w in waves:
-        assert len(set(w)) == 1, (waves,
-                                  "a wave mixed (family, corrector) classes")
+        assert len(set(w)) == 1, (
+            waves, "a wave mixed (family, corrector, precision) classes")
     assert [w[0] for w in waves] == [
-        ("vpsde", False), ("cld", False), ("cld", True), ("cld", False),
-        ("bdm", False)]
+        ("vpsde", False, "f32"), ("cld", False, "f32"),
+        ("cld", True, "f32"), ("cld", False, "f32"),
+        ("bdm", False, "f32")]
 
 
 # ---------------------------------------------------------------------------

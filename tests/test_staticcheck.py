@@ -188,11 +188,33 @@ class TestSanitizer:
         assert "PL201" in rules          # 32 does not divide 48
         assert "PL202" in rules          # index map walks off the array
 
+    def test_bad_round_fused_trips_pl201_and_pl202(self):
+        # the real megakernel body behind a launch that drops the
+        # padding contract: ragged block + an overshooting d-tile
+        from tests.staticcheck_fixtures import bad_round_fused
+        from tools.staticcheck import pallas_check as plc
+        closed = bad_round_fused.bad_round_fused_trace()
+        eqns = plc.find_pallas_eqns(closed.jaxpr)
+        assert len(eqns) == 1
+        findings = plc.check_pallas_eqn(eqns[0], "fixture")
+        rules = {f.rule for f in findings}
+        assert "PL201" in rules          # 32 does not divide 48
+        assert "PL202" in rules          # second d-tile spans [32, 64)
+        # the SMEM scalar rows are exempt: only VMEM state streams flagged
+        assert all("SMEM" not in f.message for f in findings
+                   if f.rule in ("PL201", "PL202"))
+
     def test_clean_kernels_have_no_findings(self):
         from tools.staticcheck import menu
         from tools.staticcheck import pallas_check as plc
+        entries = menu.kernel_entries()
+        labels = [label for label, _ in entries]
+        # the fused-round megakernel is a registered layer-2 entry
+        assert any("round_fused/round_fused[" in l for l in labels)
+        assert any("round_fused/round_fused+corr[" in l for l in labels)
+        assert any("round_fused/round_predict[" in l for l in labels)
         findings = []
-        for label, closed in menu.kernel_entries():
+        for label, closed in entries:
             findings += plc.check_traced(closed.jaxpr, label)
         assert findings == [], "\n".join(f.text() for f in findings)
 

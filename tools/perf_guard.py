@@ -31,6 +31,11 @@ Rules, per record matched by `config`:
     The online record's preemption counters (`n_preemptions`, `n_resumes`,
     `deadline_misses`) are exact too: at a fixed seed the virtual-clock
     replay is deterministic, so any drift means the schedule changed.
+    The roofline record's `kernel_launches_per_round` (pallas_call count
+    in the traced fused round commit — the megakernel's 1-launch
+    contract) and `round_bytes_moved` (the analytic single-pass byte
+    model of that launch) are pure functions of static shapes: a second
+    launch sneaking into the round, or an extra stream read, fails here.
   * a baseline config missing from the fresh run fails (a silently dropped
     row is how perf coverage rots); fresh-only configs are reported but
     pass (new rows land with their own baseline in the same PR).
@@ -48,7 +53,8 @@ from typing import Dict, List
 BOUNDED = ("recompiles_after_warmup", "rounds", "dispatches", "polls",
            "n_prefills", "bank_bytes", "bank_restack_rows")
 EXACT = ("n_requests", "n_configs", "batch", "nfe", "bank_bytes_dense",
-         "n_variants", "n_preemptions", "n_resumes", "deadline_misses")
+         "n_variants", "n_preemptions", "n_resumes", "deadline_misses",
+         "kernel_launches_per_round", "round_bytes_moved")
 
 
 def _records(path: str) -> Dict[str, dict]:

@@ -105,7 +105,8 @@ def build_diffusion_variants(quick: bool = False
     engine = DiffusionEngine(specs, params, batch_size=B, nfe=nfe)
 
     calls: list = []
-    engine._steps = {n: _Recorder(s, f"step:{n}", calls)
+    # _steps is keyed (family, precision) since the fused-round refactor
+    engine._steps = {n: _Recorder(s, f"step:{n[0]}/{n[1]}", calls)
                      for n, s in engine._steps.items()}
     engine._admit_state = _Recorder(engine._admit_state, "admit", calls)
     engine._prior1 = {n: _Recorder(p, f"prior:{n}", calls)
@@ -233,8 +234,9 @@ def kernel_entries() -> List[Tuple[str, object]]:
     from repro.kernels.dct2 import ops as dct2_ops
     from repro.kernels.decode_attention import ops as da_ops
     from repro.kernels.ei_update import ops as ei_ops
+    from repro.kernels.round_fused import ops as rf_ops
 
     out: List[Tuple[str, object]] = []
-    for mod in (ei_ops, dct2_ops, da_ops):
+    for mod in (ei_ops, dct2_ops, da_ops, rf_ops):
         out.extend(mod.staticcheck_entries())
     return out
