@@ -359,4 +359,19 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
     yield (f"serving,gddim_online_B{B},{nfe},{us_step:.0f},"
            f"{n_online / dt:.2f},0")
 
+    # ---- routed serving: the front-tier over N engine replicas ----
+    # The launch harness's canonical scenario (tools/launchgate.py), run
+    # in-process: a seeded Poisson trace routed over 2 replicas (one with
+    # a deterministic fault window, so health rerouting and backpressure
+    # requeues actually fire), each sub-trace drained by its own engine.
+    # The route-plan counters (requests_routed / requeues / health_probes
+    # / n_shed) are pure functions of (trace, config, seeds) and the
+    # perf guard gates them EXACTLY — the same numbers the multi-process
+    # CI harness harvests from spawned replicas.
+    from tools.launchgate import run_in_process
+    record, _, _ = run_in_process()
+    records.append(record)
+    yield (f"serving,{record['config']},{record['nfe']},"
+           f"{record['us_per_round']:.0f},{record['samples_per_s']:.2f},0")
+
     _write_json(records)

@@ -62,6 +62,17 @@ Two workloads ride the same scheduler/slot-table machinery:
    Every request is bitwise identical to a solo single-family engine run
    (tests/test_serve_engine.py).
 
+4. The wire-level request API and the router front-tier: every request
+   above is a `repro.serve.ServeRequest` (`Request` / `SampleRequest` are
+   thin aliases) — frozen, schema-versioned, and exactly JSON
+   round-trippable (`from_wire(to_wire(r)) == r`), which is what lets a
+   `Router` split an arrival trace over N engine replicas across process
+   boundaries with results bitwise identical to one engine
+   (docs/serving.md, "Multi-host serving and the router front-tier"):
+
+       router = Router([ReplicaSpec(index=0), ReplicaSpec(index=1)])
+       results, plan = router.serve(trace, [engine_a, engine_b])
+
 Both engines also take `mesh=` (repro.launch.mesh.make_local_mesh) to
 shard the slot batch over a data-parallel device mesh with bitwise-
 identical results — see docs/serving.md and tests/test_serve_mesh.py.
@@ -77,7 +88,9 @@ import jax
 
 from repro.configs import get_arch, get_diffusion
 from repro.models.registry import Arch
-from repro.serve import DiffusionEngine, Request, SampleRequest, TokenEngine
+from repro.serve import (Arrival, DiffusionEngine, ReplicaSpec, Request,
+                         Router, SampleRequest, ServeRequest, TokenEngine,
+                         TraceTraffic)
 
 
 def serve_tokens(arch_name: str) -> None:
@@ -159,11 +172,31 @@ def serve_families() -> None:
           f"compile={engine.compile_stats()}")
 
 
+def serve_routed() -> None:
+    print("== router front-tier: 2 engine replicas, wire-form requests")
+    spec = get_diffusion("cifar10-ddpm", reduced=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    # the wire form is the router's ingress: an exact JSON round-trip
+    req = ServeRequest(rid=0, workload="diffusion", seed=0, nfe=5)
+    assert ServeRequest.from_wire(req.to_wire()) == req
+    trace = TraceTraffic(
+        [Arrival(float(i), ServeRequest(rid=i, seed=i, nfe=5))
+         for i in range(6)])
+    engines = [DiffusionEngine(spec, params, batch_size=2, nfe=5)
+               for _ in range(2)]
+    router = Router([ReplicaSpec(index=i, batch=2) for i in range(2)])
+    results, plan = router.serve(trace, engines)
+    for a in plan.assignments:
+        print(f"  t={a['t']:.1f} req{a['rid']} -> replica {a['replica']}")
+    print(f"  {len(results)} served, counters={plan.counters}")
+
+
 def main():
     for arch in ("rwkv6-7b", "gemma3-1b"):
         serve_tokens(arch)
     serve_samples()
     serve_families()
+    serve_routed()
     return 0
 
 

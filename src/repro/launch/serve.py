@@ -41,6 +41,21 @@ TP/FSDP rules) — e.g. on a CPU host:
 
 and `--sync-every` to bound how many device-resident rounds run between
 host polls of the retire mask (see repro.serve.ServeLoop).
+
+Flags are grouped to mirror `repro.serve.ServeRequest` (serve/api.py):
+each --mix spec parses directly into `ServeRequest` field values, so the
+CLI surface and the wire surface are the same vocabulary.  `--replicas N`
+routes the request stream through the front-tier (`repro.serve.Router`)
+over N engine replicas instead of one engine — the routed results are
+bitwise-identical to the single-engine serve (see docs/serving.md,
+"Multi-host serving and the router front-tier"):
+
+        python -m repro.launch.serve --diffusion cifar10-ddpm --reduced \\
+            --requests 12 --batch 4 --replicas 2
+
+For the multi-process / multi-host version of the same fleet (spawned
+replica processes, readiness barriers, harvested counters, CI gates) see
+tools/launchgate.py and repro.distributed.multihost.
 """
 from __future__ import annotations
 
@@ -54,7 +69,8 @@ import jax
 from ..configs import get_arch, get_diffusion, ARCH_IDS, DIFFUSION_MODULES
 from ..core import SamplerConfig
 from ..models.registry import Arch
-from ..serve import DiffusionEngine, Request, SampleRequest, TokenEngine
+from ..serve import (DiffusionEngine, ReplicaSpec, Router, RouterConfig,
+                     ServeRequest, TokenEngine)
 from .mesh import make_serve_mesh
 
 
@@ -63,8 +79,10 @@ def parse_sampler_spec(spec: str) -> dict:
     'family=cld,nfe=50,q=2,corrector,lam=0.5,grid=uniform'.
 
     Bare flags ('corrector') mean True; 'lambda' is accepted for 'lam'.
-    Returns a kwargs dict for `SampleRequest`; `main()` validates the
-    merged `SamplerConfig` (defaults + spec) before any device work."""
+    Returns a kwargs dict of `ServeRequest` sampler-config fields (the
+    --mix vocabulary IS the wire vocabulary — serve/api.py); `main()`
+    validates the merged `SamplerConfig` (defaults + spec) before any
+    device work."""
     def parse_bool(v: str) -> bool:
         v = v.strip().lower()
         if v in ("", "1", "true", "yes", "on"):
@@ -110,15 +128,17 @@ def _serve_tokens(args) -> int:
     rng = np.random.default_rng(args.seed)
     requests = []
     for rid in range(args.requests):
-        req = Request(
-            rid=rid,
+        # requests are frozen (serve/api.py) — every field, including the
+        # encdec conditioning frames, is set at construction
+        frames = None
+        if spec.family == "encdec":
+            frames = rng.standard_normal(
+                (spec.frontend_ctx, arch.cfg.d_model)).astype(np.float32)
+        requests.append(ServeRequest(
+            rid=rid, workload="token",
             tokens=rng.integers(2, arch.cfg.vocab,
                                 size=args.prompt_len).astype(np.int32),
-            max_new=args.max_new)
-        if spec.family == "encdec":
-            req.frames = rng.standard_normal(
-                (spec.frontend_ctx, arch.cfg.d_model)).astype(np.float32)
-        requests.append(req)
+            max_new=args.max_new, frames=frames))
 
     engine = TokenEngine(arch, params, batch_size=args.batch,
                          max_len=args.max_len, mesh=make_serve_mesh(args.mesh),
@@ -160,14 +180,23 @@ def _serve_samples(args) -> int:
               for fam, spec in specs.items()}
     if len(specs) == 1:
         specs, params = next(iter(specs.values())), next(iter(params.values()))
-    engine = DiffusionEngine(specs, params, batch_size=args.batch,
-                             default_config=default,
-                             mesh=make_serve_mesh(args.mesh),
-                             sync_every=args.sync_every)
+
+    def build_engine():
+        return DiffusionEngine(specs, params, batch_size=args.batch,
+                               default_config=default,
+                               mesh=make_serve_mesh(args.mesh),
+                               sync_every=args.sync_every)
+
     requests = []
     for i in range(args.requests):
         kw = mix[i % len(mix)] if mix else {}
-        requests.append(SampleRequest(rid=i, seed=args.seed + i, **kw))
+        requests.append(ServeRequest(rid=i, workload="diffusion",
+                                     seed=args.seed + i, **kw))
+
+    if args.replicas > 1:
+        return _serve_routed(args, build_engine, requests, default)
+
+    engine = build_engine()
     t0 = time.time()
     results = engine.serve(requests)
     dt = time.time() - t0
@@ -189,52 +218,119 @@ def _serve_samples(args) -> int:
     return 0
 
 
+def _serve_routed(args, build_engine, requests, default) -> int:
+    """--replicas N: the in-process router fleet.  Deterministic arrival
+    times (request i at virtual time i), one warmed engine per replica,
+    the plan fully replayable from (requests, replica config, seeds)."""
+    from ..serve import Arrival, TraceTraffic
+
+    router = Router(
+        [ReplicaSpec(index=i, batch=args.batch)
+         for i in range(args.replicas)],
+        RouterConfig(default_nfe=default.nfe))
+    trace = TraceTraffic([Arrival(float(i), r)
+                          for i, r in enumerate(requests)])
+    engines = [build_engine() for _ in range(args.replicas)]
+    t0 = time.time()
+    results, plan = router.serve(trace, engines)
+    dt = time.time() - t0
+    sps = len(results) / max(dt, 1e-9)
+    per_replica = [len(s) for s in plan.sub_traces]
+    print(f"routed {len(results)} requests over {args.replicas} replicas "
+          f"in {dt:.1f}s ({per_replica} per replica, "
+          f"counters {plan.counters}, batch {args.batch}, "
+          f"{sps:.2f} samples/s)")
+    for a in plan.assignments[:6]:
+        print(f"  t={a['t']:.1f} req{a['rid']} -> replica {a['replica']}"
+              + (f" after {a['n_requeues']} requeues"
+                 if a["n_requeues"] else ""))
+    return 0
+
+
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS)
-    ap.add_argument("--diffusion", metavar="NAME[,NAME...]",
-                    help="diffusion config(s) to serve, from "
-                         f"{list(DIFFUSION_MODULES)}; a comma-separated "
-                         "list builds one multi-family engine (first entry "
-                         "= default family)")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--nfe", type=int, default=20,
-                    help="default sampler NFE (grid steps)")
-    ap.add_argument("--q", type=int, default=1,
-                    help="default multistep order (Eq. 19)")
-    ap.add_argument("--corrector", action="store_true",
-                    help="default: run the Eq. 45 corrector")
-    ap.add_argument("--lam", "--lambda", type=float, default=0.0,
-                    dest="lam", help="default stochasticity lambda (Eq. 22)")
-    ap.add_argument("--grid", choices=("quadratic", "uniform"),
-                    default="quadratic")
-    ap.add_argument("--mix", nargs="+", metavar="SPEC",
-                    help="per-request sampler configs to cycle through, "
-                         "e.g. --mix nfe=10 nfe=50,q=2,corrector "
-                         "nfe=20,lam=0.5 family=cld,nfe=8 (keys not named "
-                         "fall back to the defaults above; family= needs a "
-                         "multi-family --diffusion list)")
-    ap.add_argument("--mesh", default=None, metavar="SPEC",
-                    help="shard the engine over a (data, model) device mesh:"
-                         " 'data=2', 'data=2,model=1', '2x1', or 'auto' "
-                         "(all devices on the data axis).  Slot batch and "
-                         "caches shard over data; params follow the "
-                         "repo's TP/FSDP rules.  Default: single device")
-    ap.add_argument("--sync-every", type=int, default=8,
-                    help="max rounds between host polls of the done mask "
-                         "(R); the loop polls sooner when a retirement is "
-                         "provably near")
-    ap.add_argument("--seed", type=int, default=0)
+    ap = argparse.ArgumentParser(
+        description="Serving CLI over the repro.serve engines; request "
+                    "flags mirror the fields of repro.serve.ServeRequest "
+                    "(the wire-level request type, serve/api.py)")
+    g_model = ap.add_argument_group(
+        "model / engine", "what is being served, and the engine shape")
+    g_model.add_argument("--arch", choices=ARCH_IDS)
+    g_model.add_argument("--diffusion", metavar="NAME[,NAME...]",
+                         help="diffusion config(s) to serve, from "
+                              f"{list(DIFFUSION_MODULES)}; a comma-separated "
+                              "list builds one multi-family engine (first "
+                              "entry = default family)")
+    g_model.add_argument("--reduced", action="store_true")
+    g_model.add_argument("--batch", type=int, default=4)
+    g_model.add_argument("--max-len", type=int, default=64)
+
+    g_req = ap.add_argument_group(
+        "request stream (ServeRequest fields)",
+        "how many requests, and their non-sampler ServeRequest fields "
+        "(rid/seed are derived: rid=i, seed=--seed+i)")
+    g_req.add_argument("--requests", type=int, default=8)
+    g_req.add_argument("--prompt-len", type=int, default=16,
+                       help="token workload: synthetic `tokens` prompt "
+                            "length")
+    g_req.add_argument("--max-new", type=int, default=24,
+                       help="token workload: ServeRequest.max_new")
+    g_req.add_argument("--seed", type=int, default=0)
+
+    g_cfg = ap.add_argument_group(
+        "sampler config (ServeRequest sampler fields)",
+        "engine defaults for nfe/q/corrector/lam/grid; --mix overrides "
+        "them per request with the same key=value vocabulary")
+    g_cfg.add_argument("--nfe", type=int, default=20,
+                       help="default sampler NFE (grid steps)")
+    g_cfg.add_argument("--q", type=int, default=1,
+                       help="default multistep order (Eq. 19)")
+    g_cfg.add_argument("--corrector", action="store_true",
+                       help="default: run the Eq. 45 corrector")
+    g_cfg.add_argument("--lam", "--lambda", type=float, default=0.0,
+                       dest="lam",
+                       help="default stochasticity lambda (Eq. 22)")
+    g_cfg.add_argument("--grid", choices=("quadratic", "uniform"),
+                       default="quadratic")
+    g_cfg.add_argument("--mix", nargs="+", metavar="SPEC",
+                       help="per-request sampler configs to cycle through, "
+                            "e.g. --mix nfe=10 nfe=50,q=2,corrector "
+                            "nfe=20,lam=0.5 family=cld,nfe=8 — each spec "
+                            "is ServeRequest sampler fields as key=value "
+                            "(keys not named fall back to the defaults "
+                            "above; family= needs a multi-family "
+                            "--diffusion list)")
+
+    g_place = ap.add_argument_group(
+        "placement", "mesh sharding, host-poll pacing, and the router "
+                     "front-tier")
+    g_place.add_argument("--mesh", default=None, metavar="SPEC",
+                         help="shard the engine over a (data, model) device "
+                              "mesh: 'data=2', 'data=2,model=1', '2x1', or "
+                              "'auto' (all devices on the data axis).  Slot "
+                              "batch and caches shard over data; params "
+                              "follow the repo's TP/FSDP rules.  Default: "
+                              "single device")
+    g_place.add_argument("--sync-every", type=int, default=8,
+                         help="max rounds between host polls of the done "
+                              "mask (R); the loop polls sooner when a "
+                              "retirement is provably near")
+    g_place.add_argument("--replicas", type=int, default=1,
+                         help="route the stream over N in-process engine "
+                              "replicas via repro.serve.Router (diffusion "
+                              "only; bitwise-identical results to "
+                              "--replicas 1 — see docs/serving.md).  For "
+                              "spawned-process replicas see "
+                              "tools/launchgate.py")
     args = ap.parse_args(argv)
     if (args.arch is None) == (args.diffusion is None):
         ap.error("pass exactly one of --arch / --diffusion")
     if args.mix and args.diffusion is None:
         ap.error("--mix only applies to --diffusion serving")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1 and args.diffusion is None:
+        ap.error("--replicas routing currently applies to --diffusion "
+                 "serving")
     if args.diffusion:
         for n in args.diffusion.split(","):
             if n.strip() not in DIFFUSION_MODULES:

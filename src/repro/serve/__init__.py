@@ -40,30 +40,44 @@ host only paces the loop.
     as exact (K, K)-block x pooled-(D,)-diagonal factor pairs applied in
     the canonical (k, D) layout of `repro.kernels.ei_update`
 
+  * the wire-level request surface (api.py) — ONE frozen, schema-versioned
+    `ServeRequest` for both workloads with an exact JSON round-trip
+    (`from_wire(to_wire(r)) == r`; `Request`/`SampleRequest` are thin
+    aliases), so requests cross process boundaries without drift
+  * the router front-tier (router.py) — `Router` shards an arrival trace
+    over N `ReplicaSpec` engine replicas with deterministic health probes,
+    admission backpressure and an auditable route plan, all replayable
+    from (trace, config, seeds); `repro.distributed.multihost` +
+    tools/launchgate.py run the same plan as N spawned processes
+
 Both engines accept `mesh=` (see `repro.launch.mesh`) and then shard the
 slot batch over the mesh's data axes via the serve rules in
 `repro.distributed.sharding` — bitwise-identical outputs to the
-single-device engine.
+single-device engine.  Results are bitwise-identical again when the
+router splits the same trace over replicas — one invariant, three tiers.
 
 See `repro.launch.serve` for the CLI, `docs/serving.md` for the full API
 reference, and `examples/serve_batched.py` for a worked walkthrough.
 """
 from .slots import Slot, SlotTable
-from .scheduler import (DeadlineScheduler, Request, SampleRequest,
-                        Scheduler, urgency_key)
+from .api import WIRE_VERSION, Request, SampleRequest, ServeRequest
+from .scheduler import DeadlineScheduler, Scheduler, urgency_key
 from .loop import ServeLoop
 from .parking import ParkingTable, row_fetch, row_restore
 from .state import DiffusionState, TokenState
 from .traffic import (Arrival, RequestTiming, TraceTraffic, VirtualClock,
                       poisson_trace, serving_metrics)
 from .engine import TokenEngine, DiffusionEngine
+from .router import ReplicaSpec, Router, RouterConfig
 
 __all__ = [
-    "Slot", "SlotTable", "Request", "SampleRequest", "Scheduler",
-    "DeadlineScheduler", "urgency_key",
+    "Slot", "SlotTable",
+    "ServeRequest", "WIRE_VERSION", "Request", "SampleRequest",
+    "Scheduler", "DeadlineScheduler", "urgency_key",
     "ServeLoop", "TokenState", "DiffusionState",
     "ParkingTable", "row_fetch", "row_restore",
     "Arrival", "TraceTraffic", "VirtualClock", "poisson_trace",
     "RequestTiming", "serving_metrics",
     "TokenEngine", "DiffusionEngine",
+    "ReplicaSpec", "Router", "RouterConfig",
 ]

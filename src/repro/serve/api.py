@@ -1,0 +1,182 @@
+"""The unified, wire-level request surface: one `ServeRequest` for every
+workload the serving tier accepts.
+
+Before this module the request surface was three overlapping in-process
+dataclasses — `Request` (token decoding), `SampleRequest` (diffusion
+sampling, both scheduler.py) and the sampler-config fields duplicated from
+`repro.core.coeffs.SamplerConfig` — none of which could cross a process
+boundary.  The multi-host tier (distributed/multihost.py, serve/router.py,
+tools/launchgate.py) forces serialization, so the surface is now ONE
+frozen, versioned dataclass with an exact JSON round-trip:
+
+    req  = ServeRequest(rid=3, workload="diffusion", seed=3, nfe=20, q=2)
+    wire = req.to_wire()          # plain-JSON dict, schema-versioned
+    assert ServeRequest.from_wire(wire) == req     # exact, ndarrays included
+
+Design rules:
+
+  * **Frozen.**  A request is immutable after construction: engines,
+    schedulers, the parking table and the router all hold references to
+    the same object, and the online path re-admits parked requests — a
+    mutable request would let a resume observe different fields than the
+    original admission.  (`__post_init__` normalizes the two ndarray
+    fields to their canonical dtypes via `object.__setattr__`, the one
+    sanctioned write.)
+  * **Versioned wire form.**  `to_wire()` emits a dict of JSON scalars /
+    lists only (ndarrays become nested lists — exact for int32 tokens and
+    f32 frames, since every f32 is exactly representable as a Python
+    float) plus the `"v"` schema tag.  `from_wire()` rejects unknown
+    versions and unknown keys instead of guessing: a router fleet running
+    mixed schema versions must fail loudly at the boundary, not corrupt a
+    request mid-flight.  The router and launchgate harness speak ONLY
+    this form.
+  * **Workload is a field, not a type.**  `workload="token" | "diffusion"`
+    selects the engine family; `Request` / `SampleRequest` survive as
+    thin aliases (deprecated spelling, same fields, same semantics) so
+    existing call sites and `dataclasses.replace` keep working.  New code
+    should construct `ServeRequest` directly.
+  * **Value equality, array-aware.**  `==` compares field values with
+    `np.array_equal` on the ndarray fields (dataclass-generated equality
+    would raise on arrays), ignoring the alias class — a request that
+    round-trips the wire compares equal to the original whichever alias
+    built it.
+
+Sampler-config fields (`nfe`/`q`/`corrector`/`lam`/`grid`/`family`/
+`precision`) mirror `repro.core.coeffs.SamplerConfig`; `None` means "use
+the engine default", and the *merged* config is validated by the engine
+(`DiffusionEngine.config_of`) exactly as before — the request type does
+not second-guess the engine's menu.  `priority`/`deadline` ride along for
+the online path and never enter the sampler config (urgency changes when
+a sample is computed, not what — see scheduler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+# Bump when a field is added/renamed/retyped.  `from_wire` accepts exactly
+# this version: cross-version traffic is a deploy error, not a soft case.
+WIRE_VERSION = 1
+
+WORKLOADS = ("token", "diffusion")
+
+# ndarray fields and their canonical wire dtypes (the only non-scalar
+# fields; everything else is a JSON scalar or None)
+_ARRAY_FIELDS = {"tokens": np.int32, "frames": np.float32}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ServeRequest:
+    """One serving request — token decoding or gDDIM sampling — in the
+    form every tier speaks: engines in-process, the router and the
+    multi-host launch harness over the wire (`to_wire`/`from_wire`)."""
+
+    rid: int
+    workload: str = "diffusion"         # member of WORKLOADS
+
+    # --- seeding: the result is a pure function of (seed, merged config),
+    #     independent of admission order, neighbours, replica or host
+    seed: int = 0
+
+    # --- sampler config (diffusion; None = engine default) --------------
+    nfe: Optional[int] = None           # grid steps N
+    q: Optional[int] = None             # multistep order (Eq. 19)
+    corrector: Optional[bool] = None    # Eq. 45 / Alg. 1 corrector
+    lam: Optional[float] = None         # stochasticity lambda (Eq. 22)
+    grid: Optional[str] = None          # 'quadratic' | 'uniform'
+    family: Optional[str] = None        # SDE family ('vpsde'|'cld'|'bdm')
+    precision: Optional[str] = None     # score-net precision class
+                                        # ('f32'|'bf16'|'int8')
+
+    # --- token workload --------------------------------------------------
+    tokens: Optional[np.ndarray] = None  # (L,) int32 prompt
+    max_new: int = 16                    # decode budget incl. prefill token
+    frames: Optional[np.ndarray] = None  # (ctx, d_model) f32, encdec archs
+
+    # --- urgency (online path; never enters the sampler config) ---------
+    priority: int = 0                    # higher = more urgent
+    deadline: Optional[float] = None     # absolute virtual-clock time
+
+    def __post_init__(self):
+        if self.workload not in WORKLOADS:
+            raise ValueError(f"request {self.rid}: workload must be one of "
+                             f"{WORKLOADS}, got {self.workload!r}")
+        if self.workload == "token" and self.tokens is None:
+            raise ValueError(f"request {self.rid}: token workload needs "
+                             "a tokens prompt")
+        for name, dtype in _ARRAY_FIELDS.items():
+            val = getattr(self, name)
+            if val is not None:
+                object.__setattr__(
+                    self, name,
+                    np.asarray(val, dtype=dtype))  # staticcheck: disable=SC103 (construction-time dtype normalization of a host-side wire payload — never device data, never in the round loop)
+
+    # -- surface shared with the engines ----------------------------------
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.tokens))
+
+    # -- wire form ---------------------------------------------------------
+    def to_wire(self) -> Dict[str, Any]:
+        """Plain-JSON dict (scalars, lists, None) with the schema tag.
+        Exact: `from_wire(to_wire(r)) == r` for every constructible r."""
+        wire: Dict[str, Any] = {"v": WIRE_VERSION}
+        for f in dataclasses.fields(self):
+            val = getattr(self, f.name)
+            if isinstance(val, np.ndarray):
+                val = val.tolist()
+            wire[f.name] = val
+        return wire
+
+    @classmethod
+    def from_wire(cls, wire: Dict[str, Any]) -> "ServeRequest":
+        """Inverse of `to_wire`.  Rejects unknown schema versions and
+        unknown keys — the process boundary is where a fleet running
+        mixed code must fail, not deep inside an engine."""
+        version = wire.get("v")
+        if version != WIRE_VERSION:
+            raise ValueError(f"wire schema version {version!r} != "
+                             f"{WIRE_VERSION} (this build)")
+        names = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in wire.items() if k != "v"}
+        unknown = sorted(set(kw) - names)
+        if unknown:
+            raise ValueError(f"unknown wire fields {unknown}; known: "
+                             f"{sorted(names)}")
+        return cls(**kw)    # __post_init__ restores the ndarray dtypes
+
+    # -- value equality, array-aware ---------------------------------------
+    def __eq__(self, other: Any) -> bool:
+        if not isinstance(other, ServeRequest):
+            return NotImplemented
+        for f in dataclasses.fields(self):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            if f.name in _ARRAY_FIELDS:
+                if (a is None) != (b is None):
+                    return False
+                if a is not None and not np.array_equal(a, b):
+                    return False
+            elif a != b:
+                return False
+        return True
+
+    def __hash__(self) -> int:
+        return hash((self.rid, self.workload, self.seed))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Request(ServeRequest):
+    """Deprecated alias: a token-decoding `ServeRequest`.  Same fields,
+    `workload` defaults to 'token'; construct `ServeRequest` directly in
+    new code."""
+    workload: str = "token"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SampleRequest(ServeRequest):
+    """Deprecated alias: a diffusion-sampling `ServeRequest`.  Same
+    fields, `workload` defaults to 'diffusion'; construct `ServeRequest`
+    directly in new code."""
+    workload: str = "diffusion"

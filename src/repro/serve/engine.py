@@ -69,7 +69,8 @@ from ..sde.base import family_name
 from ..distributed import sharding as shd
 from .loop import ServeLoop, bucket_pow2
 from .parking import row_fetch, row_restore
-from .scheduler import Request, SampleRequest, Scheduler
+from .api import ServeRequest
+from .scheduler import Scheduler
 from .state import (DiffusionState, TokenState, diffusion_state_init,
                     token_state_init)
 
@@ -194,7 +195,8 @@ class TokenEngine(ServeLoop):
 
     Usage:
         engine = TokenEngine(arch, params, batch_size=8, max_len=256)
-        results = engine.serve([Request(rid=0, tokens=prompt, max_new=32), ...])
+        results = engine.serve([ServeRequest(rid=0, workload="token",
+                                   tokens=prompt, max_new=32), ...])
         # results[rid] -> np.ndarray of generated token ids
 
     The engine is persistent: repeated `serve()` calls reuse the allocated
@@ -309,7 +311,7 @@ class TokenEngine(ServeLoop):
         return stats
 
     # ---- ServeLoop hooks ----------------------------------------------------
-    def _validate(self, r: Request) -> None:
+    def _validate(self, r: ServeRequest) -> None:
         if r.prompt_len < 1:
             raise ValueError(f"request {r.rid}: empty prompt")
         if r.max_new < 1:
@@ -322,7 +324,7 @@ class TokenEngine(ServeLoop):
         if self._encode is not None and r.frames is None:
             raise ValueError(f"request {r.rid}: encdec arch needs frames")
 
-    def _admit_wave(self, group: List[Request], free: List[int]) -> None:
+    def _admit_wave(self, group: List[ServeRequest], free: List[int]) -> None:
         # prefill width-bucketed to the group's power-of-two size: a small
         # admission wave no longer pays full-batch prefill FLOPs
         L = group[0].prompt_len
@@ -416,7 +418,7 @@ class TokenEngine(ServeLoop):
             self.state = self._deactivate(self.state, i)
         return (state_row, cache_row, mem_row)
 
-    def _resume_slot(self, request: Request, shadow: dict, payload,
+    def _resume_slot(self, request: ServeRequest, shadow: dict, payload,
                      index: int) -> None:
         state_row, cache_row, mem_row = payload
         ids = jnp.asarray([index], np.int32)
@@ -671,7 +673,7 @@ class DiffusionEngine(ServeLoop):
                 + _cache_size(self._deactivate),
                 "resume": _cache_size(self._restore)}
 
-    def config_of(self, req: SampleRequest) -> SamplerConfig:
+    def config_of(self, req: ServeRequest) -> SamplerConfig:
         d = self.default_config
         pick = lambda v, dv: dv if v is None else v
         fam = pick(req.family, pick(d.family, self.cache.default_family))
@@ -684,14 +686,14 @@ class DiffusionEngine(ServeLoop):
             lam=pick(req.lam, d.lam), grid=pick(req.grid, d.grid),
             family=fam)
 
-    def precision_of(self, req: SampleRequest) -> str:
+    def precision_of(self, req: ServeRequest) -> str:
         """The request's score-net precision class (engine default when
         unset) — never part of the SamplerConfig: coefficients stay f32
         and bitwise at every precision (models/quantize docstring)."""
         return qtz.check_precision(
             self.precision if req.precision is None else req.precision)
 
-    def _class_of(self, req: SampleRequest):
+    def _class_of(self, req: ServeRequest):
         """The admission-wave cost class: (family, corrector, precision)."""
         cfg = self.config_of(req)
         return (cfg.family, cfg.corrector, self.precision_of(req))
@@ -732,14 +734,14 @@ class DiffusionEngine(ServeLoop):
             self.state = self.state._replace(hist=hist)
 
     # ---- ServeLoop hooks ----------------------------------------------------
-    def _validate(self, r: SampleRequest) -> None:
+    def _validate(self, r: ServeRequest) -> None:
         try:
             self.config_of(r)           # fail fast, before any device work
             self.precision_of(r)
         except ValueError as e:
             raise ValueError(f"request {r.rid}: {e}") from None
 
-    def _prepare(self, requests: List[SampleRequest]) -> None:
+    def _prepare(self, requests: List[ServeRequest]) -> None:
         """Register every request's config before anything is admitted, so
         the bank restacks (and, if the call introduces a bucket overflow,
         re-buckets) exactly once up front — a warmup call that covers the
@@ -749,7 +751,7 @@ class DiffusionEngine(ServeLoop):
         for r in requests:
             self.cache.index_of(self.config_of(r))
 
-    def _admit_wave(self, group: List[SampleRequest], free: List[int]) -> None:
+    def _admit_wave(self, group: List[ServeRequest], free: List[int]) -> None:
         # register the whole wave's configs before touching the bank, so it
         # restacks at most once per wave (not once per new config; mid-call
         # this is a no-op after `_prepare`, but direct scheduler submits —
@@ -826,7 +828,7 @@ class DiffusionEngine(ServeLoop):
             self.state = self._deactivate(self.state, i)  # parked active=True
         return row
 
-    def _resume_slot(self, request: SampleRequest, shadow: dict, payload,
+    def _resume_slot(self, request: ServeRequest, shadow: dict, payload,
                      index: int) -> None:
         qb = self.state.hist.shape[1]
         hist = payload.hist

@@ -1,4 +1,11 @@
-"""Request types + FIFO scheduler with head-of-line shape grouping.
+"""FIFO scheduler with head-of-line shape grouping (+ the online
+urgency-ordered variant).
+
+The request types live in `repro.serve.api`: one frozen, wire-versioned
+`ServeRequest` covers both workloads, and the historical `Request` /
+`SampleRequest` spellings are thin aliases of it (re-exported here so old
+imports keep working).  The schedulers are agnostic to all of it — they
+order opaque request objects by group key and urgency fields only.
 
 The scheduler is workload-agnostic: the same instance admits token-decoding
 requests (grouped by prompt length so one `make_prefill_step` call serves
@@ -30,59 +37,10 @@ urgent request wait for an unrelated class run to drain).
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 from typing import Any, Callable, List, Optional
 
-import numpy as np
-
-
-@dataclasses.dataclass
-class Request:
-    """One token-decoding request: greedy-decode up to `max_new` tokens
-    (counting the one emitted by prefill) or until `eos`."""
-    rid: int
-    tokens: np.ndarray                  # (L,) int32 prompt
-    max_new: int = 16
-    frames: Optional[np.ndarray] = None  # (ctx, d_model) f32, encdec archs
-    priority: int = 0                   # higher = more urgent (online path)
-    deadline: Optional[float] = None    # absolute virtual-clock time
-
-    @property
-    def prompt_len(self) -> int:
-        return int(len(self.tokens))
-
-
-@dataclasses.dataclass
-class SampleRequest:
-    """One diffusion sampling request: one gDDIM sample, seeded so the
-    result is a pure function of `seed` and the sampler config
-    (independent of admission order and of neighbouring slots).
-
-    The sampler-config fields select a member of gDDIM's sampler family
-    (see `repro.core.coeffs.SamplerConfig`); `None` means "use the
-    engine's default".  One `DiffusionEngine` serves any mix of configs —
-    and, when built multi-family, any mix of SDE *families* — in the same
-    batch: a 10-NFE VPSDE preview can share slots with a 50-NFE CLD
-    predictor-corrector render and a BDM sample."""
-    rid: int
-    seed: int = 0
-    nfe: Optional[int] = None           # grid steps N
-    q: Optional[int] = None             # multistep order (Eq. 19)
-    corrector: Optional[bool] = None    # Eq. 45 / Alg. 1 corrector
-    lam: Optional[float] = None         # stochasticity lambda (Eq. 22)
-    grid: Optional[str] = None          # 'quadratic' | 'uniform'
-    family: Optional[str] = None        # SDE family ('vpsde'|'cld'|'bdm')
-    precision: Optional[str] = None     # score-net precision class
-                                        # ('f32'|'bf16'|'int8'); bitwise at
-                                        # the state-update layer, bounded-
-                                        # error at the net (models/quantize)
-    priority: int = 0                   # higher = more urgent (online path)
-    deadline: Optional[float] = None    # absolute virtual-clock time
-
-    # deadline/priority never enter the sampler config: a preempted render
-    # resumes on restored state, so urgency changes *when* a sample is
-    # computed, not *what* (bitwise, tests/test_serve_online.py)
+from .api import Request, SampleRequest, ServeRequest  # noqa: F401  # staticcheck: disable=SC001 (re-export: historical import site for the request types)
 
 
 class Scheduler:

@@ -1,0 +1,34 @@
+"""Fixture: host syncs under the router-tier hot-path registration.
+
+No module pragma comment in this file on purpose — test_staticcheck.py
+lints this source under the *registered path suffixes*
+(src/repro/serve/api.py, src/repro/serve/router.py), so the thing under
+test is the LintConfig registration itself: the router's plan/assign loop
+runs per arrival and must stay pure host Python, and the request type's
+wire path must not smuggle device fetches into admission.  Linted at its
+real path this file is silent.
+"""
+import jax
+import numpy as np
+
+
+def harvest_result_inline(slot_output):
+    return np.asarray(slot_output)  # SC103 fires here
+
+
+def wait_for_replica(state):
+    return state.block_until_ready()  # SC103 fires here
+
+
+def peek_done_count(done_mask):
+    return done_mask.item()  # SC103 fires here
+
+
+def drain_to_host(tree):
+    return jax.device_get(tree)  # SC103 fires here
+
+
+def route_key(wire, n):
+    # NOT a violation: pure host arithmetic on wire scalars — exactly what
+    # the router loop is allowed to do per arrival
+    return (int(wire["rid"]) % n, float("0.5"), len(wire))

@@ -1,0 +1,169 @@
+"""Tier: serve-router — the deterministic front-tier (serve/router.py).
+
+Three contracts:
+
+  * **Replayable plans.**  `Router.plan` is a pure function of (trace,
+    replicas, config): two plans from the same inputs agree on every
+    assignment — replica, timestamp, requeue count — and every counter.
+  * **Health + backpressure semantics.**  Fault windows steer traffic off
+    a replica *at probe granularity*; a full fleet requeues arrivals
+    `requeue_delay` apart up to `max_requeues`, then sheds, with every
+    hop in the audited log.
+  * **Bitwise solo == routed.**  Two replica engines serving the router's
+    sub-traces produce samples byte-identical to ONE engine serving the
+    whole trace — the serving stack's purity invariant (result = f(seed,
+    config)) surviving the fleet split.  Mirrors tests/test_serve_mesh.py
+    at the tier above the mesh.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_diffusion
+from repro.serve import (Arrival, DiffusionEngine, ReplicaSpec, Router,
+                        RouterConfig, SampleRequest, ServeRequest,
+                        TraceTraffic, VirtualClock, poisson_trace)
+
+
+def _trace(n=8, rate=0.8, seed=23, nfe=None):
+    return poisson_trace(
+        lambda i, rng: SampleRequest(rid=i, seed=i, nfe=nfe),
+        n=n, rate=rate, seed=seed)
+
+
+def _router(n=2, **cfg_kw):
+    cfg = dict(max_queue_depth=3, probe_every=4.0, requeue_delay=1.0,
+               max_requeues=8, default_nfe=10)
+    cfg.update(cfg_kw)
+    return Router([ReplicaSpec(index=i) for i in range(n)],
+                  RouterConfig(**cfg))
+
+
+class TestPlanDeterminism:
+    def test_replay_is_identical(self):
+        p1 = _router().plan(_trace())
+        p2 = _router().plan(_trace())
+        assert p1.assignments == p2.assignments   # replica AND timestamps
+        assert p1.sub_traces == p2.sub_traces     # wire dicts compare ==
+        assert p1.counters == p2.counters
+        assert p1.shed == p2.shed
+
+    def test_every_arrival_accounted(self):
+        plan = _router().plan(_trace(n=12))
+        assert plan.counters["requests_routed"] + plan.counters["n_shed"] \
+            == 12
+        routed = sorted(a["rid"] for a in plan.assignments)
+        shed = sorted(s["rid"] for s in plan.shed)
+        assert sorted(routed + shed) == list(range(12))
+
+    def test_wire_only_ingress(self):
+        # sub-traces hold plain wire dicts; replica_trace restores requests
+        router = _router()
+        plan = router.plan(_trace(n=6))
+        for sub in plan.sub_traces:
+            for _, wire in sub:
+                assert isinstance(wire, dict) and "v" in wire
+        restored = [a.request
+                    for i in range(2)
+                    for a in router.replica_trace(plan, i).due(float("inf"))]
+        assert all(isinstance(r, ServeRequest) for r in restored)
+        assert sorted(r.rid for r in restored) \
+            == sorted(a["rid"] for a in plan.assignments)
+
+    def test_health_probe_count_is_golden(self):
+        # arrivals at t=0 and t=9 with probe_every=4: ticks at 0,4,8 fire
+        # before the last event -> 3 ticks x 2 replicas = 6 probes, plus
+        # the t=12 tick fires only if an event lands at/after it (none)
+        trace = TraceTraffic([Arrival(0.0, SampleRequest(rid=0, seed=0)),
+                              Arrival(9.0, SampleRequest(rid=1, seed=1))])
+        plan = _router(probe_every=4.0).plan(trace)
+        assert plan.counters["health_probes"] == 6
+
+
+class TestHealthAndBackpressure:
+    def test_fault_window_steers_traffic(self):
+        # replica 1 down for the whole trace window: everything that its
+        # probes cover lands on replica 0
+        router = Router([ReplicaSpec(index=0),
+                         ReplicaSpec(index=1, fault_windows=((0.0, 1e9),))],
+                        RouterConfig(max_queue_depth=8, default_nfe=10))
+        plan = router.plan(_trace(n=6))
+        assert plan.counters["n_shed"] == 0
+        assert all(a["replica"] == 0 for a in plan.assignments)
+
+    def test_health_is_probe_granular(self):
+        # the fault begins at t=1 but the next probe is at t=4: the t=2
+        # arrival still routes to the (stale-healthy) replica — the real
+        # front-tier failure mode, deterministically reproduced
+        router = Router([ReplicaSpec(index=0, fault_windows=((1.0, 1e9),))],
+                        RouterConfig(probe_every=4.0, max_requeues=0,
+                                     default_nfe=10))
+        trace = TraceTraffic([Arrival(2.0, SampleRequest(rid=0, seed=0)),
+                              Arrival(5.0, SampleRequest(rid=1, seed=1))])
+        plan = router.plan(trace)
+        assert [a["rid"] for a in plan.assignments] == [0]
+        assert [s["rid"] for s in plan.shed] == [1]
+
+    def test_backpressure_requeues_then_assigns(self):
+        # one replica, depth 1, cost 10: the second t=0 arrival requeues
+        # once per virtual unit until the first drains at t=10
+        router = Router([ReplicaSpec(index=0)],
+                        RouterConfig(max_queue_depth=1, requeue_delay=1.0,
+                                     max_requeues=20, default_nfe=10))
+        trace = TraceTraffic([Arrival(0.0, SampleRequest(rid=0, seed=0)),
+                              Arrival(0.0, SampleRequest(rid=1, seed=1))])
+        plan = router.plan(trace)
+        assert plan.counters["n_shed"] == 0
+        assert plan.counters["requeues"] == 10
+        second = plan.assignments[1]
+        assert (second["rid"], second["t"], second["n_requeues"]) \
+            == (1, 10.0, 10)
+
+    def test_exhausted_requeues_shed_with_audit(self):
+        router = Router([ReplicaSpec(index=0)],
+                        RouterConfig(max_queue_depth=1, requeue_delay=1.0,
+                                     max_requeues=2, default_nfe=10))
+        trace = TraceTraffic([Arrival(0.0, SampleRequest(rid=0, seed=0)),
+                              Arrival(0.0, SampleRequest(rid=1, seed=1))])
+        plan = router.plan(trace)
+        assert plan.counters == {"requests_routed": 1, "requeues": 2,
+                                 "health_probes": 1, "n_shed": 1}
+        assert plan.shed == [{"t": 2.0, "rid": 1, "n_requeues": 2}]
+
+    def test_least_loaded_lowest_index_tiebreak(self):
+        plan = _router(n=3).plan(TraceTraffic(
+            [Arrival(0.0, SampleRequest(rid=i, seed=i)) for i in range(3)]))
+        assert [a["replica"] for a in plan.assignments] == [0, 1, 2]
+
+
+@pytest.mark.slow
+class TestRoutedBitwiseEqualsSolo:
+    """2 replica engines serving the router's sub-traces == 1 engine
+    serving the whole trace, byte for byte, zero recompiles after warmup.
+    """
+
+    def _engine(self, spec, params):
+        engine = DiffusionEngine(spec, params, batch_size=4, nfe=10)
+        engine.serve([SampleRequest(rid=-1, seed=0)])   # warm the bucket
+        return engine
+
+    def test_solo_equals_routed(self):
+        spec = get_diffusion("cifar10-ddpm", reduced=True)
+        params = spec.init(jax.random.PRNGKey(0))
+        trace = _trace(n=8, nfe=10)
+
+        solo = self._engine(spec, params)
+        want = solo.serve_stream(_trace(n=8, nfe=10), clock=VirtualClock())
+
+        engines = [self._engine(spec, params) for _ in range(2)]
+        warm = [sum(e.compile_stats().values()) for e in engines]
+        results, plan = _router().serve(trace, engines)
+
+        assert plan.counters["n_shed"] == 0
+        assert sorted(results) == sorted(want)
+        for rid in want:
+            a, b = np.asarray(results[rid]), np.asarray(want[rid])
+            assert a.tobytes() == b.tobytes(), f"rid {rid} diverged"
+        for e, w in zip(engines, warm):
+            assert sum(e.compile_stats().values()) == w, \
+                "replica recompiled after warmup"

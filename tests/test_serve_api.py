@@ -1,0 +1,182 @@
+"""Tier: serve-api — the unified wire-level request surface (serve/api.py).
+
+The contract under test is the one the router and the multi-host launch
+harness stand on: `from_wire(to_wire(r)) == r` EXACTLY for every
+constructible request (hypothesis sweeps the space when available), the
+wire form is plain JSON (a real json.dumps/loads round-trip preserves
+it), version/unknown-key traffic fails loudly at the boundary, requests
+are frozen, and the historical `Request`/`SampleRequest` spellings are
+true aliases — same fields, same wire form, value-equal across spellings.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.serve import Request, SampleRequest, ServeRequest, WIRE_VERSION
+from repro.serve.api import WORKLOADS
+
+
+def _diffusion_req(**kw):
+    base = dict(rid=1, workload="diffusion", seed=7, nfe=20, q=2,
+                corrector=True, lam=0.5, grid="uniform", family="cld",
+                priority=2, deadline=40.0)
+    base.update(kw)
+    return ServeRequest(**base)
+
+
+def _token_req(**kw):
+    base = dict(rid=2, workload="token", seed=0,
+                tokens=np.array([3, 1, 4, 1, 5], dtype=np.int32),
+                max_new=8,
+                frames=np.arange(6, dtype=np.float32).reshape(2, 3))
+    base.update(kw)
+    return ServeRequest(**base)
+
+
+class TestWireRoundTrip:
+    @pytest.mark.parametrize("req", [
+        ServeRequest(rid=0),
+        _diffusion_req(),
+        _token_req(),
+        _token_req(frames=None, deadline=None),
+        SampleRequest(rid=3, seed=9, nfe=10),
+        Request(rid=4, tokens=np.zeros(3, np.int32), max_new=1),
+    ])
+    def test_exact_round_trip(self, req):
+        wire = req.to_wire()
+        assert ServeRequest.from_wire(wire) == req
+
+    def test_wire_is_plain_json(self):
+        # the dict must survive a REAL serialize/parse — this is the form
+        # the router writes to disk and launchgate ships across processes
+        wire = _token_req().to_wire()
+        back = json.loads(json.dumps(wire))
+        req = ServeRequest.from_wire(back)
+        assert req == _token_req()
+        assert req.tokens.dtype == np.int32
+        assert req.frames.dtype == np.float32
+
+    def test_wire_carries_schema_version(self):
+        assert _diffusion_req().to_wire()["v"] == WIRE_VERSION
+
+    def test_unknown_version_rejected(self):
+        wire = _diffusion_req().to_wire()
+        wire["v"] = WIRE_VERSION + 1
+        with pytest.raises(ValueError, match="schema version"):
+            ServeRequest.from_wire(wire)
+        wire.pop("v")
+        with pytest.raises(ValueError, match="schema version"):
+            ServeRequest.from_wire(wire)
+
+    def test_unknown_key_rejected(self):
+        wire = _diffusion_req().to_wire()
+        wire["negative_prompt"] = "blurry"
+        with pytest.raises(ValueError, match="negative_prompt"):
+            ServeRequest.from_wire(wire)
+
+
+class TestRequestSemantics:
+    def test_frozen(self):
+        req = _diffusion_req()
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            req.seed = 99
+
+    def test_replace_still_works(self):
+        # the online tests build config variants with dataclasses.replace;
+        # the alias subclasses must keep that working
+        req = SampleRequest(rid=0, seed=0, nfe=10)
+        assert dataclasses.replace(req, nfe=20).nfe == 20
+
+    def test_workload_validated(self):
+        with pytest.raises(ValueError, match="workload"):
+            ServeRequest(rid=0, workload="video")
+
+    def test_token_workload_needs_tokens(self):
+        with pytest.raises(ValueError, match="tokens"):
+            ServeRequest(rid=0, workload="token")
+
+    def test_array_fields_normalized(self):
+        req = ServeRequest(rid=0, workload="token",
+                           tokens=[1, 2, 3], frames=[[0.5, 1.5]])
+        assert req.tokens.dtype == np.int32
+        assert req.frames.dtype == np.float32
+        assert req.prompt_len == 3
+
+    def test_equality_is_value_and_alias_blind(self):
+        a = SampleRequest(rid=5, seed=1, nfe=10)
+        b = ServeRequest(rid=5, workload="diffusion", seed=1, nfe=10)
+        assert a == b and b == a
+        assert a != dataclasses.replace(b, seed=2)
+        assert _token_req() != _token_req(
+            tokens=np.array([9, 9, 9], np.int32))
+
+    def test_aliases_share_fields_and_wire_form(self):
+        names = [f.name for f in dataclasses.fields(ServeRequest)]
+        for alias, workload in ((Request, "token"),
+                                (SampleRequest, "diffusion")):
+            assert [f.name for f in dataclasses.fields(alias)] == names
+            assert alias.__dataclass_fields__["workload"].default == workload
+        tok = Request(rid=0, tokens=np.ones(2, np.int32))
+        assert ServeRequest.from_wire(tok.to_wire()) == tok
+        assert tok.workload == "token"
+
+
+class TestWireRoundTripProperty:
+    """Hypothesis sweep of the constructible request space (skipped where
+    hypothesis isn't installed — CI's differential job has it)."""
+
+    def test_round_trip_property(self):
+        hyp = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+
+        opt_int = st.none() | st.integers(min_value=1, max_value=1000)
+        samplers = st.fixed_dictionaries({
+            "nfe": opt_int, "q": st.none() | st.integers(1, 4),
+            "corrector": st.none() | st.booleans(),
+            "lam": st.none() | st.floats(0.0, 1.0,
+                                         allow_nan=False, width=32),
+            "grid": st.none() | st.sampled_from(["quadratic", "uniform"]),
+            "family": st.none() | st.sampled_from(["vpsde", "cld", "bdm"]),
+            "precision": st.none() | st.sampled_from(["f32", "bf16",
+                                                      "int8"]),
+        })
+
+        @st.composite
+        def requests(draw):
+            workload = draw(st.sampled_from(WORKLOADS))
+            kw = dict(rid=draw(st.integers(-10, 10**6)),
+                      workload=workload,
+                      seed=draw(st.integers(0, 2**31 - 1)),
+                      priority=draw(st.integers(-3, 3)),
+                      deadline=draw(st.none() | st.floats(
+                          0.0, 1e6, allow_nan=False, width=32)),
+                      max_new=draw(st.integers(1, 64)),
+                      **draw(samplers))
+            if workload == "token" or draw(st.booleans()):
+                n = draw(st.integers(1, 8))
+                kw["tokens"] = np.asarray(
+                    draw(st.lists(st.integers(0, 2**31 - 1),
+                                  min_size=n, max_size=n)), np.int32)
+            if draw(st.booleans()):
+                kw["frames"] = np.asarray(
+                    draw(st.lists(st.lists(
+                        st.floats(-1e6, 1e6, allow_nan=False, width=32),
+                        min_size=3, max_size=3),
+                        min_size=2, max_size=2)), np.float32)
+            return ServeRequest(**kw)
+
+        @hyp.settings(max_examples=200, deadline=None)
+        @hyp.given(requests())
+        def prop(req):
+            wire = json.loads(json.dumps(req.to_wire()))
+            back = ServeRequest.from_wire(wire)
+            assert back == req
+            # exactness, not tolerance: arrays bitwise, scalars identical
+            if req.tokens is not None:
+                assert back.tokens.tobytes() == req.tokens.tobytes()
+            if req.frames is not None:
+                assert back.frames.tobytes() == req.frames.tobytes()
+
+        prop()

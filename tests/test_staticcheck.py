@@ -117,6 +117,59 @@ class TestOnlineHotPathRegistration:
         assert "staticcheck: disable=SC103" in src
 
 
+class TestRouterHotPathRegistration:
+    """The router-tier modules (serve/api.py, serve/router.py) are
+    registered hot paths: the router's per-arrival plan loop and the
+    request type's wire path must stay pure host Python, so SC103 fires
+    for sources linted under those *paths* with no pragma in the file,
+    and api.py's one construction-time dtype normalization carries an
+    allowlist justification."""
+
+    NEW_SUFFIXES = ("src/repro/serve/api.py",
+                    "src/repro/serve/router.py")
+
+    def test_suffixes_registered_in_default_config(self):
+        from tools.staticcheck.astlint import DEFAULT_CONFIG
+        for suffix in self.NEW_SUFFIXES:
+            assert suffix in DEFAULT_CONFIG.hot_path_suffixes, suffix
+
+    @pytest.mark.parametrize("suffix", NEW_SUFFIXES)
+    def test_sc103_fires_by_path_at_tagged_lines(self, suffix):
+        src = (FIXTURES / "router_hot_path.py").read_text()
+        assert "staticcheck: module=" not in src  # path does the scoping
+        hits = {(f.rule, f.line) for f in lint_source(src, suffix)}
+        want = {("SC103", ln) for ln in _tagged_lines("router_hot_path.py")}
+        assert want, "fixture lost its tags"
+        assert hits == want, (
+            f"{suffix}: expected exactly {sorted(want)}, got {sorted(hits)}")
+
+    def test_same_source_is_silent_off_the_hot_path(self):
+        src = (FIXTURES / "router_hot_path.py").read_text()
+        assert lint_source(src, "src/repro/eval/metrics.py") == []
+
+    def test_sc105_fires_for_replica_state_donation_misuse(self):
+        # a routed replica done wrong: slot state donated into the jitted
+        # round, then the *stale* reference read for the result harvest
+        bad = ("import jax\n"
+               "def round_and_harvest(state, coeffs):\n"
+               "    step = jax.jit(lambda s, c: s, donate_argnums=(0,))\n"
+               "    new = step(state, coeffs)\n"
+               "    return state.outputs\n")
+        for suffix in self.NEW_SUFFIXES:
+            rules = {(f.rule, f.line) for f in lint_source(bad, suffix)}
+            assert ("SC105", 5) in rules, (suffix, rules)
+
+    def test_repo_api_normalization_is_allowlisted_with_reason(self):
+        src = (REPO / "src" / "repro" / "serve" / "api.py").read_text()
+        assert "staticcheck: disable=SC103" in src
+
+    def test_repo_router_and_api_lint_clean_as_hot_paths(self):
+        findings = lint_paths(
+            [str(REPO / "src" / "repro" / "serve" / "api.py"),
+             str(REPO / "src" / "repro" / "serve" / "router.py")])
+        assert findings == [], "\n".join(f.text() for f in findings)
+
+
 class TestAllowlist:
     def test_disable_with_reason_suppresses(self):
         src = ("import jax\n"

@@ -54,7 +54,9 @@ BOUNDED = ("recompiles_after_warmup", "rounds", "dispatches", "polls",
            "n_prefills", "bank_bytes", "bank_restack_rows")
 EXACT = ("n_requests", "n_configs", "batch", "nfe", "bank_bytes_dense",
          "n_variants", "n_preemptions", "n_resumes", "deadline_misses",
-         "kernel_launches_per_round", "round_bytes_moved")
+         "kernel_launches_per_round", "round_bytes_moved",
+         "requests_routed", "requeues", "health_probes", "n_shed",
+         "n_replicas")
 
 
 def _records(path: str) -> Dict[str, dict]:

@@ -63,6 +63,8 @@ class LintConfig:
         "src/repro/serve/engine.py",
         "src/repro/serve/traffic.py",
         "src/repro/serve/parking.py",
+        "src/repro/serve/api.py",
+        "src/repro/serve/router.py",
         "src/repro/launch/steps.py",
     )
     coeff_critical_suffixes: Tuple[str, ...] = (
