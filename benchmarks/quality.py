@@ -1,0 +1,149 @@
+"""Sample quality vs NFE per sampler *algorithm* (gddim | gmm | accel).
+
+The ROADMAP's "quality per eval" item, made a tracked number: each
+`SamplerConfig.algorithm` is sampled through the PRODUCTION coefficient
+path — `CoeffCache` -> `FactoredBank` -> `round_update_ref` (the fused
+round's bitwise reference, kernels/round_fused/ref.py) — against the
+EXACT mixture score (`repro.sde.mixture.ExactScore`), so the quality
+differences measured here come from the update rules alone, not from a
+score model.  Everything is seeded and runs lockstep on CPU, so every
+row is deterministic at a fixed platform:
+
+  * `sw2`           — sliced 2-Wasserstein to fresh ground-truth draws
+                      (the repo's FID stand-in; lower is better)
+  * `mode_recovery` — fraction of samples within 5 sigma of a mode
+  * `moment_err`    — relative error of the sample mean + covariance
+                      against ground-truth draws (the "score-moment"
+                      proxy: the GMM reverse kernel is moment-matched,
+                      so this column is where a broken `GMM_SCALE` /
+                      `GMM_C` pair would show up first)
+
+`quality_records(...)` returns the `gddim_alg_quality_*` records that
+`benchmarks/serving.py` merges into `BENCH_serving.json` (perf-guard
+gates `sw2_milli` / `n_samples` / `nfe` exactly); `quality_table()` is
+the standalone CSV entry registered in `benchmarks/run.py`.
+
+FID hook (GPU): on real hardware, replace the mixture oracle with a
+trained checkpoint's `DiffusionSpec.eps_model` and feed the same
+per-algorithm sample loop into an FID evaluator (e.g. clean-fid) over
+50k samples — the sampling loop below is shape-agnostic, only the
+`eps_fn` and the metric change.  The paper's reference points: CLD
+FID 2.26 @ 50 NFE, 2.86 @ 27 (Tab. 3).  Not run on this container
+(no GPU, no FID dependency baked in).
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import CoeffCache, SamplerConfig
+from repro.core.coeffs import _K_fn
+from repro.kernels.ei_update.ops import pad_channels
+from repro.kernels.round_fused.ref import round_update_ref
+from repro.sde import VPSDE, ExactScore
+
+from .common import mode_recovery, paper_mixture, sliced_w2
+
+NOISE_SALT = 0x5EED          # DiffusionEngine._NOISE_SALT
+
+
+def _sample_via_bank(sde, oracle, cache: CoeffCache, cfg: SamplerConfig,
+                     n: int, seed: int) -> np.ndarray:
+    """n samples of `cfg` through the factored bank + the fused round's
+    reference update — the engine's per-round data flow, run lockstep
+    (every slot at the same config and step, so the exact score can be
+    evaluated from the grid's precomputed mode constants)."""
+    ci = cache.index_of(cfg)
+    bank = cache.factored_bank
+    co = cache.get(cfg)
+    ts = np.asarray(co.ts)
+    data_shape = cache.data_shape
+    state_shape = sde.state_shape(data_shape)
+    kf = sde.packed_k
+    K = cache.k_max
+    D = int(np.prod(state_shape)) // kf
+    Qb = bank.pC_blk.shape[2]
+    N = cfg.nfe
+
+    eps_fn, _ = oracle.eps_fn_for_grid(ts, _K_fn(sde, "R"))
+
+    base = jax.random.PRNGKey(seed)
+    u = pad_channels(
+        sde.canonicalize(sde.prior_sample(base, n, data_shape)), K)
+    hist = jnp.zeros((n, Qb, K, D), jnp.float32)
+    keys = jnp.broadcast_to(jax.random.fold_in(base, NOISE_SALT), (n, 2))
+    k = jnp.zeros((n,), jnp.int32)
+    active = jnp.ones((n,), bool)
+    cfg_v = jnp.full((n,), ci, jnp.int32)
+    zeros = jnp.zeros((n,), jnp.int32)
+
+    for step in range(N):
+        kc = jnp.full((n,), step, jnp.int32)
+        x_state = sde.decanonicalize(u[:, :kf], data_shape)
+        eps_c = sde.canonicalize(eps_fn(x_state, N - step))
+        u, hist, k, active = round_update_ref(
+            u, hist, k, kc, cfg_v, zeros, zeros, keys, active, bank,
+            eps_c, sde=sde, state_shape=state_shape, kf=kf)
+    return np.asarray(
+        sde.project_data(sde.decanonicalize(u[:, :kf], data_shape)))
+
+
+def _moment_err(x: np.ndarray, truth: np.ndarray) -> float:
+    """Relative mean + covariance error against ground-truth draws."""
+    x = np.asarray(x, np.float64).reshape(len(x), -1)
+    t = np.asarray(truth, np.float64).reshape(len(truth), -1)
+    dm = np.linalg.norm(x.mean(0) - t.mean(0))
+    dc = np.linalg.norm(np.cov(x.T) - np.cov(t.T))
+    scale = np.linalg.norm(t.mean(0)) + np.linalg.norm(np.cov(t.T))
+    return float((dm + dc) / max(scale, 1e-12))
+
+
+def quality_records(nfes: Tuple[int, ...] = (5, 10, 20),
+                    n_samples: int = 512, seed: int = 0
+                    ) -> Tuple[List[dict], List[str]]:
+    """(json_records, csv_rows) for the per-algorithm quality sweep on the
+    VPSDE ring mixture.  Deterministic configs compare gddim vs accel;
+    stochastic (lam=0.5) configs compare gddim vs gmm — each pair shares
+    its Stage-I quadrature, so the rows isolate the update rule."""
+    sde = VPSDE()
+    mix = paper_mixture()
+    oracle = ExactScore(sde, mix)
+    cache = CoeffCache({"vpsde": sde}, data_shape=mix.data_shape)
+    truth = np.asarray(mix.sample(jax.random.PRNGKey(seed + 1), n_samples))
+
+    menu = [("gddim", 0.0), ("accel", 0.0),
+            ("gddim", 0.5), ("gmm", 0.5)]
+    records: List[dict] = []
+    rows: List[str] = []
+    for nfe in nfes:
+        for alg, lam in menu:
+            cfg = SamplerConfig(nfe=nfe, lam=lam, algorithm=alg)
+            x = _sample_via_bank(sde, oracle, cache, cfg, n_samples, seed)
+            sw2 = sliced_w2(x, truth)
+            rec = {
+                "workload": "quality",
+                "config": f"gddim_alg_quality_{alg}"
+                          f"{'_lam' if lam else ''}_nfe{nfe}",
+                "algorithm": alg, "nfe": nfe, "lam": lam,
+                "n_samples": n_samples,
+                "sw2": round(sw2, 4),
+                # integer-quantized copy for the EXACT perf-guard gate
+                # (full-precision floats would be fragile to format churn)
+                "sw2_milli": int(round(sw2 * 1000)),
+                "mode_recovery": round(mode_recovery(x, mix), 3),
+                "moment_err": round(_moment_err(x, truth), 4),
+            }
+            records.append(rec)
+            rows.append(f"serving,{rec['config']},{nfe},0,"
+                        f"{rec['sw2']:.4f},{rec['mode_recovery']:.3f}")
+    return records, rows
+
+
+def quality_table() -> Iterator[str]:
+    """Standalone CSV entry (`python -m benchmarks.run quality`) — same
+    sweep, no JSON side effects (the serving table owns the JSON)."""
+    _, rows = quality_records()
+    yield from rows

@@ -8,6 +8,7 @@ Output CSV: table,config,nfe,us_per_call,sw2,mode_recovery
 """
 import sys
 
+from . import quality
 from . import tables
 from . import serving
 
@@ -20,6 +21,7 @@ ALL = {
     "fig1": tables.fig1_eps_constancy,
     "kernels": tables.kernel_micro,
     "serving": serving.serving_throughput,
+    "quality": quality.quality_table,
 }
 
 

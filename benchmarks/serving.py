@@ -10,9 +10,13 @@ for serving rows the quality columns carry throughput instead:
                      "gddim_mix_B<batch>" for heterogeneous sampler-config
                      traffic (a mix of NFE budgets, multistep orders, the
                      corrector and a stochastic lambda through ONE engine),
-                     and "gddim_fam_mix_B<batch>" for heterogeneous *SDE
+                     "gddim_fam_mix_B<batch>" for heterogeneous *SDE
                      family* traffic (VPSDE + CLD + BDM co-resident on one
-                     engine, each with its own score net);
+                     engine, each with its own score net), and
+                     "gddim_alg_mix_B<batch>" for heterogeneous *sampler
+                     algorithm* traffic (gddim + gmm + accel requests
+                     co-resident — one compile bucket, the algorithm id
+                     masked per slot inside the fused round);
                      nfe = the default sampler NFE, us_per_call = us per
                      serving round, sw2 column = samples/s
 
@@ -47,11 +51,19 @@ baseline — timing-free, so the guard is stable on shared runners:
     arrival->admission->completion timestamps in `request_log`, and its
     `n_preemptions` / `n_resumes` / `deadline_misses` counters are exact
     functions of the trace seed, gated EXACT by the guard
-  * `variant_hashes` / `n_variants` — on the fam_mix record: the jaxpr
-    structural hash of every (family, corrector) round-step compile bucket
+  * `variant_hashes` / `n_variants` — on the fam_mix and alg_mix records:
+    the jaxpr structural hash of every (family, corrector) round-step
+    compile bucket
     (computed by `tools.staticcheck.jaxprcheck.jaxpr_hash`, the same hash
     the `--sanitize` layer prints).  The guard gates the bucket count
     exactly; the hashes let a reviewer see *which* bucket a PR re-traced.
+    On the alg_mix record `n_variants == 1` IS the tentpole claim: a
+    gddim/gmm/accel mix never leaves the single warmed bucket.
+  * the `gddim_alg_quality_*` records (from `benchmarks/quality.py`)
+    track sample quality vs NFE per algorithm on the exact-score mixture
+    oracle; their `sw2_milli` / `n_samples` / `nfe` fields are gated
+    EXACTLY (seeded lockstep CPU sampling — deterministic at a fixed
+    platform).
 
 Reduced CPU configs: the numbers are for *relative* tracking (batch scaling,
 homogeneous vs mixed traffic, regression against the per-request loop), not
@@ -283,6 +295,59 @@ def serving_throughput(batches=(1, 4, 8), n_requests=16, prompt_len=16,
     })
     yield (f"serving,gddim_fam_mix_B{B},{nfe},{us_step:.0f},"
            f"{n_fam_requests / dt:.2f},0")
+
+    # ---- mixed-algorithm gDDIM: gddim + gmm + accel on ONE engine ----
+    # The algorithm axis rides the fused round's int lane like the family
+    # id, so every algorithm mix shares the SAME (family, corrector,
+    # precision) compile bucket: n_variants stays 1 and
+    # recompiles_after_warmup stays 0 — both gated.
+    alg_mix = [dict(algorithm="gddim"),
+               dict(algorithm="accel"),
+               dict(algorithm="gmm", lam=0.5),
+               dict(algorithm="gddim", lam=0.5)]
+    B = 4
+    n_alg_requests = 8
+    engine = DiffusionEngine(spec, params, batch_size=B, nfe=nfe)
+    step_calls = {}
+    engine._steps = {(fam, prec): _recording(fam, prec, fn)
+                     for (fam, prec), fn in engine._steps.items()}
+    engine.serve([SampleRequest(rid=-1 - i, seed=0, **kw)
+                  for i, kw in enumerate(alg_mix)])          # warmup
+    warm_stats = _stats_total(engine)
+    s0, r0, p0 = engine.n_steps, engine.n_rounds, engine.n_polls
+    t0 = time.perf_counter()
+    engine.serve([SampleRequest(rid=i, seed=i, **alg_mix[i % len(alg_mix)])
+                  for i in range(n_alg_requests)])
+    dt = time.perf_counter() - t0
+    rounds = max(engine.n_rounds - r0, 1)
+    us_step = 1e6 * dt / rounds
+    variant_hashes = {k: jaxpr_hash(fn.trace(*a, **kw).jaxpr)
+                      for k, (fn, a, kw) in sorted(step_calls.items())}
+    records.append({
+        "workload": "diffusion",
+        "config": f"gddim_alg_mix_B{B}", "batch": B, "nfe": nfe,
+        "variant_hashes": variant_hashes,
+        "n_variants": len(variant_hashes),
+        "traffic": "mixed-algorithm",
+        "algorithms": sorted({kw.get("algorithm", "gddim")
+                              for kw in alg_mix}),
+        "us_per_round": round(us_step, 1),
+        "samples_per_s": round(n_alg_requests / dt, 3),
+        "rounds": rounds, "dispatches": engine.n_steps - s0,
+        "polls": engine.n_polls - p0,
+        "recompiles_after_warmup": _stats_total(engine) - warm_stats,
+        "n_requests": n_alg_requests,
+        "n_configs": len(engine.cache),
+        **_bank_counters(engine.cache),
+    })
+    yield (f"serving,gddim_alg_mix_B{B},{nfe},{us_step:.0f},"
+           f"{n_alg_requests / dt:.2f},0")
+
+    # ---- sample quality vs NFE per algorithm (benchmarks/quality.py) ----
+    from .quality import quality_records
+    q_records, q_rows = quality_records()
+    records.extend(q_records)
+    yield from q_rows
 
     # ---- coefficient-bank residency at the paper's data shape ----
     rec = _bank_residency_record(nfe)

@@ -2,7 +2,10 @@
 from .coeffs import (SamplerCoeffs, SamplerConfig, CoeffBank, CoeffCache,
                      FactoredBank, factor_coeff,
                      build_sampler_coeffs, bucket_size, time_grid,
-                     ddim_closed_form_check)
+                     ddim_closed_form_check,
+                     ALGORITHMS, ALG_GDDIM, ALG_GMM, ALG_ACCEL,
+                     GMM_RHO, GMM_SCALE, GMM_C, GMM_SALT,
+                     effective_q, algorithm_coeff_stacks)
 from .gddim import (sample_gddim, sample_gddim_stochastic, sample_em,
                     sample_heun, sample_ancestral_bdm, sample_rk45_np)
 
@@ -10,6 +13,9 @@ __all__ = [
     "SamplerCoeffs", "SamplerConfig", "CoeffBank", "CoeffCache",
     "FactoredBank", "factor_coeff",
     "build_sampler_coeffs", "bucket_size", "time_grid", "ddim_closed_form_check",
+    "ALGORITHMS", "ALG_GDDIM", "ALG_GMM", "ALG_ACCEL",
+    "GMM_RHO", "GMM_SCALE", "GMM_C", "GMM_SALT",
+    "effective_q", "algorithm_coeff_stacks",
     "sample_gddim", "sample_gddim_stochastic", "sample_em", "sample_heun",
     "sample_ancestral_bdm", "sample_rk45_np",
 ]

@@ -49,6 +49,9 @@ class SamplerCoeffs(NamedTuple):
     R_invT: jnp.ndarray        # (N+1, *coeff) R_{t_i}^{-T} (score <-> eps conversion)
     Sigma: jnp.ndarray         # (N+1, *coeff)
     lam: float = 0.0
+    pM: jnp.ndarray = None     # (N, *coeff)  first-moment EI quadrature
+                               #   int ei_core(t_{i-1}, tau) (tau - t_i) dtau
+                               #   — the accel correction's building block
 
 
 def time_grid(sde: LinearSDE, n_steps: int, kind: str = "quadratic") -> np.ndarray:
@@ -99,7 +102,7 @@ def build_sampler_coeffs(
         return 0.5 * ops.mul(ops.mul(sde.Psi_np(t_end, tau), sde.G2_np(tau)), KinvT(tau))
 
     coeff_shape = np.shape(np.asarray(ops.eye()))
-    psi, pC, cC = [], [], []
+    psi, pC, cC, pM = [], [], [], []
     psi_hat, B, P_chol = [], [], []
 
     # generator of the lambda-family SDE (Eq. 51): F_hat = F + (1+lam^2)/2 G2 Sigma^{-1}
@@ -121,6 +124,14 @@ def build_sampler_coeffs(
             row_p[j] = solve.quad_coeff(
                 lambda tau: ei_core(t_im1, tau) * ell(tau), t_i, t_im1, quad_points)
         pC.append(row_p)
+
+        # ---- first moment of the EI kernel about t_i (accel correction):
+        #      pM = int ei_core(t_{i-1}, tau) (tau - t_i) dtau.  Always
+        #      computed (cheap, one more quadrature) so every cached
+        #      Stage-I result can serve any algorithm= choice.
+        pM.append(solve.quad_coeff(
+            lambda tau: ei_core(t_im1, tau) * (tau - t_i), t_i, t_im1,
+            quad_points))
 
         # ---- corrector coefficients (Eq. 46), nodes t_{i-1}, t_i, .., t_{i+q_cur-2}
         q_corr = min(q, N - i + 2)
@@ -181,6 +192,7 @@ def build_sampler_coeffs(
         R_invT=f32(RinvT_stack),
         Sigma=f32(Sig_stack),
         lam=float(lam),
+        pM=f32(np.stack(pM)),
     )
 
 
@@ -205,6 +217,91 @@ def bucket_size(n: int, minimum: int) -> int:
     return b
 
 
+# ---------------------------------------------------------------------------
+# The sampler-algorithm axis: per-request update rules beyond gDDIM.
+# ---------------------------------------------------------------------------
+# Every algorithm is, at serving time, a transform of the Stage-I stacks
+# into different FactoredBank coefficient rows (plus, for 'gmm', a
+# different in-step noise law) — the bank layout, the compiled step and
+# the (family, corrector, precision) variant classes are untouched, so
+# mixed-algorithm batches serve with zero recompiles after warmup.
+#
+#   gddim  the paper's update family (Eqs. 19/22/45) — the identity
+#          transform.
+#   gmm    Gabbur's moment-matched GMM reverse kernel (arXiv:2311.04938):
+#          the Eq. 22 Gaussian innovation is replaced by a K=2 symmetric
+#          per-coordinate mixture with the SAME first two moments —
+#          noise' = sqrt(1 - rho^2) (z + c s), z ~ N(0,1),
+#          s = +-1 Rademacher, c = rho / sqrt(1 - rho^2), so
+#          E[noise'] = 0 and Var[noise'] = (1-rho^2)(1+c^2) = 1 exactly.
+#          The sqrt(1-rho^2) lands in the P_chol rows (host, f64); the
+#          (z + c s) part is the per-slot noise transform keyed by
+#          GMM_SALT.  Requires lam > 0 (it reshapes the injected noise).
+#   accel  Li et al.'s provably-accelerated sampler (arXiv:2403.03852):
+#          a half-damped backward-difference correction of the eps slope,
+#          eps(tau) ~ eps_i + (tau - t_i)(eps_i - eps_{i+1})/(t_i - t_{i+1}),
+#          taken at half weight.  Its exact EI quadrature is the first
+#          moment pM = int ei_core (tau - t_i) dtau (SamplerCoeffs.pM),
+#          landing as one extra per-step coefficient row: with
+#          delta = t_i - t_{i+1}, slot0 += pM/(2 delta), slot1 = -pM/(2 delta)
+#          (first step has no history — plain single-step row).  Requires
+#          q == 1 / lam == 0 / corrector off; consumes 2 history slots.
+ALGORITHMS = ("gddim", "gmm", "accel")
+ALG_GDDIM, ALG_GMM, ALG_ACCEL = 0, 1, 2
+
+GMM_RHO = 0.5                                  # mixture separation rho
+GMM_SCALE = float(np.sqrt(1.0 - GMM_RHO * GMM_RHO))   # f64, host-side
+GMM_C = np.float32(GMM_RHO / np.sqrt(1.0 - GMM_RHO * GMM_RHO))
+GMM_SALT = 0x6A66                              # second-stream fold ('jf')
+
+
+def effective_q(cfg: "SamplerConfig") -> int:
+    """History slots the device step actually consumes for `cfg`: the
+    accel correction spends one extra slot on the previous step's eps
+    (cfg.q stays 1 — the request surface's order knob is untouched)."""
+    return 2 if cfg.algorithm == "accel" else cfg.q
+
+
+def algorithm_coeff_stacks(co: SamplerCoeffs, cfg: "SamplerConfig",
+                           coeff_shape: Tuple[int, ...]
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-algorithm transform of the Stage-I stacks into the rows the
+    bank actually stores: float64 (pC, cC, P_chol) shaped
+    (N, q_eff, *coeff) / (N, q_eff, *coeff) / (N, *coeff).
+
+    This is THE coefficient generator of the algorithm axis — shared by
+    `CoeffCache._factor_rows` and the dense differential oracle
+    (tests/dense_reference.py) so the two stay transform-for-transform
+    identical, keeping factored == dense bitwise after the f32 casts.
+    """
+    N, q, qe = cfg.nfe, cfg.q, effective_q(cfg)
+    pC = np.asarray(co.pC, np.float64)
+    cC = np.asarray(co.cC, np.float64)
+    P = np.asarray(co.P_chol, np.float64)
+    if cfg.algorithm == "gddim":
+        return pC, cC, P
+    if cfg.algorithm == "gmm":
+        # moment matching: the mixture draw (z + c s) has variance
+        # 1 + c^2 = 1/(1 - rho^2); scaling its Cholesky rows by
+        # sqrt(1 - rho^2) restores Var = P exactly (see GMM_SCALE)
+        return pC, cC, GMM_SCALE * P
+    if cfg.algorithm == "accel":
+        ts = np.asarray(co.ts, np.float64)
+        pM = np.asarray(co.pM, np.float64)
+        out = np.zeros((N, qe) + coeff_shape, np.float64)
+        out[:, 0] = pC[:, 0]          # k = 0 (i = N): no history yet
+        for k in range(1, N):
+            i = N - k
+            delta = float(ts[i] - ts[i + 1])     # t_i - t_{i+1} (< 0)
+            corr = 0.5 * pM[k] / delta
+            out[k, 0] = pC[k, 0] + corr
+            out[k, 1] = -corr
+        cc = np.zeros((N, qe) + coeff_shape, np.float64)
+        cc[:, :q] = cC
+        return out, cc, P
+    raise ValueError(f"unknown algorithm {cfg.algorithm!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class SamplerConfig:
     """One point in gDDIM's sampler family (the per-request surface).
@@ -223,6 +320,11 @@ class SamplerConfig:
                families).  None means "the engine/cache default family";
                the name itself is validated where families are known
                (`CoeffCache.resolve`)
+    algorithm  sampler update rule ('gddim' | 'gmm' | 'accel', see the
+               `ALGORITHMS` block above).  'gmm' reshapes the injected
+               noise so it requires lam > 0; 'accel' is a deterministic
+               single-step correction so it requires q == 1, lam == 0,
+               corrector off
     """
     nfe: int
     q: int = 1
@@ -230,6 +332,7 @@ class SamplerConfig:
     lam: float = 0.0
     grid: str = "quadratic"
     family: Optional[str] = None
+    algorithm: str = "gddim"
 
     def __post_init__(self):
         if self.nfe < 1:
@@ -244,6 +347,18 @@ class SamplerConfig:
                 "q must be 1 and corrector off")
         if self.grid not in ("quadratic", "uniform"):
             raise ValueError(f"unknown grid kind {self.grid!r}")
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {self.algorithm!r}; "
+                             f"choose from {ALGORITHMS}")
+        if self.algorithm == "gmm" and self.lam <= 0.0:
+            raise ValueError(
+                "algorithm='gmm' reshapes the injected Eq. 22 noise, so "
+                "it needs a stochastic config (lam > 0)")
+        if self.algorithm == "accel" and (
+                self.q != 1 or self.lam > 0.0 or self.corrector):
+            raise ValueError(
+                "algorithm='accel' is a deterministic single-step "
+                "correction: q must be 1, lam 0, corrector off")
 
 
 class CoeffBank(NamedTuple):
@@ -363,6 +478,10 @@ class FactoredBank(NamedTuple):
       stochastic   (C,) bool           lam > 0 (selects the Eq. 22 update)
       corrector    (C,) bool           Eq. 45 corrector enabled
       fam          (C,) int32          family index of each config row
+      alg          (C,) int32          algorithm id of each config row
+                                       (index into `ALGORITHMS`; selects
+                                       the per-slot noise law and keys
+                                       the per-step PRNG stream)
 
     Deterministic configs (lam = 0) store *zero* B/P_chol factors: the
     Eq. 22 branch is masked off for them in the serve step, so the zero
@@ -388,6 +507,7 @@ class FactoredBank(NamedTuple):
     stochastic: jnp.ndarray
     corrector: jnp.ndarray
     fam: jnp.ndarray
+    alg: jnp.ndarray
 
     @property
     def shape_key(self) -> Tuple[int, int, int, int, int, int]:
@@ -414,7 +534,7 @@ class FactoredBank(NamedTuple):
         coeff = Cb * Nb * (3 + 2 * Qb) * K * K * D * 4
         meta = (self.t_cur.nbytes + self.t_nxt.nbytes + self.n_steps.nbytes
                 + self.stochastic.nbytes + self.corrector.nbytes
-                + self.fam.nbytes)
+                + self.fam.nbytes + self.alg.nbytes)
         return coeff + meta
 
     def materialize(self, kind: str, c: int, k: int,
@@ -541,12 +661,14 @@ class CoeffCache:
     def key_of(self, cfg: SamplerConfig) -> tuple:
         """Full config key (the bank-slot identity)."""
         return (self.resolve(cfg), cfg.grid, cfg.nfe, cfg.q,
-                cfg.corrector, cfg.lam)
+                cfg.corrector, cfg.lam, cfg.algorithm)
 
     def _coeff_key(self, cfg: SamplerConfig) -> tuple:
         """Stage-I memo key: `build_sampler_coeffs` always computes both
-        predictor and corrector rows, so the corrector toggle shares one
-        coefficient computation."""
+        predictor and corrector rows (and the accel first moment pM), so
+        the corrector and algorithm toggles share one coefficient
+        computation — the algorithm axis is a *transform* of the shared
+        Stage-I result (`algorithm_coeff_stacks`), not a new quadrature."""
         return (self.resolve(cfg), cfg.grid, cfg.nfe, cfg.q, cfg.lam)
 
     def __len__(self) -> int:
@@ -599,7 +721,8 @@ class CoeffCache:
                              "(call index_of first)")
         Cb = bucket_size(len(self._configs), C_BUCKET_MIN)
         Nb = bucket_size(max(c.nfe for c in self._configs), N_BUCKET_MIN)
-        Qb = bucket_size(max(c.q for c in self._configs), Q_BUCKET_MIN)
+        Qb = bucket_size(max(effective_q(c) for c in self._configs),
+                         Q_BUCKET_MIN)
         return Cb, Nb, Qb
 
     def _bank_rows(self):
@@ -608,6 +731,13 @@ class CoeffCache:
             yield c, cfg, self.get(cfg)
 
     def _build_bank(self) -> CoeffBank:
+        for cfg in self._configs:
+            if cfg.algorithm != "gddim":
+                raise ValueError(
+                    "the family-native CoeffBank predates the algorithm "
+                    "axis ('gmm' needs the per-slot noise transform only "
+                    "the factored-bank step implements); use "
+                    "`factored_bank` for algorithm= configs")
         coeff_shape = np.shape(np.asarray(self.sde.ops.eye()))
         Cb, Nb, Qb = self._bucket_shapes()
 
@@ -676,7 +806,9 @@ class CoeffCache:
         co = self.get(cfg)
         name = self.resolve(cfg)
         ops = self.sdes[name].ops
-        K, N, q = self.k_max, cfg.nfe, cfg.q
+        coeff_shape = np.shape(np.asarray(ops.eye()))
+        K, N, q = self.k_max, cfg.nfe, effective_q(cfg)
+        pC_alg, cC_alg, P_alg = algorithm_coeff_stacks(co, cfg, coeff_shape)
 
         def rows(stack, n_lead):
             """Factor a stacked f64 coeff array into (blk f32, di i32)."""
@@ -689,11 +821,11 @@ class CoeffCache:
             return blk, di
 
         psi_blk, psi_di = rows(np.asarray(co.psi, np.float64), (N,))
-        pC_blk, pC_di = rows(np.asarray(co.pC, np.float64), (N, q))
-        cC_blk, cC_di = rows(np.asarray(co.cC, np.float64), (N, q))
+        pC_blk, pC_di = rows(pC_alg, (N, q))
+        cC_blk, cC_di = rows(cC_alg, (N, q))
         if cfg.lam > 0.0:
             B_blk, B_di = rows(np.asarray(co.B, np.float64), (N,))
-            P_blk, P_di = rows(np.asarray(co.P_chol, np.float64), (N,))
+            P_blk, P_di = rows(P_alg, (N,))
         else:
             # Eq. 22 branch is masked off for deterministic configs: zero
             # factors are observationally exact and keep freq-diagonal
@@ -729,11 +861,14 @@ class CoeffCache:
             n_steps=np.ones((Cb,), np.int32),
             stochastic=np.zeros((Cb,), bool),
             corrector=np.zeros((Cb,), bool),
-            fam=np.zeros((Cb,), np.int32))
+            fam=np.zeros((Cb,), np.int32),
+            alg=np.zeros((Cb,), np.int32))
 
     def _write_factored_row(self, H: Dict[str, np.ndarray], c: int,
                             cfg: SamplerConfig, row: dict) -> None:
-        N, q = cfg.nfe, cfg.q
+        # q from the memoized row itself: the accel transform widens the
+        # stored rows to effective_q(cfg) slots while cfg.q stays 1
+        N, q = cfg.nfe, row["pC_blk"].shape[1]
         H["t_cur"][c, :N] = row["t_cur"]
         H["t_cur"][c, N:] = row["t_cur"][-1]
         H["t_nxt"][c, :N] = row["t_nxt"]
@@ -748,6 +883,7 @@ class CoeffCache:
         H["stochastic"][c] = cfg.lam > 0.0
         H["corrector"][c] = cfg.corrector
         H["fam"][c] = self.fam_index(self.resolve(cfg))
+        H["alg"][c] = ALGORITHMS.index(cfg.algorithm)
 
     @property
     def factored_bank(self) -> FactoredBank:
@@ -794,7 +930,8 @@ class CoeffCache:
             P_chol_blk=f32(H["P_chol_blk"]), P_chol_di=i32(H["P_chol_di"]),
             diag=f32(pool), n_steps=i32(H["n_steps"]),
             stochastic=jnp.asarray(H["stochastic"]),
-            corrector=jnp.asarray(H["corrector"]), fam=i32(H["fam"]))
+            corrector=jnp.asarray(H["corrector"]), fam=i32(H["fam"]),
+            alg=i32(H["alg"]))
         return self._factored
 
 

@@ -24,8 +24,11 @@ Bitwise discipline: every factor apply reassembles the dense coefficient
 per term — `(blk[c, c2] * diag) * z[c2]`, left-associated sum — which is
 the exact multiply-reduce graph of `apply_factored_ref`, and the noise
 path replicates jax's threefry2x32 / fold_in / uniform->erf_inv normal
-bit-for-bit (verified against `jax.random.normal(fold_in(key, k), .)`
-across seeds, folds and odd sizes).  In interpret mode the kernel is
+bit-for-bit (verified against
+`jax.random.normal(fold_in(fold_in(key, alg), k), .)` across seeds, folds
+and odd sizes; the 'gmm' Rademacher stream reads sign(normal) off the
+uniform stage of a second GMM_SALT-folded draw — exact, erf_inv being odd
+and monotone).  In interpret mode the kernel is
 bitwise equal to `ref.round_update_ref`; on TPU metal the guarantee is
 tight-tolerance (tests/test_kernels.py).
 
@@ -43,14 +46,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.coeffs import ALG_GMM, GMM_C, GMM_SALT
+
 Array = jax.Array
 
 # coefficient slots in the stacked (B, C, kf, kf) SMEM block-factor array
 _PSI, _B, _P = 0, 1, 2
 _N_FIXED = 3                       # pC_j at _N_FIXED + j; cC_j after the pCs
 
-# per-slot int32 SMEM scalar row: [kc, k, n_steps, mine, stoch, use_c, active]
-N_INTS = 7
+# per-slot int32 SMEM scalar row:
+# [kc, k, n_steps, mine, stoch, use_c, active, alg]
+N_INTS = 8
 
 _U32 = jnp.uint32
 _TF_MAGIC = np.uint32(0x1BD11BDA)
@@ -114,6 +120,25 @@ def _normal_row(fk0, fk1, f, n: int):
     return _bits_to_normal(jnp.where(f < half, o0, o1))
 
 
+def _sign_row(gk0, gk1, f, n: int):
+    """sign(normal) for the same counter layout as `_normal_row`, without
+    the erf_inv: the normal is sqrt(2) * erf_inv(un) with erf_inv odd and
+    strictly monotone (erf_inv(0) = 0), so its sign IS the sign of the
+    centered uniform `un` — bitwise the sign the ref chain reads off
+    `jax.random.normal`.  Drives the Rademacher component of the 'gmm'
+    mixture draw (core/coeffs ALGORITHMS block)."""
+    half = (n + 1) // 2
+    i0 = jnp.where(f < half, f, f - half)
+    x1i = i0 + half
+    o0, o1 = _threefry2x32(gk0, gk1, i0.astype(_U32),
+                           jnp.where(x1i < n, x1i, 0).astype(_U32))
+    bits = jnp.where(f < half, o0, o1)
+    fb = (bits >> 9) | np.uint32(0x3F800000)
+    fl = jax.lax.bitcast_convert_type(fb, jnp.float32) - np.float32(1.0)
+    un = jnp.maximum(_NORM_LO, fl * _NORM_SCALE + _NORM_LO)
+    return jnp.where(un >= 0, np.float32(1.0), np.float32(-1.0))
+
+
 def _make_round_kernel(*, kf: int, K: int, Qb: int, D: int, n: int,
                        block_d: int, with_corrector: bool, gen_noise: bool):
     def kernel(ints_ref, keys_ref, blks_ref, dis_ref, pool_ref,
@@ -134,6 +159,7 @@ def _make_round_kernel(*, kf: int, K: int, Qb: int, D: int, n: int,
         stoch = ints_ref[0, 4] != 0
         use_c = ints_ref[0, 5] != 0
         act = ints_ref[0, 6]
+        alg = ints_ref[0, 7]
 
         u_rows = [u_ref[0, c] for c in range(K)]            # (bd,) each
         eps_rows = [eps_ref[0, c] for c in range(kf)]
@@ -168,12 +194,25 @@ def _make_round_kernel(*, kf: int, K: int, Qb: int, D: int, n: int,
             u_pred = [a + b for a, b in zip(u_pred, tj)]
 
         if gen_noise:
-            fk0, fk1 = _fold_in(keys_ref[0, 0], keys_ref[0, 1],
-                                kc.astype(_U32))
+            # the ref chain's fold order: key -> alg -> kc (draw_step_noise)
+            ak0, ak1 = _fold_in(keys_ref[0, 0], keys_ref[0, 1],
+                                alg.astype(_U32))
+            fk0, fk1 = _fold_in(ak0, ak1, kc.astype(_U32))
             lanes = jax.lax.broadcasted_iota(jnp.int32, (1, block_d), 1)[0]
             d_abs = pl.program_id(1) * block_d + lanes
             noise_rows = [_normal_row(fk0, fk1, c * D + d_abs, n)
                           for c in range(kf)]
+            # 'gmm' Rademacher stream (second fold, GMM_SALT): computed
+            # unconditionally (one extra threefry + compare per tile, no
+            # transcendental) and selected per slot — keeps the launch
+            # branch-free across mixed-algorithm batches
+            gk0, gk1 = _fold_in(fk0, fk1,
+                                jnp.asarray(GMM_SALT, _U32))
+            sign_rows = [_sign_row(gk0, gk1, c * D + d_abs, n)
+                         for c in range(kf)]
+            is_gmm = alg == ALG_GMM
+            noise_rows = [jnp.where(is_gmm, z + GMM_C * s, z)
+                          for z, s in zip(noise_rows, sign_rows)]
         else:
             noise_rows = [noise_ref[0, c] for c in range(kf)]
 
@@ -257,7 +296,8 @@ def round_fused(ints, keys, blks, dis, pool, u, hist, eps_c,
                 block_d: int = 2048, interpret: bool = False):
     """One fused launch for the whole post-score-eval round commit.
 
-    ints (B, N_INTS) int32 [kc, k, n_steps, mine, stoch, use_c, active];
+    ints (B, N_INTS) int32 [kc, k, n_steps, mine, stoch, use_c, active,
+    alg];
     keys (B, 2) uint32; blks (B, C, kf, kf) stacked block factors (see
     module docstring for slot order); dis (B, C) int32 diag-pool ids;
     pool (Pb, D); u (B, K, D); hist (B, Qb, K, D); eps_c/eps_n_c/noise_c

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import N_INTS, round_fused, round_predict as _predict_pallas
-from .ref import round_predict_ref, round_update_ref
+from .ref import draw_step_noise, round_predict_ref, round_update_ref
 
 Array = jax.Array
 
@@ -69,13 +69,12 @@ def _stage_factors(bank, cfg, kc, kf: int, with_corrector: bool,
     return jnp.concatenate(parts_b, axis=1), jnp.concatenate(parts_i, axis=1)
 
 
-def _draw_noise_c(sde, keys, kc, state_shape, dtype):
-    """The stitched chain's Eq. 22 noise draw, canonicalized — used when
-    the family's canonicalize is not a reshape (kernel can't draw it)."""
-    noise = jax.vmap(
-        lambda key, kk: sde.noise_like(jax.random.fold_in(key, kk),
-                                       state_shape, dtype))(keys, kc)
-    return sde.canonicalize(noise)
+def _draw_noise_c(sde, keys, kc, alg, state_shape, dtype):
+    """The stitched chain's algorithm-aware Eq. 22 noise draw
+    (ref.draw_step_noise), canonicalized — used when the family's
+    canonicalize is not a reshape (kernel can't draw it)."""
+    return sde.canonicalize(
+        draw_step_noise(sde, keys, kc, alg, state_shape, dtype))
 
 
 def round_predict(u, hist, kc, cfg, bank, eps_c, *, kf: int,
@@ -114,7 +113,8 @@ def round_update(u, hist, k, kc, cfg, fam, prec, keys, active, bank, eps_c,
     gen_noise = bool(getattr(sde, "canonical_noise_is_reshape", True))
     noise_c = None
     if not gen_noise:
-        noise_c = _draw_noise_c(sde, keys, kc, state_shape, u.dtype)
+        noise_c = _draw_noise_c(sde, keys, kc, bank.alg[cfg], state_shape,
+                                u.dtype)
 
     mine = active & (fam == fam_index) & (prec == prec_index)
     use_c = (bank.corrector[cfg] & (kc < bank.n_steps[cfg] - 1)) \
@@ -122,7 +122,8 @@ def round_update(u, hist, k, kc, cfg, fam, prec, keys, active, bank, eps_c,
     ints = jnp.stack(
         [kc, k, bank.n_steps[cfg], mine.astype(jnp.int32),
          bank.stochastic[cfg].astype(jnp.int32), use_c.astype(jnp.int32),
-         active.astype(jnp.int32)], axis=1).astype(jnp.int32)
+         active.astype(jnp.int32), bank.alg[cfg]],
+        axis=1).astype(jnp.int32)
 
     blks, dis = _stage_factors(bank, cfg, kc, kf, with_corrector)
     n = int(np.prod(state_shape))

@@ -22,9 +22,9 @@ the commit:
     inside `round_update_ref` with the identical ops, so the two values
     agree bitwise under jit.
   * `round_update_ref`   — the full commit: shift, predictor, Eq. 22
-    stochastic branch (noise keyed by fold_in(key, kc), drawn in state
-    space exactly like the stitched chain), corrector select, family/
-    precision retire masking, k-advance.
+    stochastic branch (noise keyed by fold_in(fold_in(key, alg), kc) via
+    `draw_step_noise`, drawn in state space exactly like the stitched
+    chain), corrector select, family/precision retire masking, k-advance.
 
 The stochastic-branch noise can be passed in pre-canonicalized
 (`noise_c`) — the Pallas path does this for BDM, whose canonicalize is a
@@ -36,9 +36,41 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...core.coeffs import ALG_GMM, GMM_C, GMM_SALT
 from ..ei_update.ops import apply_factored, pad_channels
 
 Array = jax.Array
+
+
+def draw_step_noise(sde, keys, kc, alg, state_shape, dtype) -> Array:
+    """Per-slot Eq. 22 noise draw, algorithm-aware — THE noise law of the
+    serving tier.  Shared verbatim by this ref chain, the stitched serve
+    step (launch/steps.py bank mode), the outside-the-kernel BDM stream
+    of the Pallas path (ops._draw_noise_c) and the dense differential
+    oracle (tests/dense_reference.py), so all four stay bitwise identical.
+
+    Chain per slot: key -> fold_in(alg) -> fold_in(kc) -> normal z.
+    Folding the algorithm id FIRST keys distinct noise streams for
+    same-seed different-algorithm co-residents (the PR-10 keying bugfix;
+    previously only (seed, k) entered the stream).  For algorithm='gmm' a
+    second stream fold_in(step_key, GMM_SALT) draws s_norm and the
+    innovation becomes z + GMM_C * sign(s_norm) — Gabbur's moment-matched
+    K=2 mixture, whose sqrt(1 - rho^2) scale lives in the bank's P_chol
+    rows (core/coeffs.algorithm_coeff_stacks).  The in-kernel threefry
+    path replicates this chain bit for bit (kernel.py reads the sign off
+    the uniform stage: erf_inv is odd and monotone, so
+    sign(normal) == sign(centered uniform) exactly).
+    """
+    def draw(key, kk, a):
+        step_key = jax.random.fold_in(jax.random.fold_in(key, a), kk)
+        z = sde.noise_like(step_key, state_shape, dtype)
+        s_norm = sde.noise_like(jax.random.fold_in(step_key, GMM_SALT),
+                                state_shape, dtype)
+        s = jnp.where(s_norm >= 0, jnp.float32(1.0),
+                      jnp.float32(-1.0)).astype(dtype)
+        return jnp.where(a == ALG_GMM, z + GMM_C * s, z)
+
+    return jax.vmap(draw)(keys, kc, alg)
 
 
 def _gat(bank, nm, cfg, kc, kf):
@@ -98,13 +130,13 @@ def round_update_ref(u, hist, k, kc, cfg, fam, prec, keys, active, bank,
     hist2 = _shift_hist(hist, eps_c, K)
     u_lin, u_pred = _predict(u, hist2, kc, cfg, bank, kf=kf)
 
-    # stochastic branch (Eq. 22/23): noise keyed by fold_in(key, kc),
-    # drawn in state space — identical draw to the stitched chain — unless
-    # the caller supplies it pre-canonicalized (the BDM Pallas path)
+    # stochastic branch (Eq. 22/23): noise keyed by fold_in(fold_in(key,
+    # alg), kc), drawn in state space by the shared algorithm-aware law —
+    # identical draw to the stitched chain — unless the caller supplies it
+    # pre-canonicalized (the BDM Pallas path)
     if noise_c is None:
-        noise = jax.vmap(
-            lambda key, kk: sde.noise_like(jax.random.fold_in(key, kk),
-                                           state_shape, u.dtype))(keys, kc)
+        noise = draw_step_noise(sde, keys, kc, bank.alg[cfg],
+                                state_shape, u.dtype)
         noise_c = sde.canonicalize(noise)
     u_sto = u_lin + apply_factored(*_gat(bank, "B", cfg, kc, kf), eps_c) \
         + apply_factored(*_gat(bank, "P_chol", cfg, kc, kf), noise_c)

@@ -21,6 +21,14 @@ Two workloads share the same scheduler/slot machinery:
             --requests 9 --batch 3 \\
             --mix nfe=10 nfe=50,q=2,corrector nfe=20,lam=0.5
 
+    The sampler *algorithm* is a per-request axis too (gddim | gmm |
+    accel — see docs/sampler_math.md), so one engine serves a
+    mixed-algorithm batch from the same warmed programs:
+
+        python -m repro.launch.serve --diffusion cifar10-ddpm --reduced \\
+            --requests 9 --batch 3 \\
+            --mix algorithm=gddim algorithm=accel algorithm=gmm,lam=0.5
+
     One engine serves the whole mix from one warmed set of compiled step
     programs (`compile_stats` is printed so you can see it).  Passing a
     comma-separated list to --diffusion builds a *multi-family* engine
@@ -76,7 +84,7 @@ from .mesh import make_serve_mesh
 
 def parse_sampler_spec(spec: str) -> dict:
     """Parse one --mix item:
-    'family=cld,nfe=50,q=2,corrector,lam=0.5,grid=uniform'.
+    'family=cld,nfe=50,q=2,corrector,lam=0.5,grid=uniform,algorithm=gmm'.
 
     Bare flags ('corrector') mean True; 'lambda' is accepted for 'lam'.
     Returns a kwargs dict of `ServeRequest` sampler-config fields (the
@@ -92,7 +100,8 @@ def parse_sampler_spec(spec: str) -> dict:
         raise ValueError(v)
 
     convert = {"nfe": int, "q": int, "lam": float, "grid": str.strip,
-               "corrector": parse_bool, "family": str.strip}
+               "corrector": parse_bool, "family": str.strip,
+               "algorithm": str.strip}
     out: dict = {}
     for part in spec.split(","):
         part = part.strip()
@@ -214,7 +223,8 @@ def _serve_samples(args) -> int:
     if mix:
         for cfg in engine.cache.configs:
             print(f"  config: family={cfg.family} nfe={cfg.nfe} q={cfg.q} "
-                  f"corrector={cfg.corrector} lam={cfg.lam} grid={cfg.grid}")
+                  f"corrector={cfg.corrector} lam={cfg.lam} grid={cfg.grid} "
+                  f"algorithm={cfg.algorithm}")
     return 0
 
 
@@ -291,6 +301,13 @@ def main(argv=None) -> int:
                        help="default stochasticity lambda (Eq. 22)")
     g_cfg.add_argument("--grid", choices=("quadratic", "uniform"),
                        default="quadratic")
+    g_cfg.add_argument("--algorithm", choices=("gddim", "gmm", "accel"),
+                       default="gddim",
+                       help="default sampler update rule: gddim (Eq. 19), "
+                            "gmm (moment-matched 2-component mixture "
+                            "reverse kernel; needs lam>0), accel "
+                            "(first-moment-corrected deterministic "
+                            "update; needs q=1, lam=0)")
     g_cfg.add_argument("--mix", nargs="+", metavar="SPEC",
                        help="per-request sampler configs to cycle through, "
                             "e.g. --mix nfe=10 nfe=50,q=2,corrector "
@@ -341,7 +358,7 @@ def main(argv=None) -> int:
         try:
             args.default_config = SamplerConfig(
                 nfe=args.nfe, q=args.q, corrector=args.corrector,
-                lam=args.lam, grid=args.grid)
+                lam=args.lam, grid=args.grid, algorithm=args.algorithm)
             args.mix_parsed = [parse_sampler_spec(s)
                                for s in (args.mix or [])]
             for kw in args.mix_parsed:

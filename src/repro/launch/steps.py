@@ -307,8 +307,10 @@ def make_diffusion_serve_step(spec, coeffs=None):
 
       with `k`/`cfg` (B,) int32, and `keys` (B, 2) uint32 per-slot
       PRNG keys for the Eq. 22 stochastic branch (noise is keyed by
-      fold_in(key, k) and drawn in state space, so a slot's trajectory is
-      a pure function of its request seed).  `with_corrector` must be
+      fold_in(fold_in(key, algorithm), k) and drawn in state space by the
+      shared algorithm-aware law — `round_fused.ref.draw_step_noise` — so
+      a slot's trajectory is a pure function of its request seed and
+      merged config).  `with_corrector` must be
       static under jit: the False variant is the 1-eval predictor program,
       the True variant adds the Eq. 45 corrector re-evaluation and applies
       it only to slots whose config asks for it (and never on a slot's
@@ -338,6 +340,7 @@ def make_diffusion_serve_step(spec, coeffs=None):
         return serve_step
 
     from ..kernels.ei_update.ops import apply_factored, pad_channels
+    from ..kernels.round_fused import ref as rf_ref
 
     sde = spec.sde
     kf = sde.packed_k                       # this family's channel rows
@@ -376,10 +379,10 @@ def make_diffusion_serve_step(spec, coeffs=None):
         # stochastic branch (Eq. 22/23); deterministic configs carry zero
         # B/P_chol factors but the branch is still computed so every
         # traffic mix runs the identical program (bitwise solo ==
-        # interleaved)
-        noise = jax.vmap(
-            lambda key, kk: sde.noise_like(jax.random.fold_in(key, kk),
-                                           state_shape, u.dtype))(keys, kc)
+        # interleaved).  The draw is the shared algorithm-aware noise law
+        # (keyed key -> alg -> kc, 'gmm' mixture transform per slot)
+        noise = rf_ref.draw_step_noise(sde, keys, kc, bank.alg[cfg],
+                                       state_shape, u.dtype)
         u_sto = u_lin + apply_factored(*gat("B"), eps_c) \
             + apply_factored(*gat("P_chol"), sde.canonicalize(noise))
         bmask = lambda m: m.reshape((-1, 1, 1))

@@ -42,7 +42,7 @@ Design rules:
     built it.
 
 Sampler-config fields (`nfe`/`q`/`corrector`/`lam`/`grid`/`family`/
-`precision`) mirror `repro.core.coeffs.SamplerConfig`; `None` means "use
+`algorithm`/`precision`) mirror `repro.core.coeffs.SamplerConfig`; `None` means "use
 the engine default", and the *merged* config is validated by the engine
 (`DiffusionEngine.config_of`) exactly as before — the request type does
 not second-guess the engine's menu.  `priority`/`deadline` ride along for
@@ -58,7 +58,8 @@ import numpy as np
 
 # Bump when a field is added/renamed/retyped.  `from_wire` accepts exactly
 # this version: cross-version traffic is a deploy error, not a soft case.
-WIRE_VERSION = 1
+# v2: added the per-request sampler `algorithm` field.
+WIRE_VERSION = 2
 
 WORKLOADS = ("token", "diffusion")
 
@@ -87,6 +88,8 @@ class ServeRequest:
     lam: Optional[float] = None         # stochasticity lambda (Eq. 22)
     grid: Optional[str] = None          # 'quadratic' | 'uniform'
     family: Optional[str] = None        # SDE family ('vpsde'|'cld'|'bdm')
+    algorithm: Optional[str] = None     # sampler update rule
+                                        # ('gddim'|'gmm'|'accel')
     precision: Optional[str] = None     # score-net precision class
                                         # ('f32'|'bf16'|'int8')
 

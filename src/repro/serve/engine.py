@@ -684,7 +684,7 @@ class DiffusionEngine(ServeLoop):
             nfe=pick(req.nfe, d.nfe), q=pick(req.q, d.q),
             corrector=pick(req.corrector, d.corrector),
             lam=pick(req.lam, d.lam), grid=pick(req.grid, d.grid),
-            family=fam)
+            family=fam, algorithm=pick(req.algorithm, d.algorithm))
 
     def precision_of(self, req: ServeRequest) -> str:
         """The request's score-net precision class (engine default when

@@ -166,13 +166,24 @@ def serving_metrics(log: Dict[int, RequestTiming]) -> Dict[str, Any]:
     `request_log`.  All values are deterministic at a fixed trace:
 
       p50_latency / p99_latency — arrival->completion percentiles, in
-                                  virtual rounds
+                                  virtual rounds; None when the run
+                                  completed nothing (a percentile of an
+                                  empty sample has no value — reporting
+                                  0.0 here read as "instant completion"
+                                  on shed-everything runs)
       deadline_misses           — completed requests whose t_done exceeded
                                   their deadline (unfinished requests with
-                                  an expired deadline also count)
+                                  a deadline also count: a shed or
+                                  still-queued request has already lost
+                                  its SLO)
       goodput_slo               — SLO-met completions per virtual round,
                                   over the span from the first arrival to
-                                  the last completion
+                                  the last completion; 0.0 when nothing
+                                  completed
+
+    A zero-completion log is a valid input (e.g. every request shed):
+    the latency percentiles are None, goodput is 0.0, and deadline
+    misses still count the unfinished-with-deadline requests.
     """
     timings = list(log.values())
     done = [t for t in timings if t.t_done is not None]
@@ -187,8 +198,8 @@ def serving_metrics(log: Dict[int, RequestTiming]) -> Dict[str, Any]:
     return {
         "n_arrived": len(timings),
         "n_done": len(done),
-        "p50_latency": percentile(lats, 50.0) if lats else 0.0,
-        "p99_latency": percentile(lats, 99.0) if lats else 0.0,
+        "p50_latency": percentile(lats, 50.0) if lats else None,
+        "p99_latency": percentile(lats, 99.0) if lats else None,
         "deadline_misses": misses,
         "goodput_slo": (n_ok / span) if span > 0 else 0.0,
         "span": span,

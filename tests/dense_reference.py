@@ -19,8 +19,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.coeffs import CoeffCache, SamplerConfig
+from repro.core.coeffs import (ALGORITHMS, CoeffCache, SamplerConfig,
+                               algorithm_coeff_stacks, effective_q)
 from repro.kernels.ei_update.ops import apply_packed, pad_channels
+from repro.kernels.round_fused.ref import draw_step_noise
 
 Array = jax.Array
 
@@ -65,6 +67,7 @@ class DensePackedBank(NamedTuple):
     stochastic: jnp.ndarray
     corrector: jnp.ndarray
     fam: jnp.ndarray
+    alg: jnp.ndarray
 
 
 def build_dense_bank(cache: CoeffCache) -> DensePackedBank:
@@ -88,13 +91,19 @@ def build_dense_bank(cache: CoeffCache) -> DensePackedBank:
     stoch = np.zeros((Cb,), bool)
     corr = np.zeros((Cb,), bool)
     fam = np.zeros((Cb,), np.int32)
+    alg = np.zeros((Cb,), np.int32)
 
     for c, cfg in enumerate(cache.configs):
         co = cache.get(cfg)
         name = cache.resolve(cfg)
         ops = cache.sdes[name].ops
         pk = lambda x: pack_coeff(ops, x, cache.data_shape, K)
-        N, q = cfg.nfe, cfg.q
+        coeff_shape = np.shape(np.asarray(ops.eye()))
+        # the algorithm axis shares ONE coefficient generator with the
+        # production bank (core/coeffs.algorithm_coeff_stacks), so the
+        # dense oracle embeds the identical transformed f64 stacks
+        pC_a, cC_a, P_a = algorithm_coeff_stacks(co, cfg, coeff_shape)
+        N, q = cfg.nfe, effective_q(cfg)
         ts = np.asarray(co.ts)
         t_cur[c, :N] = ts[N - np.arange(N)]
         t_cur[c, N:] = ts[1]
@@ -103,14 +112,15 @@ def build_dense_bank(cache: CoeffCache) -> DensePackedBank:
         for k in range(N):
             psi[c, k] = pk(np.asarray(co.psi)[k])
             B[c, k] = pk(np.asarray(co.B)[k])
-            P_chol[c, k] = pk(np.asarray(co.P_chol)[k])
+            P_chol[c, k] = pk(P_a[k])
             for j in range(q):
-                pC[c, k, j] = pk(np.asarray(co.pC)[k, j])
-                cC[c, k, j] = pk(np.asarray(co.cC)[k, j])
+                pC[c, k, j] = pk(pC_a[k, j])
+                cC[c, k, j] = pk(cC_a[k, j])
         n_steps[c] = N
         stoch[c] = cfg.lam > 0.0
         corr[c] = cfg.corrector
         fam[c] = cache.fam_index(name)
+        alg[c] = ALGORITHMS.index(cfg.algorithm)
 
     f32 = lambda x: jnp.asarray(x, jnp.float32)
     return DensePackedBank(
@@ -118,7 +128,7 @@ def build_dense_bank(cache: CoeffCache) -> DensePackedBank:
         cC=f32(cC), B=f32(B), P_chol=f32(P_chol),
         n_steps=jnp.asarray(n_steps),
         stochastic=jnp.asarray(stoch), corrector=jnp.asarray(corr),
-        fam=jnp.asarray(fam))
+        fam=jnp.asarray(fam), alg=jnp.asarray(alg))
 
 
 def make_dense_bank_step(spec):
@@ -150,9 +160,8 @@ def make_dense_bank_step(spec):
         for j in range(Qb):
             u_pred = u_pred + apply_packed(gatq(bank.pC, j),
                                            hist[:, j, :kf])
-        noise = jax.vmap(
-            lambda key, kk: sde.noise_like(jax.random.fold_in(key, kk),
-                                           state_shape, u.dtype))(keys, kc)
+        noise = draw_step_noise(sde, keys, kc, bank.alg[cfg],
+                                state_shape, u.dtype)
         u_sto = u_lin + apply_packed(gat(bank.B), eps_c) \
             + apply_packed(gat(bank.P_chol), sde.canonicalize(noise))
         bmask = lambda m: m.reshape((-1, 1, 1))

@@ -1,0 +1,323 @@
+"""Golden closed-form lockdown of the per-request algorithm axis (PR 10).
+
+`SamplerConfig.algorithm` selects the *update rule* a request runs with —
+'gddim' (the paper), 'gmm' (Gabbur's moment-matched K=2 Gaussian-mixture
+reverse kernel, arXiv:2311.04938) or 'accel' (Li et al.'s provable
+single-step acceleration, arXiv:2403.03852) — all three riding the same
+FactoredBank rows and the same fused round step.  Four layers:
+
+  * coefficient goldens — the algorithm transform
+    (`core.coeffs.algorithm_coeff_stacks`) against each paper's closed
+    form, in float64: accel's extra row is exactly -pM/(2 delta) with pM
+    the first moment of the EI kernel (checked against an independent
+    fine-grid Simpson quadrature), and the two accel slots sum back to
+    the untransformed gDDIM row; gmm scales only the P_chol rows, by
+    sqrt(1 - rho^2), satisfying the mixture moment identity
+    (1 - rho^2)(1 + c^2) = 1.
+  * the noise-keying law — `draw_step_noise` (kernels/round_fused/ref.py,
+    THE shared noise function of the serving tier) equals the explicit
+    jax.random chain key -> fold_in(alg) -> fold_in(k) bitwise, keys
+    distinct streams per algorithm id at the same (seed, k), and the gmm
+    innovation z + c*sign(s) has the matched moments empirically.
+  * config validation — the algorithm axis's constraint surface.
+  * engine level — a mixed-algorithm batch is bitwise identical, per
+    request, to each request's solo run, with ZERO recompiles after a
+    warmup that has seen each algorithm once (the tentpole claim: the
+    algorithm id is an int lane of the bank, not a compile bucket).
+
+The factored-vs-dense and fused-vs-stitched differentials for algorithm
+configs live in tests/test_factored_bank.py / tests/test_round_fused.py
+(their config menus include gmm/accel rows).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ALG_ACCEL, ALG_GDDIM, ALG_GMM, ALGORITHMS,
+                        GMM_C, GMM_RHO, GMM_SALT, GMM_SCALE,
+                        SamplerConfig, algorithm_coeff_stacks,
+                        build_sampler_coeffs, effective_q, time_grid)
+from repro.kernels.round_fused.ref import draw_step_noise
+from repro.sde import VPSDE, solve
+
+
+# ---------------------------------------------------------------------------
+# coefficient goldens: accel (Li et al. 2024, arXiv:2403.03852)
+# ---------------------------------------------------------------------------
+def _vpsde_coeffs(nfe, lam=0.0):
+    sde = VPSDE()
+    ts = time_grid(sde, nfe)
+    co = build_sampler_coeffs(sde, ts, q=1, lam=lam)
+    coeff_shape = np.shape(np.asarray(sde.ops.eye()))
+    return sde, ts, co, coeff_shape
+
+
+def test_accel_rows_widen_and_sum_to_gddim_row():
+    """The accel transform splits the single gDDIM predictor row into
+    (row + corr, -corr): summed over the widened q_eff = 2 axis it
+    reproduces the untransformed row, so accel differs from gddim only
+    through the backward difference eps_i - eps_{i+1} it weights."""
+    nfe = 6
+    sde, ts, co, coeff_shape = _vpsde_coeffs(nfe)
+    cfg = SamplerConfig(nfe=nfe, algorithm="accel")
+    assert effective_q(cfg) == 2 and cfg.q == 1
+    pC_a, cC_a, P_a = algorithm_coeff_stacks(co, cfg, coeff_shape)
+    pC64 = np.asarray(co.pC, np.float64)
+    assert pC_a.shape == (nfe, 2) + coeff_shape
+    np.testing.assert_allclose(pC_a[:, 0] + pC_a[:, 1], pC64[:, 0],
+                               rtol=1e-12, atol=0.0)
+    # k = 0 (the first step from t_N) has no history: plain gDDIM row
+    np.testing.assert_array_equal(pC_a[0, 0], pC64[0, 0])
+    np.testing.assert_array_equal(pC_a[0, 1], np.zeros(coeff_shape))
+    # corrector rows are zero-padded to q_eff, P untouched (deterministic)
+    np.testing.assert_array_equal(cC_a[:, :1],
+                                  np.asarray(co.cC, np.float64))
+    np.testing.assert_array_equal(cC_a[:, 1], np.zeros_like(cC_a[:, 1]))
+    np.testing.assert_array_equal(P_a, np.asarray(co.P_chol, np.float64))
+
+
+def test_accel_slot_is_first_moment_over_step_gap():
+    """Closed form of the correction weight (Li et al. Sec. 4, midpoint
+    rule on the EI kernel): slot 1 at step k is exactly
+    -pM_k / (2 (t_i - t_{i+1})) with pM_k the stored first moment."""
+    nfe = 5
+    sde, ts, co, coeff_shape = _vpsde_coeffs(nfe)
+    cfg = SamplerConfig(nfe=nfe, algorithm="accel")
+    pC_a, _, _ = algorithm_coeff_stacks(co, cfg, coeff_shape)
+    ts64 = np.asarray(co.ts, np.float64)          # the transform's grid
+    pM64 = np.asarray(co.pM, np.float64)
+    for k in range(1, nfe):
+        i = nfe - k
+        delta = float(ts64[i] - ts64[i + 1])
+        assert delta < 0.0                         # ts increases with i
+        np.testing.assert_array_equal(pC_a[k, 1], -0.5 * pM64[k] / delta)
+
+
+def test_accel_first_moment_matches_independent_quadrature():
+    """The stored pM really is int_{t_i}^{t_{i-1}} ei_core(t_{i-1}, tau)
+    (tau - t_i) dtau: recompute it with an independent fixed fine-grid
+    Simpson rule from the SDE's public Psi/G2/Sigma/R surfaces."""
+    nfe = 4
+    sde, ts, co, coeff_shape = _vpsde_coeffs(nfe)
+    ops = sde.ops
+
+    def ei_core(t_end, tau):
+        KinvT = ops.mul(ops.inv(sde.Sigma_np(tau)), sde.R_np(tau))
+        return 0.5 * ops.mul(ops.mul(sde.Psi_np(t_end, tau),
+                                     sde.G2_np(tau)), KinvT)
+
+    pM64 = np.asarray(co.pM, np.float64)
+    for k in range(nfe):
+        i = nfe - k
+        t_i, t_im1 = float(ts[i]), float(ts[i - 1])
+        xs, w = solve.simpson_nodes(t_i, t_im1, 4096)
+        ref = sum(wx * np.asarray(ei_core(t_im1, float(x)) * (x - t_i),
+                                  np.float64)
+                  for x, wx in zip(xs, w))
+        np.testing.assert_allclose(pM64[k], ref, rtol=2e-5,
+                                   atol=1e-12,
+                                   err_msg=f"pM[{k}] != independent "
+                                           "first-moment quadrature")
+
+
+# ---------------------------------------------------------------------------
+# coefficient goldens: gmm (Gabbur 2023, arXiv:2311.04938)
+# ---------------------------------------------------------------------------
+def test_gmm_moment_identity():
+    """Moment matching of the K=2 mixture: the innovation z + c*s (s a
+    fair sign) has variance 1 + c^2, and the bank's Cholesky rescale
+    sqrt(1 - rho^2) restores unit variance — so the product
+    (1 - rho^2)(1 + c^2) must be 1 (up to GMM_C's f32 storage)."""
+    assert GMM_SCALE == float(np.sqrt(1.0 - GMM_RHO * GMM_RHO))
+    prod = (1.0 - GMM_RHO * GMM_RHO) * (1.0 + float(GMM_C) ** 2)
+    assert abs(prod - 1.0) < 1e-6
+    # and GMM_C is exactly the f32 of rho / sqrt(1 - rho^2)
+    assert GMM_C == np.float32(GMM_RHO / np.sqrt(1.0 - GMM_RHO * GMM_RHO))
+
+
+def test_gmm_transform_scales_only_the_cholesky_rows():
+    nfe = 6
+    sde, ts, co, coeff_shape = _vpsde_coeffs(nfe, lam=0.7)
+    cfg = SamplerConfig(nfe=nfe, lam=0.7, algorithm="gmm")
+    assert effective_q(cfg) == 1
+    pC_a, cC_a, P_a = algorithm_coeff_stacks(co, cfg, coeff_shape)
+    np.testing.assert_array_equal(pC_a, np.asarray(co.pC, np.float64))
+    np.testing.assert_array_equal(cC_a, np.asarray(co.cC, np.float64))
+    np.testing.assert_array_equal(
+        P_a, GMM_SCALE * np.asarray(co.P_chol, np.float64))
+    assert np.any(P_a != np.asarray(co.P_chol, np.float64))
+
+
+def test_gmm_innovation_moments_empirical():
+    """The gmm draw is z + c * sign(second stream): empirically the signs
+    are fair, the mean is ~0 and the variance ~1 + c^2 — which the bank's
+    sqrt(1 - rho^2) row scale maps back to exactly 1."""
+    sde = VPSDE()
+    B, shape = 64, (1, 1024)
+    rng = np.random.default_rng(7)
+    keys = jnp.asarray(rng.integers(0, 2**32, (B, 2), dtype=np.uint64),
+                       jnp.uint32)
+    kc = jnp.zeros((B,), jnp.int32)
+    alg = jnp.full((B,), ALG_GMM, jnp.int32)
+    x = np.asarray(draw_step_noise(sde, keys, kc, alg, shape, jnp.float32),
+                   np.float64).ravel()
+    n = x.size
+    c = float(GMM_C)
+    assert abs(x.mean()) < 5.0 / np.sqrt(n)
+    np.testing.assert_allclose(x.var(), 1.0 + c * c, rtol=2e-2)
+    np.testing.assert_allclose(GMM_SCALE**2 * x.var(), 1.0, rtol=2e-2)
+    # recover the sign stream from the second fold and check it is fair
+    signs = []
+    for b in range(B):
+        step_key = jax.random.fold_in(
+            jax.random.fold_in(keys[b], ALG_GMM), kc[b])
+        s_norm = sde.noise_like(jax.random.fold_in(step_key, GMM_SALT),
+                                shape, jnp.float32)
+        signs.append(np.asarray(s_norm) >= 0)
+    frac = np.mean(np.stack(signs))
+    assert 0.45 < frac < 0.55
+
+
+# ---------------------------------------------------------------------------
+# the noise-keying law (satellite 2: algorithm id enters the stream)
+# ---------------------------------------------------------------------------
+def test_draw_step_noise_equals_explicit_chain():
+    """`draw_step_noise` IS the chain key -> fold_in(alg) -> fold_in(k),
+    bitwise, for every algorithm — the one law shared by the ref chain,
+    the stitched serve step, the BDM outside-kernel stream and the dense
+    oracle."""
+    sde = VPSDE()
+    shape = (1, 48)
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.integers(0, 2**32, (6, 2), dtype=np.uint64),
+                       jnp.uint32)
+    kc = jnp.asarray([0, 1, 2, 3, 1, 2], jnp.int32)
+    alg = jnp.asarray([ALG_GDDIM, ALG_GMM, ALG_ACCEL,
+                       ALG_GDDIM, ALG_GMM, ALG_ACCEL], jnp.int32)
+    got = np.asarray(draw_step_noise(sde, keys, kc, alg, shape,
+                                     jnp.float32))
+    for b in range(6):
+        step_key = jax.random.fold_in(
+            jax.random.fold_in(keys[b], alg[b]), kc[b])
+        z = sde.noise_like(step_key, shape, jnp.float32)
+        if int(alg[b]) == ALG_GMM:
+            s_norm = sde.noise_like(jax.random.fold_in(step_key, GMM_SALT),
+                                    shape, jnp.float32)
+            s = jnp.where(s_norm >= 0, jnp.float32(1.0), jnp.float32(-1.0))
+            z = z + GMM_C * s
+        np.testing.assert_array_equal(
+            got[b], np.asarray(z),
+            err_msg=f"slot {b} (alg={ALGORITHMS[int(alg[b])]}) diverged "
+                    "from the explicit fold chain")
+
+
+def test_algorithm_ids_key_distinct_noise_streams():
+    """Same seed, same step index, different algorithm => different noise
+    (the PR-10 keying bugfix: previously only (seed, k) entered the
+    stream, so same-seed co-residents of different algorithms shared
+    noise)."""
+    sde = VPSDE()
+    shape = (1, 64)
+    key = jnp.asarray([17, 42], jnp.uint32)
+    keys = jnp.stack([key, key, key])
+    kc = jnp.zeros((3,), jnp.int32)
+    alg = jnp.asarray([ALG_GDDIM, ALG_GMM, ALG_ACCEL], jnp.int32)
+    z = np.asarray(draw_step_noise(sde, keys, kc, alg, shape, jnp.float32))
+    assert np.any(z[0] != z[1]) and np.any(z[0] != z[2]) \
+        and np.any(z[1] != z[2])
+    # and the gddim stream is the alg-folded one, not the legacy
+    # fold_in(key, k)-only chain
+    legacy = sde.noise_like(jax.random.fold_in(key, 0), shape, jnp.float32)
+    assert np.any(z[0] != np.asarray(legacy))
+
+
+# ---------------------------------------------------------------------------
+# config validation: the constraint surface of the axis
+# ---------------------------------------------------------------------------
+def test_algorithm_validation():
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        SamplerConfig(nfe=8, algorithm="ddpmx")
+    with pytest.raises(ValueError, match="gmm"):
+        SamplerConfig(nfe=8, algorithm="gmm")             # needs lam > 0
+    with pytest.raises(ValueError, match="accel"):
+        SamplerConfig(nfe=8, algorithm="accel", lam=0.5)  # deterministic
+    with pytest.raises(ValueError, match="accel"):
+        SamplerConfig(nfe=8, algorithm="accel", q=2)      # q stays 1
+    with pytest.raises(ValueError, match="accel"):
+        SamplerConfig(nfe=8, algorithm="accel", corrector=True)
+    # the valid corners construct
+    assert SamplerConfig(nfe=8, algorithm="gmm", lam=0.5).algorithm == "gmm"
+    assert SamplerConfig(nfe=8, algorithm="accel").algorithm == "accel"
+    assert effective_q(SamplerConfig(nfe=8, algorithm="accel")) == 2
+    assert effective_q(SamplerConfig(nfe=5, q=2)) == 2
+    assert effective_q(SamplerConfig(nfe=8, algorithm="gmm", lam=0.5)) == 1
+
+
+# ---------------------------------------------------------------------------
+# engine level: mixed-algorithm batch == solo runs, zero recompiles
+# ---------------------------------------------------------------------------
+class _TanhSpec:
+    """A get_diffusion spec with the score net swapped for a cheap
+    u/t-varying closed form.  The reduced checkpoints' eps is *constant*
+    in (u, t) (zero-init output head), which collapses every
+    eps-difference-based term — multistep history, the accel backward
+    difference — to exactly zero; a varying eps is what makes the
+    algorithm axis observable end to end."""
+
+    def __init__(self, spec):
+        self.__dict__["_spec"] = spec
+
+    def __getattr__(self, nm):
+        return getattr(self._spec, nm)
+
+    def eps_model(self, params, u, t):
+        tb = t.reshape((-1,) + (1,) * (u.ndim - 1)).astype(u.dtype)
+        return jnp.tanh(u) * (0.5 + tb)
+
+
+def test_mixed_algorithm_serve_bitwise_and_zero_recompiles():
+    """One engine, one batch, all three algorithms co-resident: every
+    request's sample is bitwise identical to its solo run, same-seed
+    requests of different algorithms get different samples (the keying
+    fix), and after a warmup that has seen each algorithm once the mixed
+    serve triggers ZERO new compiles — the algorithm id is a bank int
+    lane, not a compile bucket."""
+    from repro.configs import get_diffusion
+    from repro.serve import DiffusionEngine, SampleRequest
+
+    spec = _TanhSpec(get_diffusion("cifar10-ddpm", reduced=True))
+    params = spec.init(jax.random.PRNGKey(0))
+    B = 2
+    engine = DiffusionEngine(spec, params, batch_size=B, nfe=6)
+    # warmup sizes every bucket (accel widens history to q_eff = 2)
+    warm_out = engine.serve(
+        [SampleRequest(rid=90, seed=9),
+         SampleRequest(rid=91, seed=9, algorithm="accel"),
+         SampleRequest(rid=92, seed=9, lam=0.5, algorithm="gmm")])
+    warm = engine.compile_stats()
+    assert warm["step"] == 1
+
+    # same seed, different algorithm => different sample
+    assert not np.array_equal(warm_out[90], warm_out[91])
+    assert not np.array_equal(warm_out[90], warm_out[92])
+
+    # a fresh traffic mix over the warmed algorithms plus ONE new config
+    # (4 total: inside the warmed config bucket, like the nfe sweep of
+    # test_diffusion_engine_zero_recompiles_across_nfe)
+    reqs = [SampleRequest(rid=0, seed=0),
+            SampleRequest(rid=1, seed=1, algorithm="accel"),
+            SampleRequest(rid=2, seed=2, lam=0.5, algorithm="gmm"),
+            SampleRequest(rid=3, seed=3, nfe=8, lam=0.5),
+            SampleRequest(rid=4, seed=1, algorithm="accel")]
+    mixed = engine.serve(reqs)
+    assert engine.compile_stats() == warm, \
+        "new algorithm mixes inside the warmed buckets must not recompile"
+    assert set(mixed) == {r.rid for r in reqs}
+    for r in reqs:
+        solo = DiffusionEngine(spec, params, batch_size=B,
+                               nfe=6).serve([r])
+        np.testing.assert_array_equal(
+            mixed[r.rid], solo[r.rid],
+            err_msg=f"request {r.rid} (algorithm={r.algorithm or 'gddim'})"
+                    " depends on neighbour algorithms")

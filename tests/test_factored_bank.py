@@ -170,7 +170,14 @@ def _bank_parts():
             SamplerConfig(nfe=4, family="bdm"),
             SamplerConfig(nfe=4, family="bdm", q=2, corrector=True),
             SamplerConfig(nfe=6, lam=0.7),
-            SamplerConfig(nfe=3, family="bdm", lam=0.5)]
+            SamplerConfig(nfe=3, family="bdm", lam=0.5),
+            # PR-10 algorithm axis: accel widens rows to effective q=2,
+            # gmm scales P_chol — both must materialize to the dense
+            # oracle's rows (which embed the same transformed stacks)
+            SamplerConfig(nfe=4, algorithm="accel"),
+            SamplerConfig(nfe=6, lam=0.7, algorithm="gmm"),
+            SamplerConfig(nfe=3, family="bdm", lam=0.5, algorithm="gmm"),
+            SamplerConfig(nfe=5, family="cld", algorithm="accel")]
     idx = [cache.index_of(c) for c in cfgs]
     return cache, cfgs, idx, cache.factored_bank, \
         dense_reference.build_dense_bank(cache)
@@ -228,12 +235,14 @@ def _check_bank_step(fam, with_corrector, B, seed):
 class TestFactoredBankDifferential:
     def test_bank_rows_materialize_to_dense_rows(self):
         cache, cfgs, idx, fbank, dbank = _bank_parts()
+        from repro.core.coeffs import effective_q
         for c, cfg in zip(idx, cfgs):
-            N, q = cfg.nfe, cfg.q
+            N, q = cfg.nfe, effective_q(cfg)
             assert int(fbank.n_steps[c]) == int(dbank.n_steps[c]) == N
             assert bool(fbank.stochastic[c]) == bool(dbank.stochastic[c])
             assert bool(fbank.corrector[c]) == bool(dbank.corrector[c])
             assert int(fbank.fam[c]) == int(dbank.fam[c])
+            assert int(fbank.alg[c]) == int(dbank.alg[c])
             for k in range(N):
                 np.testing.assert_array_equal(
                     fbank.materialize("psi", c, k), np.asarray(dbank.psi[c, k]))
@@ -313,7 +322,9 @@ def test_mixed_family_serve_bitwise_equals_dense_reference(family_parts):
             SampleRequest(rid=3, seed=3, family="cld", nfe=6, q=2,
                           corrector=True),
             SampleRequest(rid=4, seed=4, family="vpsde", nfe=8, lam=0.5),
-            SampleRequest(rid=5, seed=5, family="bdm", nfe=3, lam=0.5)]
+            SampleRequest(rid=5, seed=5, family="bdm", nfe=3, lam=0.5),
+            SampleRequest(rid=6, seed=6, algorithm="accel"),
+            SampleRequest(rid=7, seed=7, nfe=8, lam=0.5, algorithm="gmm")]
     engine = DiffusionEngine(specs, params, batch_size=2, nfe=6)
     out = engine.serve(reqs)
     assert set(out) == {r.rid for r in reqs}

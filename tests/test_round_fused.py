@@ -51,7 +51,14 @@ def _bank_parts():
             SamplerConfig(nfe=4, family="bdm"),
             SamplerConfig(nfe=4, family="bdm", q=2, corrector=True),
             SamplerConfig(nfe=6, lam=0.7),
-            SamplerConfig(nfe=3, family="bdm", lam=0.5)]
+            SamplerConfig(nfe=3, family="bdm", lam=0.5),
+            # the PR-10 algorithm axis rides the same differential: accel
+            # widens its rows to effective q=2, gmm transforms P_chol and
+            # the noise law — both must track the stitched chain bitwise
+            SamplerConfig(nfe=4, algorithm="accel"),
+            SamplerConfig(nfe=6, lam=0.7, algorithm="gmm"),
+            SamplerConfig(nfe=3, family="bdm", lam=0.5, algorithm="gmm"),
+            SamplerConfig(nfe=5, family="cld", algorithm="accel")]
     idx = [cache.index_of(c) for c in cfgs]
     return cache, cfgs, idx, cache.factored_bank
 

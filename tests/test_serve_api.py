@@ -42,6 +42,8 @@ class TestWireRoundTrip:
         _token_req(),
         _token_req(frames=None, deadline=None),
         SampleRequest(rid=3, seed=9, nfe=10),
+        SampleRequest(rid=5, seed=2, nfe=8, lam=0.5, algorithm="gmm"),
+        SampleRequest(rid=6, seed=3, algorithm="accel"),
         Request(rid=4, tokens=np.zeros(3, np.int32), max_new=1),
     ])
     def test_exact_round_trip(self, req):
@@ -141,6 +143,8 @@ class TestWireRoundTripProperty:
             "family": st.none() | st.sampled_from(["vpsde", "cld", "bdm"]),
             "precision": st.none() | st.sampled_from(["f32", "bf16",
                                                       "int8"]),
+            "algorithm": st.none() | st.sampled_from(["gddim", "gmm",
+                                                      "accel"]),
         })
 
         @st.composite

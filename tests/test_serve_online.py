@@ -93,6 +93,64 @@ def test_percentile_matches_numpy():
         percentile([], 50.0)
 
 
+def test_serving_metrics_zero_completion_log():
+    """Regression (PR 10 bugfix): a log in which nothing completed —
+    every request shed or still queued — is a valid input.  The latency
+    percentiles must be None (NOT 0.0, which read as "instant"), goodput
+    0.0, and every unfinished request that carried a deadline counts as
+    a miss (it has already lost its SLO).  `percentile([])` itself keeps
+    raising — the guard lives in `serving_metrics`, not the primitive."""
+    from repro.serve.traffic import RequestTiming
+
+    m = serving_metrics({})
+    assert m["n_arrived"] == m["n_done"] == 0
+    assert m["p50_latency"] is None and m["p99_latency"] is None
+    assert m["goodput_slo"] == 0.0 and m["deadline_misses"] == 0
+
+    log = {0: RequestTiming(t_arrival=0.0, deadline=4.0),
+           1: RequestTiming(t_arrival=1.0),                 # no deadline
+           2: RequestTiming(t_arrival=2.0, deadline=100.0, t_admit=3.0)}
+    m = serving_metrics(log)
+    assert m["n_arrived"] == 3 and m["n_done"] == 0
+    assert m["p50_latency"] is None and m["p99_latency"] is None
+    assert m["goodput_slo"] == 0.0 and m["span"] == 0.0
+    assert m["deadline_misses"] == 2
+
+
+def test_shed_everything_trace_zero_completion_metrics():
+    """A trace every request of which is shed (sole replica faulted for
+    the whole run) must produce valid metrics end to end: the router
+    counts the sheds, the empty residue drains through the real
+    `ServeLoop.serve_stream` without dispatching a round, and
+    `serving_metrics` on the zero-completion log reports None/0.0
+    instead of raising."""
+    from repro.serve.router import ReplicaSpec, Router, RouterConfig
+
+    reqs = [SampleRequest(rid=i, seed=i, nfe=4, deadline=float(5 + i))
+            for i in range(4)]
+    trace = TraceTraffic([Arrival(float(i), r)
+                          for i, r in enumerate(reqs)])
+    router = Router([ReplicaSpec(index=0, batch=2,
+                                 fault_windows=((0.0, 1e9),))],
+                    RouterConfig(default_nfe=4))
+    eng = HostSimEngine(batch_size=2)
+    results, plan = router.serve(trace, [eng])
+    assert results == {}
+    assert plan.counters["n_shed"] == len(reqs)
+    assert {s["rid"] for s in plan.shed} == {r.rid for r in reqs}
+    assert plan.sub_traces[0] == []
+
+    # the shed-everything residue still runs through the real loop
+    out = eng.serve_stream(router.replica_trace(plan, 0),
+                           clock=VirtualClock())
+    assert out == {}
+    assert eng.n_rounds == 0
+    m = serving_metrics(eng.request_log)
+    assert m["n_arrived"] == m["n_done"] == 0
+    assert m["p50_latency"] is None and m["p99_latency"] is None
+    assert m["goodput_slo"] == 0.0 and m["deadline_misses"] == 0
+
+
 # ---------------------------------------------------------------------------
 # golden simulation: every number below is hand-computed from the trace
 # ---------------------------------------------------------------------------

@@ -27,7 +27,8 @@ Rules, per record matched by `config`:
     jaxpr structural-hash-set cardinality of the multi-family engine's
     round-step compile buckets — a new bucket is a new compile in steady
     state, which is a reviewed event, not an accident; the per-bucket
-    hashes ride along in the record's `variant_hashes` for diffing.)
+    `variant_hashes` are gated exactly too, so a swapped program body
+    with the same bucket count still fails loudly.)
     The online record's preemption counters (`n_preemptions`, `n_resumes`,
     `deadline_misses`) are exact too: at a fixed seed the virtual-clock
     replay is deterministic, so any drift means the schedule changed.
@@ -36,6 +37,11 @@ Rules, per record matched by `config`:
     contract) and `round_bytes_moved` (the analytic single-pass byte
     model of that launch) are pure functions of static shapes: a second
     launch sneaking into the round, or an extra stream read, fails here.
+    The `gddim_alg_quality_*` records' `sw2_milli` / `n_samples`
+    (benchmarks/quality.py: per-algorithm quality vs NFE, seeded
+    lockstep sampling on the exact-score oracle) are exact at a fixed
+    platform — quality drift in a sampler algorithm is a reviewed
+    event, same as a new compile bucket.
   * a baseline config missing from the fresh run fails (a silently dropped
     row is how perf coverage rots); fresh-only configs are reported but
     pass (new rows land with their own baseline in the same PR).
@@ -53,10 +59,11 @@ from typing import Dict, List
 BOUNDED = ("recompiles_after_warmup", "rounds", "dispatches", "polls",
            "n_prefills", "bank_bytes", "bank_restack_rows")
 EXACT = ("n_requests", "n_configs", "batch", "nfe", "bank_bytes_dense",
-         "n_variants", "n_preemptions", "n_resumes", "deadline_misses",
+         "n_variants", "variant_hashes",
+         "n_preemptions", "n_resumes", "deadline_misses",
          "kernel_launches_per_round", "round_bytes_moved",
          "requests_routed", "requeues", "health_probes", "n_shed",
-         "n_replicas")
+         "n_replicas", "n_samples", "sw2_milli")
 
 
 def _records(path: str) -> Dict[str, dict]:

@@ -116,7 +116,9 @@ def build_diffusion_variants(quick: bool = False
 
     def menu(scale: int) -> List[dict]:
         kinds = [dict(nfe=nfe), dict(nfe=max(nfe // scale, 2), q=2),
-                 dict(nfe=nfe, corrector=True), dict(nfe=nfe, lam=0.5)]
+                 dict(nfe=nfe, corrector=True), dict(nfe=nfe, lam=0.5),
+                 dict(nfe=nfe, lam=0.5, algorithm="gmm"),
+                 dict(nfe=nfe, algorithm="accel")]
         if "cld" in specs:
             kinds += [dict(family="cld", nfe=nfe),
                       dict(family="cld", nfe=nfe, corrector=True)]
